@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: runtime factory (paper series names), steady-
+state timing, CSV emission."""
+from __future__ import annotations
+
+import csv
+import os
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO
+from repro.core.regc_scale import RegCScaleRuntime
+from repro.dsm.costmodel import IB_2013
+
+# paper series -> protocol
+SERIES = {
+    "pthreads": IDEAL_PROTO,
+    "samhita": FINE_PROTO,        # fine-grain consistency-region updates
+    "samhita_page": PAGE_PROTO,   # page invalidation everywhere
+}
+
+OUT_DIR = Path(os.environ.get("BENCH_OUT", "artifacts/bench"))
+
+
+def make_rt(series: str, workers: int, **kw) -> RegCScaleRuntime:
+    kw.setdefault("cost", IB_2013)
+    kw.setdefault("fetch_batch", 16)   # Samhita's bulk-fetch optimization
+    return RegCScaleRuntime(workers, protocol=SERIES[series], **kw)
+
+
+class SteadyState:
+    """Capture per-iteration modeled time, skipping the cold first iter."""
+
+    def __init__(self):
+        self.times: List[float] = []
+
+    def __call__(self, it, rt):
+        self.times.append(rt.time)
+
+    def per_iter(self) -> float:
+        assert len(self.times) >= 3, "need >= 3 iterations"
+        return (self.times[-1] - self.times[0]) / (len(self.times) - 1)
+
+
+def write_csv(name: str, rows: List[Dict]):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    fields: List[str] = []
+    for r in rows:                     # union of keys, first-seen order
+        for k in r:
+            if k not in fields:
+                fields.append(k)
+    with open(path, "w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=fields, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def print_rows(rows: List[Dict]):
+    for r in rows:
+        print(",".join(str(v) for v in r.values()), flush=True)
+    print()

@@ -1,0 +1,86 @@
+"""Jacobi — paper Figs. 5 (strong scaling + the reduction extension) and 6
+(weak scaling computation rate).
+
+Four Samhita series (the paper's): {samhita, samhita_page} x {lock,
+reduction} + the Pthreads baseline.  Speedup is relative to 1-core Pthreads
+(paper Fig. 5); weak scaling reports computation rate (stencil points/s).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import SteadyState, make_rt, print_rows, write_csv
+from repro.dsm.apps import jacobi, jacobi_flops_per_iter
+
+N_BASE = 4096
+CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def _run(series: str, mode: str, p: int, n: int, iters: int):
+    ss = SteadyState()
+    rt = make_rt(series, p)
+    jacobi(rt, n, iters, mode=mode, on_iter=ss)
+    return ss.per_iter(), rt
+
+
+def strong(iters: int):
+    rows = []
+    t_ref, _ = _run("pthreads", "reduction", 1, N_BASE, iters)
+    variants = [("pthreads", "reduction", "pthreads")] + [
+        (s, m, f"{s}_{m}")
+        for s in ("samhita", "samhita_page") for m in ("lock", "reduction")]
+    for p in CORES:
+        for series, mode, tag in variants:
+            if series == "pthreads" and p > 8:
+                continue
+            t, rt = _run(series, mode, p, N_BASE, iters)
+            rows.append({"figure": "fig5_strong", "series": tag, "p": p,
+                         "n": N_BASE, "t_iter_s": round(t, 6),
+                         "speedup": round(t_ref / t, 3),
+                         "net_bytes": rt.traffic.total_bytes,
+                         "invalidations": rt.traffic.invalidations,
+                         "diff_bytes": rt.traffic.diff_bytes})
+    return rows
+
+
+def weak(iters: int):
+    """n^2 scales with p: n = 4096 -> 65536 over p = 1 -> 256."""
+    rows = []
+    for p in CORES:
+        n = int(N_BASE * p ** 0.5)
+        n -= n % max(p, 64)                    # keep rows divisible
+        for series, mode, tag in (
+                ("pthreads", "reduction", "pthreads"),
+                ("samhita", "lock", "samhita_lock"),
+                ("samhita", "reduction", "samhita_reduction"),
+                ("samhita_page", "lock", "samhita_page_lock"),
+                ("samhita_page", "reduction", "samhita_page_reduction")):
+            if series == "pthreads" and p > 8:
+                continue
+            t, rt = _run(series, mode, p, n, iters)
+            rate = (n * n) / t
+            rows.append({"figure": "fig6_weak", "series": tag, "p": p,
+                         "n": n, "t_iter_s": round(t, 6),
+                         "Mpoints_per_s": round(rate / 1e6, 2),
+                         "net_bytes": rt.traffic.total_bytes})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--weak", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args(argv)
+    rows = []
+    if args.all or not args.weak:
+        rows += strong(args.iters)
+    if args.all or args.weak:
+        rows += weak(args.iters)
+    write_csv("jacobi", rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

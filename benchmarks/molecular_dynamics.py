@@ -1,0 +1,50 @@
+"""Molecular dynamics — paper Fig. 7 (strong-scaling speedup; the store-
+instrumentation overhead is visible on `samhita` because the O(n^2/p) force
+loop's stores are instrumented even though they're ordinary-region)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import SteadyState, make_rt, print_rows, write_csv
+from repro.dsm.apps import molecular_dynamics
+
+N_PARTICLES = 8192
+CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def _run(series: str, mode: str, p: int, n: int, iters: int):
+    ss = SteadyState()
+    rt = make_rt(series, p)
+    molecular_dynamics(rt, n, iters, mode=mode, on_iter=ss)
+    return ss.per_iter(), rt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=6)
+    ap.add_argument("--particles", type=int, default=N_PARTICLES)
+    args = ap.parse_args(argv)
+    n = args.particles
+    t_ref, _ = _run("pthreads", "reduction", 1, n, args.iters)
+    rows = []
+    for p in CORES:
+        for series, mode, tag in (
+                ("pthreads", "reduction", "pthreads"),
+                ("samhita", "lock", "samhita_lock"),
+                ("samhita", "reduction", "samhita_reduction"),
+                ("samhita_page", "lock", "samhita_page_lock"),
+                ("samhita_page", "reduction", "samhita_page_reduction")):
+            if series == "pthreads" and p > 8:
+                continue
+            t, rt = _run(series, mode, p, n, args.iters)
+            rows.append({"figure": "fig7_md", "series": tag, "p": p,
+                         "n_particles": n, "t_iter_s": round(t, 6),
+                         "speedup": round(t_ref / t, 3),
+                         "net_bytes": rt.traffic.total_bytes})
+    write_csv("molecular_dynamics", rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

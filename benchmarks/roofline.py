@@ -1,0 +1,55 @@
+"""Roofline summary benchmark: condense the dry-run artifacts into the
+per-cell three-term table (compute / memory / collective seconds, dominant
+term, MFU upper bound).  The dry-run sweep itself is launched via
+``python -m repro.launch.dryrun --all`` (512 placeholder devices); this
+reader never initializes extra devices."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import print_rows, write_csv
+
+ART = Path("artifacts/dryrun")
+
+
+def load_rows(variant: str = "baseline", mesh: str = None):
+    rows = []
+    for f in sorted(ART.glob(f"*__{variant}.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "variant": r["variant"],
+            "t_compute_ms": round(roof["t_compute_s"] * 1e3, 3),
+            "t_memory_ms": round(roof["t_memory_s"] * 1e3, 3),
+            "t_collective_ms": round(roof["t_collective_s"] * 1e3, 3),
+            "dominant": roof["dominant"],
+            "model/hlo_flops": round(roof["model_flops/hlo_flops"], 3),
+            "mfu_upper_bound": round(roof["mfu_upper_bound"], 4),
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+    rows = load_rows(args.variant, args.mesh)
+    if not rows:
+        print(f"no dry-run artifacts for variant={args.variant} "
+              f"(run: python -m repro.launch.dryrun --all --mesh both)")
+        return []
+    write_csv(f"roofline_{args.variant}", rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one section per paper figure/table plus the
+framework-level benches.  ``python -m benchmarks.run [--fast]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer iterations / skip the slowest sections")
+    args = ap.parse_args(argv)
+    iters = 4 if args.fast else 8
+
+    from benchmarks import (jacobi, molecular_dynamics, regc_training,
+                            roofline, stream_triad)
+
+    t0 = time.time()
+    print("== STREAM TRIAD (paper Figs. 2/3/4) ==", flush=True)
+    stream_triad.main(["--all", "--iters", str(iters)])
+
+    print("== Jacobi (paper Figs. 5/6) ==", flush=True)
+    jacobi.main(["--all", "--iters", str(iters)])
+
+    print("== Molecular dynamics (paper Fig. 7) ==", flush=True)
+    molecular_dynamics.main(["--iters", str(max(4, iters // 2))])
+
+    print("== RegC training-layer sync policies (DESIGN.md 2.2) ==",
+          flush=True)
+    regc_training.main([])
+
+    print("== Roofline summary (from dry-run artifacts) ==", flush=True)
+    roofline.main(["--mesh", "16x16"])
+
+    print(f"total bench time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""STREAM TRIAD — paper Figs. 2 (strong), 3 (weak), 4 (cache spill).
+
+Metric: sustained bandwidth GB/s = 3n * 4 bytes / modeled-seconds-per-iter.
+The paper runs 400 iterations with a barrier each; per-iteration traffic is
+steady after the cold start, so we run fewer and report the steady-state
+per-iteration time (asserted steady in tests/test_paper_claims.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import SERIES, SteadyState, make_rt, print_rows, write_csv
+from repro.dsm.apps import stream_triad, triad_bytes_per_iter
+
+N_BASE = 16 << 20          # paper: n = 16M doubles-worth of fp32 words
+CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def bw_gbs(n: int, t_iter: float) -> float:
+    return triad_bytes_per_iter(n) / t_iter / 1e9
+
+
+def strong(iters: int):
+    rows = []
+    for p in CORES:
+        for series in SERIES:
+            if series == "pthreads" and p > 8:
+                continue       # Pthreads exists only within one node
+            ss = SteadyState()
+            rt = make_rt(series, p)
+            stream_triad(rt, N_BASE, iters, on_iter=ss)
+            rows.append({"figure": "fig2_strong", "series": series, "p": p,
+                         "n": N_BASE, "t_iter_s": round(ss.per_iter(), 6),
+                         "bandwidth_GBs": round(bw_gbs(N_BASE, ss.per_iter()), 3),
+                         "net_bytes": rt.traffic.total_bytes})
+    return rows
+
+
+def weak(iters: int):
+    rows = []
+    for p in CORES:
+        n = N_BASE * p
+        for series in SERIES:
+            if series == "pthreads" and p > 8:
+                continue
+            ss = SteadyState()
+            rt = make_rt(series, p)
+            stream_triad(rt, n, iters, on_iter=ss)
+            rows.append({"figure": "fig3_weak", "series": series, "p": p,
+                         "n": n, "t_iter_s": round(ss.per_iter(), 6),
+                         "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
+                         "net_bytes": rt.traffic.total_bytes})
+    return rows
+
+
+def spill(iters: int):
+    """samhita only: per-worker problem 2x the local cache (Fig 4)."""
+    rows = []
+    cache_pages = 3 * (N_BASE // 1024) + 64        # fits the small problem
+    for p in CORES:
+        for scale, tag in ((1, "fits"), (2, "spills")):
+            n = N_BASE * p * scale
+            ss = SteadyState()
+            rt = make_rt("samhita", p, cache_pages=cache_pages)
+            stream_triad(rt, n, iters, on_iter=ss)
+            rows.append({"figure": "fig4_spill", "series": f"samhita_{tag}",
+                         "p": p, "n": n,
+                         "t_iter_s": round(ss.per_iter(), 6),
+                         "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
+                         "net_bytes": rt.traffic.total_bytes})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--weak", action="store_true")
+    ap.add_argument("--spill", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args(argv)
+    rows = []
+    if args.all or not (args.weak or args.spill):
+        rows += strong(args.iters)
+    if args.all or args.weak:
+        rows += weak(args.iters)
+    if args.all or args.spill:
+        rows += spill(max(4, args.iters // 2))
+    write_csv("stream_triad", rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""The paper's Jacobi application on the RegC DSM runtime — with VALUES
+(track_values=True): the solver actually converges, and the protocol's
+correctness is visible end to end.
+
+Solves the 2-D Poisson problem  -lap(u) = f  on an n x n grid with a known
+manufactured solution, partitioned across W simulated workers, residual
+accumulated through a mutex span (or the reduction extension).
+
+Run:  PYTHONPATH=src python examples/dsm_jacobi.py [--mode reduction]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import FINE_PROTO, PAGE_PROTO, RegCRuntime
+
+RES_LOCK = 0
+
+
+def run(n=32, workers=4, iters=700, mode="lock", protocol=FINE_PROTO):
+    rt = RegCRuntime(workers, page_words=256, protocol=protocol,
+                     track_values=True)
+    u = rt.alloc(n * n)
+    uold = rt.alloc(n * n)
+    fga = rt.alloc(n * n)
+    res = rt.alloc(1)
+
+    # manufactured problem: u* = sin(pi x) sin(pi y), f = 2 pi^2 u*
+    xs = np.linspace(0, 1, n)
+    uu, vv = np.meshgrid(xs, xs)
+    u_star = np.sin(np.pi * uu) * np.sin(np.pi * vv)
+    h = 1.0 / (n - 1)
+    f_np = (2 * np.pi ** 2 * u_star).astype(np.float32)
+
+    # worker 0 initializes f in the GAS (ordinary stores + barrier)
+    rt.write(0, fga, 0, n * n, f_np.ravel())
+    rt.barrier()
+
+    rows = n // workers
+    for it in range(iters):
+        # uold = u
+        for w in range(workers):
+            lo = w * rows * n
+            hi = ((w + 1) * rows if w < workers - 1 else n) * n
+            vals = rt.read(w, u, lo, hi)
+            rt.write(w, uold, lo, hi, vals)
+        rt.barrier()
+
+        # stencil + residual
+        for w in range(workers):
+            r0 = max(w * rows, 1)
+            r1 = min((w + 1) * rows if w < workers - 1 else n, n - 1)
+            lo_h, hi_h = (r0 - 1) * n, (r1 + 1) * n
+            block = np.array(rt.read(w, uold, lo_h, hi_h)).reshape(-1, n)
+            fblk = np.array(rt.read(w, fga, r0 * n, r1 * n)).reshape(-1, n)
+            new = block[1:-1].copy()
+            new[:, 1:-1] = 0.25 * (block[:-2, 1:-1] + block[2:, 1:-1]
+                                   + block[1:-1, :-2] + block[1:-1, 2:]
+                                   + h * h * fblk[:, 1:-1])
+            local_res = float(np.abs(new - block[1:-1]).sum())
+            rt.write(w, u, r0 * n, r1 * n, new.ravel())
+            if mode == "lock":
+                with rt.span(w, RES_LOCK):
+                    cur = rt.read(w, res, 0, 1)
+                    rt.write(w, res, 0, 1,
+                             np.array([float(cur[0]) + local_res], np.float32))
+            else:
+                rt.reduce(w, "residual", local_res)
+        rt.barrier()
+
+        if mode == "lock":
+            total = float(rt.read(0, res, 0, 1)[0])
+            with rt.span(0, RES_LOCK):      # reset for next iteration
+                rt.write(0, res, 0, 1, np.zeros(1, np.float32))
+        else:
+            total = rt.reduction_result("residual")
+        rt.barrier()
+        if it % 50 == 0:
+            print(f"  iter {it:4d}  residual={total:.4e}")
+
+    final = np.array(rt.read(0, u, 0, n * n)).reshape(n, n)
+    err = np.abs(final - u_star).max()
+    print(f"  final max error vs analytic solution: {err:.4f}")
+    t = rt.traffic
+    print(f"  traffic: fetched={t.fetch_bytes >> 10}KiB "
+          f"writeback={t.writeback_bytes >> 10}KiB "
+          f"diffs={t.diff_bytes}B invalidations={t.invalidations}")
+    return err
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lock", "reduction"], default="lock")
+    ap.add_argument("--protocol", choices=["fine", "page"], default="fine")
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=700,
+                    help="plain Jacobi needs O(n^2) iterations")
+    args = ap.parse_args()
+    proto = FINE_PROTO if args.protocol == "fine" else PAGE_PROTO
+    print(f"Jacobi on RegC DSM (protocol={args.protocol}, mode={args.mode})")
+    err = run(args.n, args.workers, args.iters, args.mode, proto)
+    assert err < 0.05, "solver failed to converge - protocol bug!"
+    print("converged: the RegC protocol preserved program semantics.")

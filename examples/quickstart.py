@@ -1,0 +1,75 @@
+"""Quickstart: the RegC public API in five minutes.
+
+1. The consistency model itself (spans, barriers, the two protocols).
+2. The paper's reduction extension.
+3. RegC as a training-sync policy on a real model.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FINE_PROTO, PAGE_PROTO, RegCRuntime
+from repro.configs import get_reduced
+from repro.models import model as M
+from repro.optim.adamw import init_opt_state
+from repro.train.train_step import TrainHParams, make_train_step
+
+
+def demo_consistency_model():
+    print("== 1. regional consistency: spans make critical-section stores "
+          "visible ==")
+    for proto in (FINE_PROTO, PAGE_PROTO):
+        rt = RegCRuntime(2, page_words=1024, protocol=proto,
+                         track_values=True)
+        shared = rt.alloc(4096)             # 4 pages in the global space
+
+        # worker 0 updates two words inside a critical section (a span)
+        with rt.span(0, lock_id=7):
+            rt.write(0, shared, 100, 102, np.array([3.5, 4.5], np.float32))
+
+        # worker 1 enters a span of the SAME lock -> rule 2: the update is
+        # already visible, no barrier needed
+        with rt.span(1, lock_id=7):
+            got = rt.read(1, shared, 100, 102)
+        assert np.allclose(got, [3.5, 4.5])
+
+        t = rt.traffic
+        print(f"  protocol={proto:5s}: moved {t.total_bytes:6d} bytes "
+              f"(diffs={t.diff_bytes}, whole pages={t.writeback_bytes + t.fetch_bytes})")
+    print("  -> fine ships a ~2-word diff; page moves 4 KiB pages\n")
+
+
+def demo_reduction_extension():
+    print("== 2. the reduction extension (paper V-B) ==")
+    rt = RegCRuntime(8, protocol=FINE_PROTO)
+    for w in range(8):
+        rt.reduce(w, "residual", float(w))   # replaces mutex-accumulate
+    rt.barrier()
+    print(f"  residual = {rt.reduction_result('residual')} "
+          f"(runtime log-tree, never a lock)\n")
+
+
+def demo_training_sync():
+    print("== 3. RegC as the gradient-sync policy of a trainer ==")
+    cfg = get_reduced("internlm2-1.8b")
+    params = M.init_model_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    opt = init_opt_state(params)
+    hp = TrainHParams(remat=None, ce_chunk=32, total_steps=10, warmup=1)
+    step = jax.jit(make_train_step(cfg, hp))
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    batch = {"tokens": jax.random.randint(ks[0], (2, 64), 0, cfg.vocab_size),
+             "targets": jax.random.randint(ks[1], (2, 64), 0, cfg.vocab_size)}
+    for i in range(3):
+        params, opt, m = step(params, opt, batch, jnp.asarray(i))
+        print(f"  step {i}: loss={float(m['loss']):.4f} "
+              f"grad_norm={float(m['grad_norm']):.3f}")
+    print("  (gradients = ordinary region, barrier-synced; loss/grad-norm = "
+          "consistency region, span_reduce'd)")
+
+
+if __name__ == "__main__":
+    demo_consistency_model()
+    demo_reduction_extension()
+    demo_training_sync()

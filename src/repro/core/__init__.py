@@ -1,0 +1,3 @@
+from repro.core.regc import (
+    FINE_PROTO, GasArray, IDEAL_PROTO, PAGE_PROTO, RegCRuntime, Traffic,
+)

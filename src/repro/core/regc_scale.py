@@ -1,0 +1,462 @@
+"""Vectorized RegC protocol engine for paper-scale runs (256 workers).
+
+Same protocol as ``core.regc.RegCRuntime`` — same rules, same traffic
+accounting — but metadata-only and interval-vectorized so the paper's
+figures (STREAM TRIAD / Jacobi / MD up to 256 cores, millions of pages) run
+in seconds.  ``tests/test_regc_scale.py`` cross-validates the traffic
+counters against the reference runtime on random traces.
+
+Key representation choices:
+
+* cache state is per (worker, allocation-region) *window* — a numpy array
+  over the contiguous page range of that region the worker actually touches
+  (workers in the paper's benchmarks access contiguous blocks + halos), so
+  state is O(touched), never O(n_pages x workers);
+* reads/writes are per-*interval* (vectorized over the page range), not
+  per-page Python loops;
+* span-touched pages stay in small dicts (critical sections touch few
+  pages — that is the paper's whole point).
+
+Beyond the reference runtime, this engine also models the paper's two
+store-tracking *mechanisms* (§IV):
+
+* ``fine``  (samhita): every store is instrumented with a runtime call
+  (LLVM pass) -> ``instr_s_per_word`` per stored word, in ordinary AND
+  consistency regions (the MD result: overhead visible even when almost all
+  stores are ordinary);
+* ``page``  (samhita_page): write detection via VM protection -> one
+  ``fault_s`` per (page x write-epoch), re-armed when the page is flushed.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.regc import (FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, GasArray,
+                             Traffic, _WORD)
+from repro.dsm.costmodel import CostModel, IB_2013
+
+# mechanism costs (calibration constants; provenance in EXPERIMENTS.md
+# §Paper-repro): instrumented store = call + hash-table update; write fault
+# = trap + mprotect re-arm, order ~microseconds on the paper's Harpertown.
+INSTR_S_PER_WORD = 1.5e-9
+FAULT_S = 4.0e-6
+
+
+class _Window:
+    """Windowed page state of one (worker, region)."""
+
+    __slots__ = ("region", "base", "valid", "dirty", "wprot", "touch")
+
+    def __init__(self, region: int):
+        self.region = region
+        self.base = -1
+        self.valid = np.zeros(0, bool)
+        self.dirty = np.zeros(0, bool)     # ordinary-region dirty pages
+        self.wprot = np.zeros(0, bool)     # page proto: write-protected
+        self.touch = np.zeros(0, np.int64)
+
+    def ensure(self, lo: int, hi: int):
+        if self.base < 0:
+            self.base = lo
+            n = hi - lo
+            self.valid = np.zeros(n, bool)
+            self.dirty = np.zeros(n, bool)
+            self.wprot = np.ones(n, bool)
+            self.touch = np.zeros(n, np.int64)
+            return
+        if lo < self.base:
+            pad = self.base - lo
+            self.valid = np.concatenate([np.zeros(pad, bool), self.valid])
+            self.dirty = np.concatenate([np.zeros(pad, bool), self.dirty])
+            self.wprot = np.concatenate([np.ones(pad, bool), self.wprot])
+            self.touch = np.concatenate([np.zeros(pad, np.int64), self.touch])
+            self.base = lo
+        if hi > self.base + self.valid.size:
+            pad = hi - (self.base + self.valid.size)
+            self.valid = np.concatenate([self.valid, np.zeros(pad, bool)])
+            self.dirty = np.concatenate([self.dirty, np.zeros(pad, bool)])
+            self.wprot = np.concatenate([self.wprot, np.ones(pad, bool)])
+            self.touch = np.concatenate([self.touch, np.zeros(pad, np.int64)])
+
+    def sl(self, lo: int, hi: int) -> slice:
+        return slice(lo - self.base, hi - self.base)
+
+    def intersect(self, lo: int, hi: int) -> Optional[Tuple[int, int]]:
+        if self.base < 0:
+            return None
+        lo = max(lo, self.base)
+        hi = min(hi, self.base + self.valid.size)
+        return (lo, hi) if lo < hi else None
+
+
+class _Span:
+    __slots__ = ("lock", "touched")
+
+    def __init__(self, lock):
+        self.lock = lock
+        self.touched: Dict[int, Tuple[int, int]] = {}
+
+
+class _Lock:
+    __slots__ = ("version", "notices", "last_release_time", "seen")
+
+    def __init__(self, n_workers):
+        self.version = 0
+        self.notices: List[List[Tuple[int, int, int]]] = []
+        self.last_release_time = 0.0
+        self.seen = np.zeros(n_workers, np.int64)
+
+
+class RegCScaleRuntime:
+    """Drop-in (metadata-only) scale version of RegCRuntime."""
+
+    def __init__(self, n_workers: int, *, page_words: int = 1024,
+                 protocol: str = FINE_PROTO, cost: CostModel = IB_2013,
+                 cache_pages: Optional[int] = None, prefetch: int = 1,
+                 n_mem_servers: int = 1, model_mechanism: bool = True,
+                 instr_s_per_word: float = INSTR_S_PER_WORD,
+                 fault_s: float = FAULT_S, fetch_batch: int = 1):
+        assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
+        self.W = n_workers
+        self.page_words = page_words
+        self.page_bytes = page_words * _WORD
+        self.protocol = protocol
+        self.cost = cost
+        self.cache_pages = cache_pages
+        self.prefetch = prefetch
+        self.n_mem_servers = max(1, n_mem_servers)
+        self.model_mechanism = model_mechanism
+        self.instr_s_per_word = instr_s_per_word
+        self.fault_s = fault_s
+        # Samhita's bulk-fetch optimization (paper §V-A): a miss run of k
+        # pages costs ceil(k/fetch_batch) request/reply pairs, not k.
+        # fetch_batch=1 == reference runtime accounting.
+        self.fetch_batch = max(1, fetch_batch)
+
+        self.n_pages = 0
+        self._region_starts: List[int] = []     # sorted page_lo per region
+        self._region_ends: List[int] = []
+        # windows[w][region] created lazily
+        self.windows: List[Dict[int, _Window]] = [dict() for _ in range(n_workers)]
+        self.spans: List[List[_Span]] = [[] for _ in range(n_workers)]
+        self.locks: Dict[int, _Lock] = {}
+        self.clock = np.zeros(n_workers)
+        self.traffic = Traffic()
+        self._reductions: Dict[str, List[Tuple[float, str]]] = {}
+        self._reduction_results: Dict[str, float] = {}
+        self._tick = 0
+
+    # ------------------------------------------------------------------
+    def alloc(self, n_elems: int) -> GasArray:
+        pages = -(-n_elems // self.page_words)
+        ga = GasArray(self.n_pages, n_elems, self.page_words)
+        self._region_starts.append(self.n_pages)
+        self._region_ends.append(self.n_pages + pages)
+        self.n_pages += pages
+        return ga
+
+    def _region_of(self, page: int) -> int:
+        i = bisect.bisect_right(self._region_starts, page) - 1
+        assert 0 <= i and page < self._region_ends[i], page
+        return i
+
+    def _window(self, w: int, region: int) -> _Window:
+        win = self.windows[w].get(region)
+        if win is None:
+            win = _Window(region)
+            self.windows[w][region] = win
+        return win
+
+    def _net(self, w: int, n_bytes: float, msgs: int = 1):
+        if self.protocol == IDEAL_PROTO:
+            return
+        self.clock[w] += self.cost.xfer_s(n_bytes, msgs)
+
+    def compute(self, w: int, *, flops: float = 0.0, mem_bytes: float = 0.0,
+                seconds: float = 0.0):
+        self.clock[w] += seconds + self.cost.compute_s(
+            flops, mem_bytes, self.cost.workers_on_node(self.W))
+
+    def instr_stores(self, w: int, n_words: float):
+        """Inner-loop stores to shared memory that the LLVM pass instruments
+        (e.g. MD force accumulation): charged per word under the fine
+        protocol; under the page protocol they hit already-faulted pages."""
+        if self.model_mechanism and self.protocol == FINE_PROTO:
+            self.clock[w] += n_words * self.instr_s_per_word
+
+    # ------------------------------------------------------------------
+    # interval fetch / evict
+    # ------------------------------------------------------------------
+
+    def _fetch_range(self, w: int, region: int, p_lo: int, p_hi: int):
+        """Make pages [p_lo, p_hi) valid at w, charging misses."""
+        c = self._window(w, region)
+        c.ensure(p_lo, p_hi)
+        s = c.sl(p_lo, p_hi)
+        n_miss = int((~c.valid[s]).sum())
+        self._tick += 1
+        c.touch[s] = self._tick
+        if n_miss and self.protocol != IDEAL_PROTO:
+            self.traffic.page_fetches += n_miss
+            self.traffic.fetch_bytes += n_miss * self.page_bytes
+            n_req = -(-n_miss // self.fetch_batch)
+            self._net(w, n_miss * self.page_bytes, 2 * n_req)
+        c.valid[s] = True
+        self._evict(w)
+
+    def _evict(self, w: int):
+        if self.cache_pages is None:
+            return
+        wins = list(self.windows[w].values())
+        n_valid = sum(int(c.valid.sum()) for c in wins)
+        n_over = n_valid - self.cache_pages
+        if n_over <= 0:
+            return
+        # gather (touch, window, local_idx) of all valid pages; evict oldest
+        cands = []
+        for c in wins:
+            idx = np.nonzero(c.valid)[0]
+            if idx.size:
+                cands.append((c.touch[idx], np.full(idx.size, c.region), idx))
+        touch = np.concatenate([t for t, _, _ in cands])
+        regs = np.concatenate([r for _, r, _ in cands])
+        locs = np.concatenate([i for _, _, i in cands])
+        order = np.argpartition(touch, min(n_over, touch.size - 1))[:n_over]
+        for ri, li in zip(regs[order], locs[order]):
+            c = self.windows[w][int(ri)]
+            if c.dirty[li]:      # dirty victims write back before eviction
+                self._writeback_ordinary(w, c, c.base + int(li),
+                                         c.base + int(li) + 1)
+            c.valid[li] = False
+
+    # ------------------------------------------------------------------
+    # reads / writes (interval API)
+    # ------------------------------------------------------------------
+
+    def read(self, w: int, ga: GasArray, lo: int, hi: int):
+        region = self._region_of(ga.page_lo)
+        p_lo = ga.page_lo + lo // self.page_words
+        p_hi = ga.page_lo + (max(hi - 1, lo)) // self.page_words + 1
+        arr_end = ga.page_lo + -(-ga.n_elems // self.page_words)
+        p_hi_pf = min(p_hi + self.prefetch, arr_end)   # sequential prefetch
+        self._fetch_range(w, region, p_lo, max(p_hi_pf, p_hi))
+        return None
+
+    def write(self, w: int, ga: GasArray, lo: int, hi: int, values=None):
+        region = self._region_of(ga.page_lo)
+        p_lo = ga.page_lo + lo // self.page_words
+        p_hi = ga.page_lo + (max(hi - 1, lo)) // self.page_words + 1
+        c = self._window(w, region)
+        c.ensure(p_lo, p_hi)
+        in_span = bool(self.spans[w])
+        n_words = hi - lo
+
+        # mechanism cost: instrumented stores (fine) / write faults (page)
+        if self.model_mechanism and self.protocol == FINE_PROTO:
+            self.clock[w] += n_words * self.instr_s_per_word
+        if self.model_mechanism and self.protocol == PAGE_PROTO:
+            s = c.sl(p_lo, p_hi)
+            n_faults = int(c.wprot[s].sum())
+            self.clock[w] += n_faults * self.fault_s
+            c.wprot[s] = False
+
+        # write-allocate: partial edge pages must be fetched; interior
+        # full-page writes just become valid
+        if self.protocol != IDEAL_PROTO:
+            if p_hi - p_lo == 1:
+                if n_words < self.page_words:
+                    self._fetch_range(w, region, p_lo, p_lo + 1)
+            else:
+                if lo % self.page_words != 0:
+                    self._fetch_range(w, region, p_lo, p_lo + 1)
+                if hi % self.page_words != 0 and hi < ga.n_elems:
+                    self._fetch_range(w, region, p_hi - 1, p_hi)
+                elif hi % self.page_words != 0:   # last page of the array,
+                    self._fetch_range(w, region, p_hi - 1, p_hi)  # partial
+        s = c.sl(p_lo, p_hi)
+        self._tick += 1
+        c.valid[s] = True
+        c.touch[s] = self._tick
+
+        if in_span:
+            span = self.spans[w][-1]
+            for p in range(p_lo, p_hi):
+                wlo, whi = ga.word_range_in_page(p, lo, hi)
+                old = span.touched.get(p)
+                span.touched[p] = ((min(wlo, old[0]), max(whi, old[1]))
+                                   if old else (wlo, whi))
+        else:
+            c.dirty[s] = True
+        self._evict(w)
+
+    # ------------------------------------------------------------------
+    # ordinary flush (page granularity in both protocols)
+    # ------------------------------------------------------------------
+
+    def _writeback_ordinary(self, w: int, c: _Window, p_lo: int, p_hi: int):
+        """Write back + invalidate sharers for dirty pages of window c in
+        [p_lo, p_hi)."""
+        iv = c.intersect(p_lo, p_hi)
+        if iv is None:
+            return
+        s = c.sl(*iv)
+        dirty_idx = np.nonzero(c.dirty[s])[0]
+        n_dirty = dirty_idx.size
+        if n_dirty == 0:
+            return
+        c.dirty[s] = False
+        if self.protocol == IDEAL_PROTO:
+            return
+        self.traffic.writeback_bytes += n_dirty * self.page_bytes
+        self._net(w, n_dirty * self.page_bytes,
+                  -(-n_dirty // self.fetch_batch))   # batched writeback
+        if self.model_mechanism and self.protocol == PAGE_PROTO:
+            c.wprot[s.start + dirty_idx] = True     # re-arm write protection
+        # invalidate sharers (same region windows of other workers)
+        dirty_pages_abs = iv[0] + dirty_idx
+        for v in range(self.W):
+            if v == w:
+                continue
+            cv = self.windows[v].get(c.region)
+            if cv is None:
+                continue
+            ivv = cv.intersect(iv[0], iv[1])
+            if ivv is None:
+                continue
+            mask = (dirty_pages_abs >= ivv[0]) & (dirty_pages_abs < ivv[1])
+            pages_v = dirty_pages_abs[mask] - cv.base
+            if pages_v.size == 0:
+                continue
+            shared = cv.valid[pages_v]
+            n_inv = int(shared.sum())
+            if n_inv:
+                cv.valid[pages_v[shared]] = False
+                self.traffic.invalidations += n_inv
+                self.traffic.control_msgs += n_inv
+
+    def _flush_ordinary(self, w: int):
+        for c in self.windows[w].values():
+            if c.base >= 0 and c.dirty.any():
+                self._writeback_ordinary(w, c, c.base, c.base + c.dirty.size)
+
+    # ------------------------------------------------------------------
+    # spans
+    # ------------------------------------------------------------------
+
+    def acquire(self, w: int, lock_id: int):
+        lk = self.locks.setdefault(lock_id, _Lock(self.W))
+        self._flush_ordinary(w)                     # RegC rule 1
+        self._net(w, 64, 2)
+        self.traffic.control_msgs += 2
+        self.clock[w] = max(self.clock[w], lk.last_release_time)
+        # RegC rule 2, notices coalesced per page (matches reference)
+        pending: Dict[int, Tuple[int, int]] = {}
+        for ver in range(int(lk.seen[w]), lk.version):
+            for (p, lo, hi) in lk.notices[ver]:
+                old = pending.get(p)
+                pending[p] = ((min(lo, old[0]), max(hi, old[1]))
+                              if old else (lo, hi))
+        for p, (lo, hi) in sorted(pending.items()):
+            if self.protocol == FINE_PROTO:
+                nbytes = (hi - lo) * _WORD + self.page_words // 8
+                self.traffic.diff_bytes += nbytes
+                self._net(w, nbytes, 1)
+            else:
+                c = self.windows[w].get(self._region_of(p))
+                if c is not None and c.intersect(p, p + 1) is not None \
+                        and c.valid[c.sl(p, p + 1)][0]:
+                    c.valid[c.sl(p, p + 1)] = False
+                    self.traffic.invalidations += 1
+                    if self.model_mechanism:
+                        c.wprot[c.sl(p, p + 1)] = True
+                self.traffic.control_msgs += 1
+        lk.seen[w] = lk.version
+        self.spans[w].append(_Span(lock_id))
+
+    def release(self, w: int, lock_id: int):
+        span = self.spans[w].pop()
+        assert span.lock == lock_id, "unbalanced lock release"
+        lk = self.locks[lock_id]
+        notices = []
+        for p, (lo, hi) in sorted(span.touched.items()):
+            if self.protocol == IDEAL_PROTO:
+                continue
+            if self.protocol == FINE_PROTO:
+                nbytes = (hi - lo) * _WORD + self.page_words // 8
+                self.traffic.diff_bytes += nbytes
+            else:
+                nbytes = self.page_bytes
+                self.traffic.writeback_bytes += nbytes
+            self._net(w, nbytes, 1)
+            notices.append((p, lo, hi))
+        if self.protocol != IDEAL_PROTO:
+            lk.notices.append(notices)
+            lk.version += 1
+            lk.seen[w] = lk.version
+        self._net(w, 64, 1)
+        self.traffic.control_msgs += 1
+        lk.last_release_time = self.clock[w]
+
+    class _SpanCtx:
+        def __init__(self, rt, w, lock_id):
+            self.rt, self.w, self.lock_id = rt, w, lock_id
+
+        def __enter__(self):
+            self.rt.acquire(self.w, self.lock_id)
+
+        def __exit__(self, *exc):
+            self.rt.release(self.w, self.lock_id)
+            return False
+
+    def span(self, w: int, lock_id: int):
+        return self._SpanCtx(self, w, lock_id)
+
+    # ------------------------------------------------------------------
+    def reduce(self, w: int, name: str, value: float, op: str = "sum"):
+        self._reductions.setdefault(name, []).append((float(value), op))
+
+    def reduction_result(self, name: str) -> float:
+        return self._reduction_results[name]
+
+    def barrier(self):
+        for w in range(self.W):
+            self._flush_ordinary(w)
+        if self.protocol != IDEAL_PROTO:
+            for lk in self.locks.values():
+                for w in range(self.W):
+                    pending: Dict[int, Tuple[int, int]] = {}
+                    for ver in range(int(lk.seen[w]), lk.version):
+                        for (p, lo, hi) in lk.notices[ver]:
+                            old = pending.get(p)
+                            pending[p] = ((min(lo, old[0]), max(hi, old[1]))
+                                          if old else (lo, hi))
+                    for p, (lo, hi) in sorted(pending.items()):
+                        c = self.windows[w].get(self._region_of(p))
+                        if c is None or c.intersect(p, p + 1) is None \
+                                or not c.valid[c.sl(p, p + 1)][0]:
+                            continue
+                        if self.protocol == FINE_PROTO:
+                            self.traffic.diff_bytes += (hi - lo) * _WORD
+                        else:
+                            c.valid[c.sl(p, p + 1)] = False
+                            self.traffic.invalidations += 1
+                    lk.seen[w] = lk.version
+        log_w = max(1, int(np.ceil(np.log2(max(self.W, 2)))))
+        for name, contribs in self._reductions.items():
+            vals = [v for v, _ in contribs]
+            op = contribs[0][1]
+            fn = {"sum": np.sum, "max": np.max, "min": np.min}[op]
+            self._reduction_results[name] = float(fn(vals))
+            self.traffic.reduction_msgs += self.W - 1
+        self._reductions.clear()
+        t = float(self.clock.max()) + self.cost.net_latency_s * log_w * (
+            0 if self.protocol == IDEAL_PROTO else 1) + 1e-7 * log_w
+        self.clock[:] = t
+
+    @property
+    def time(self) -> float:
+        return float(self.clock.max())

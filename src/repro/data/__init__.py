@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataConfig, Prefetcher, make_pipeline
+from repro.data.sources import MemmapTokens, SyntheticTokens, write_token_file
+
+__all__ = ["DataConfig", "Prefetcher", "make_pipeline", "MemmapTokens",
+           "SyntheticTokens", "write_token_file"]

@@ -1,0 +1,194 @@
+"""The paper's three applications, ported onto the RegC runtime API.
+
+These are the Samhita programs of §V — STREAM TRIAD, Jacobi (OmpSCR), and
+molecular dynamics (OmpSCR) — expressed as phase-structured SPMD over a
+RegC runtime (reference or scale engine; both expose the same API).
+
+Each app takes ``mode``:
+* ``lock``       — global accumulators protected by a mutex (consistency
+  region), exactly the paper's threaded port;
+* ``reduction``  — the paper's §V-B programming-model extension:
+  ``rt.reduce`` replaces the mutex-accumulate pattern.
+
+Compute costs are charged via ``rt.compute`` from per-phase flop/byte
+counts (the runtime's node model turns them into time); ALL protocol
+traffic is exact.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+RES_LOCK = 0
+ENERGY_LOCK = 1
+
+
+# ---------------------------------------------------------------------------
+# STREAM TRIAD (paper §V-A, Figs. 2-4)
+# ---------------------------------------------------------------------------
+
+
+def stream_triad(rt, n: int, iters: int, *,
+                 on_iter: Optional[Callable] = None):
+    """A = B + alpha*C, one barrier per iteration (400 in the paper)."""
+    A, B, C = rt.alloc(n), rt.alloc(n), rt.alloc(n)
+    W = rt.W
+    chunk = n // W
+    for it in range(iters):
+        for w in range(W):
+            lo = w * chunk
+            hi = (w + 1) * chunk if w < W - 1 else n
+            rt.read(w, B, lo, hi)
+            rt.read(w, C, lo, hi)
+            rt.write(w, A, lo, hi)
+            rt.compute(w, flops=2.0 * (hi - lo),
+                       mem_bytes=3.0 * 4 * (hi - lo))
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt
+
+
+def triad_bytes_per_iter(n: int) -> float:
+    return 3.0 * 4 * n
+
+
+# ---------------------------------------------------------------------------
+# Jacobi iterative solver (paper §V-B, Figs. 5-6; OmpSCR c_jacobi01)
+# ---------------------------------------------------------------------------
+
+
+def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
+           on_iter: Optional[Callable] = None):
+    """5-point stencil on an n x n grid; per-iteration global residual.
+
+    Phases per iteration (3 barriers, as in the paper):
+      1. uold = u                  (ordinary stores, own block)
+      2. u = stencil(uold, f); local residual; global accumulate
+         (consistency region in 'lock' mode / runtime reduction otherwise)
+      3. all workers read the residual (convergence test)
+    """
+    assert mode in ("lock", "reduction")
+    W = rt.W
+    u = rt.alloc(n * n)
+    uold = rt.alloc(n * n)
+    f = rt.alloc(n * n)
+    res = rt.alloc(1)          # global residual accumulator (one word)
+    rows = n // W
+
+    for it in range(iters):
+        # phase 1: copy own block u -> uold
+        for w in range(W):
+            lo, hi = w * rows * n, ((w + 1) * rows if w < W - 1 else n) * n
+            rt.read(w, u, lo, hi)
+            rt.write(w, uold, lo, hi)
+            rt.compute(w, mem_bytes=2.0 * 4 * (hi - lo))
+        rt.barrier()
+
+        # phase 2: stencil + residual
+        for w in range(W):
+            r0 = w * rows
+            r1 = (w + 1) * rows if w < W - 1 else n
+            lo_h = max(r0 - 1, 0) * n            # halo rows from neighbours
+            hi_h = min(r1 + 1, n) * n
+            rt.read(w, uold, lo_h, hi_h)
+            rt.read(w, f, r0 * n, r1 * n)
+            rt.write(w, u, r0 * n, r1 * n)
+            pts = (r1 - r0) * n
+            # OmpSCR stencil: ~13 adds/muls + one fp DIVISION per point
+            # (the residual normalization) — ~50 flop-equivalents scalar
+            rt.compute(w, flops=50.0 * pts, mem_bytes=4.0 * 4 * pts)
+            if mode == "lock":
+                with rt.span(w, RES_LOCK):
+                    rt.read(w, res, 0, 1)
+                    rt.write(w, res, 0, 1)
+            else:
+                rt.reduce(w, "residual", 1.0)
+        rt.barrier()
+
+        # phase 3: convergence test — everyone reads the residual
+        for w in range(W):
+            if mode == "lock":
+                rt.read(w, res, 0, 1)
+            else:
+                pass                              # reduction result is local
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt
+
+
+def jacobi_flops_per_iter(n: int) -> float:
+    return 50.0 * n * n
+
+
+# ---------------------------------------------------------------------------
+# Molecular dynamics (paper §V-C, Fig. 7; OmpSCR c_md)
+# ---------------------------------------------------------------------------
+
+
+def molecular_dynamics(rt, n_particles: int, iters: int, *,
+                       mode: str = "lock", ndim: int = 3,
+                       on_iter: Optional[Callable] = None):
+    """Velocity-Verlet n-body with a central pair potential.
+
+    Phase A (forces): every worker reads ALL positions, writes the force
+    rows of its own particles, and accumulates potential+kinetic energy
+    into globals (mutex / reduction).  O(n^2/W) interactions per worker.
+    Phase B (update): positions/velocities/accelerations of own particles.
+    """
+    assert mode in ("lock", "reduction")
+    W = rt.W
+    nw = n_particles * ndim
+    pos = rt.alloc(nw)
+    vel = rt.alloc(nw)
+    acc = rt.alloc(nw)
+    force = rt.alloc(nw)
+    energy = rt.alloc(2)       # [potential, kinetic]
+    chunk = n_particles // W
+
+    for it in range(iters):
+        # phase A: forces + energies
+        for w in range(W):
+            p0 = w * chunk
+            p1 = (w + 1) * chunk if w < W - 1 else n_particles
+            rt.read(w, pos, 0, nw)                    # all positions
+            rt.read(w, vel, p0 * ndim, p1 * ndim)     # own velocities (KE)
+            rt.write(w, force, p0 * ndim, p1 * ndim)
+            inter = (p1 - p0) * n_particles
+            # ~18 flops + sqrt + pow per pair (OmpSCR central potential):
+            # ~60 flop-equivalents scalar
+            rt.compute(w, flops=60.0 * inter,
+                       mem_bytes=4.0 * (nw + 2 * (p1 - p0) * ndim))
+            # the pair loop accumulates the 3-vector force per pair —
+            # instrumented stores under `fine` (the paper's §V-C overhead)
+            rt.instr_stores(w, 3.0 * inter)
+            if mode == "lock":
+                with rt.span(w, ENERGY_LOCK):
+                    rt.read(w, energy, 0, 2)
+                    rt.write(w, energy, 0, 2)
+            else:
+                rt.reduce(w, "potential", 1.0)
+                rt.reduce(w, "kinetic", 1.0)
+        rt.barrier()
+
+        # phase B: velocity-Verlet update of own particles
+        for w in range(W):
+            p0, p1 = w * chunk * ndim, ((w + 1) * chunk if w < W - 1
+                                        else n_particles) * ndim
+            rt.read(w, pos, p0, p1)
+            rt.read(w, vel, p0, p1)
+            rt.read(w, acc, p0, p1)
+            rt.read(w, force, p0, p1)
+            rt.write(w, pos, p0, p1)
+            rt.write(w, vel, p0, p1)
+            rt.write(w, acc, p0, p1)
+            rt.compute(w, flops=12.0 * (p1 - p0),
+                       mem_bytes=7.0 * 4 * (p1 - p0))
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt
+
+
+def md_flops_per_iter(n_particles: int) -> float:
+    return 60.0 * n_particles * n_particles

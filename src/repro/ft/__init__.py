@@ -1,0 +1,6 @@
+from repro.ft.runtime import (
+    ElasticPlan, FailureInjector, StragglerMonitor, WorkerFailure,
+)
+
+__all__ = ["ElasticPlan", "FailureInjector", "StragglerMonitor",
+           "WorkerFailure"]

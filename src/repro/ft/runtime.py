@@ -1,0 +1,132 @@
+"""Fault-tolerance runtime: failure injection, straggler detection, elastic
+rescale planning.
+
+On a real multi-pod deployment these hooks attach to the control plane
+(jax.distributed heartbeats / GCP maintenance events); in this container
+failures are *injected* so the recovery paths are exercised end-to-end by
+tests: Trainer catches ``WorkerFailure``, restores the last committed
+checkpoint (possibly onto a smaller/larger mesh — the checkpoint reshards),
+jumps the data pipeline to the restored step, and continues.
+
+Straggler mitigation is the scale-out analogue of the paper's observation
+that one slow worker serializes every barrier (RegC rule 3 makes *all*
+workers wait): we track per-step wall time, flag outliers against a robust
+baseline (median + k*MAD over a sliding window), and the launcher's policy
+replaces/bypasses the slow host at the next checkpoint boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated loss of a worker/host (network partition, preemption)."""
+
+    def __init__(self, step: int, worker: int = 0, kind: str = "preemption"):
+        super().__init__(f"worker {worker} failed at step {step} ({kind})")
+        self.step, self.worker, self.kind = step, worker, kind
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise WorkerFailure at configured steps (each fires once)."""
+
+    at_steps: Sequence[int] = ()
+    kind: str = "preemption"
+
+    def __post_init__(self):
+        self._pending = set(self.at_steps)
+
+    def check(self, step: int, worker: int = 0):
+        if step in self._pending:
+            self._pending.discard(step)
+            raise WorkerFailure(step, worker, self.kind)
+
+
+class StragglerMonitor:
+    """Sliding-window robust outlier detection on per-step durations.
+
+    ``observe`` returns the list of flagged worker ids (empty when healthy).
+    Detection: duration > median + k * MAD (and > abs_floor) over the last
+    ``window`` steps, requiring ``patience`` consecutive flags before a
+    worker is reported — a single GC pause is not a straggler.
+    """
+
+    def __init__(self, n_workers: int = 1, *, window: int = 32,
+                 k: float = 4.0, abs_floor_s: float = 1e-4,
+                 patience: int = 3):
+        self.n = n_workers
+        self.window = window
+        self.k = k
+        self.abs_floor = abs_floor_s
+        self.patience = patience
+        self._hist: List[deque] = [deque(maxlen=window) for _ in range(n_workers)]
+        self._streak = [0] * n_workers
+        self.flagged_total = 0
+
+    @staticmethod
+    def _median(xs: List[float]) -> float:
+        s = sorted(xs)
+        m = len(s) // 2
+        return s[m] if len(s) % 2 else 0.5 * (s[m - 1] + s[m])
+
+    def observe(self, durations_s: Sequence[float]) -> List[int]:
+        assert len(durations_s) == self.n
+        for w, d in enumerate(durations_s):
+            self._hist[w].append(float(d))
+        pool = [d for h in self._hist for d in h]
+        if len(pool) < max(8, self.n * 2):
+            return []
+        med = self._median(pool)
+        mad = self._median([abs(d - med) for d in pool]) or 1e-12
+        out = []
+        for w, d in enumerate(durations_s):
+            slow = d > med + self.k * mad and d > self.abs_floor
+            self._streak[w] = self._streak[w] + 1 if slow else 0
+            if self._streak[w] >= self.patience:
+                out.append(w)
+        self.flagged_total += len(out)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """A rescale decision: new data-parallel world and per-rank batch.
+
+    The global batch is preserved exactly when divisible; otherwise it is
+    rounded DOWN to a multiple of the new world (recorded in
+    ``dropped_samples`` — optimizer scale stays correct because gradients
+    are averaged, not summed)."""
+
+    old_world: int
+    new_world: int
+    global_batch: int
+
+    @property
+    def new_global_batch(self) -> int:
+        return (self.global_batch // self.new_world) * self.new_world
+
+    @property
+    def dropped_samples(self) -> int:
+        return self.global_batch - self.new_global_batch
+
+    @property
+    def local_batch(self) -> int:
+        return self.new_global_batch // self.new_world
+
+    def describe(self) -> str:
+        return (f"rescale {self.old_world}->{self.new_world} workers, "
+                f"global_batch {self.global_batch}->{self.new_global_batch} "
+                f"(local {self.local_batch})")
+
+
+def plan_rescale(old_world: int, failed: Sequence[int], global_batch: int,
+                 *, spares: int = 0) -> ElasticPlan:
+    """Shrink (or refill from spares) after failures."""
+    new_world = old_world - len(set(failed)) + spares
+    assert new_world >= 1, "no workers left"
+    return ElasticPlan(old_world, new_world, global_batch)

@@ -1,0 +1,1 @@
+from repro.kernels.ops import diff_apply, diff_encode, flash_attention, ssd_chunk

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# page_diff
+# ---------------------------------------------------------------------------
+
+
+def diff_encode_ref(curr, twin):
+    changed = jax.lax.bitcast_convert_type(curr, jnp.int32) != \
+        jax.lax.bitcast_convert_type(twin, jnp.int32)   # memcmp semantics
+    mask = changed.astype(jnp.int8)
+    vals = jnp.where(changed, curr, 0.0)
+    count = jnp.sum(changed, axis=1).astype(jnp.int32)
+    return mask, vals, count
+
+
+def diff_apply_ref(dst, mask, vals):
+    return jnp.where(mask != 0, vals, dst)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, *, scale=None, causal=True, window=None,
+                        softcap=None):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_chunk
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunk_ref(x, dt, cum, B_, C_):
+    """Shapes as in kernels.ssd_chunk."""
+    xf = x.astype(jnp.float32)
+    dtf = dt[..., 0].astype(jnp.float32)       # (M, Q)
+    cumf = cum[..., 0].astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+    M, Q, P = x.shape
+    cb = jnp.einsum("mqn,mkn->mqk", Cf, Bf)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    delta = jnp.where(causal[None], cumf[:, :, None] - cumf[:, None, :],
+                      -jnp.inf)   # mask BEFORE exp (off-causal overflows)
+    scores = cb * jnp.exp(delta) * dtf[:, None, :]
+    y = jnp.einsum("mqk,mkp->mqp", scores, xf)
+    w_in = jnp.exp(cumf[:, -1:] - cumf) * dtf   # (M, Q)
+    state = jnp.einsum("mq,mqp,mqn->mpn", w_in, xf, Bf)
+    return y, state

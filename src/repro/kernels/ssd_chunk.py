@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the Mamba-2 SSD *intra-chunk* block (the quadratic,
+MXU-friendly part of the chunked SSD algorithm; arXiv:2405.21060 §6).
+
+For one (batch, head, chunk) grid cell with chunk length Q, head dim P,
+state dim N:
+
+  scores_ij = (C_i . B_j) * exp(cum_i - cum_j) * dt_j   (j <= i)
+  y_intra_i = sum_j scores_ij x_j
+  state     = sum_j exp(cum_last - cum_j) * dt_j * (B_j (x) x_j)   # (P, N)
+
+The inter-chunk recurrence (combining per-chunk states) is O(S/Q) sequential
+and stays in XLA (`lax.scan`) — it is latency-, not compute-bound.  VMEM per
+cell at (Q=256, P=64, N=128) fp32: x 64KB + B/C 128KB each + scores 256KB +
+outputs ~96KB — comfortably under the ~16MB VMEM budget, MXU dims all
+multiples of the 128 lane width (Q, N) or the 8 sublane width (P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)
+    cum = cum_ref[0].astype(jnp.float32)      # (Q, 1)
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+    Q = x.shape[0]
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    causal = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask BEFORE exp: off-causal cum_i - cum_j > 0 would overflow to inf
+    delta = jnp.where(causal, cum - cum.reshape(1, Q), -jnp.inf)
+    decay = jnp.exp(delta)                                        # 0 off-causal
+    scores = cb * decay * dt.reshape(1, Q)
+    y_ref[0] = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)   # (Q, P)
+
+    w_in = jnp.exp(cum[Q - 1] - cum) * dt                          # (Q, 1)
+    st_ref[0] = jax.lax.dot_general(
+        x * w_in, B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(st_ref.dtype)  # (P, N)
+
+
+def ssd_chunk(x, dt, cum, B_, C_, *, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    x:   (M, Q, P)  — M = batch*heads*chunks flattened grid dim
+    dt:  (M, Q, 1)  (discretized, >0)
+    cum: (M, Q, 1)  (within-chunk cumsum of dt*A)
+    B_:  (M, Q, N), C_: (M, Q, N)
+    Returns y (M, Q, P) f32, state (M, P, N) f32.
+    """
+    M, Q, P = x.shape
+    N = B_.shape[-1]
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((M, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, cum, B_, C_)

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.  Single pod: 16x16 = 256 chips (v5e pod), axes
+("data", "model").  Multi-pod: 2x16x16 = 512 chips, axes
+("pod", "data", "model") — the "pod" axis is the DCN/inter-pod dimension.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1) if len(axes) == 2 else (n,)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per chip per direction)

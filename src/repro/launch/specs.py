@@ -1,0 +1,192 @@
+"""Dry-run lowering targets: ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) plus the matching
+``in_shardings`` trees for every (arch x shape x mesh) cell."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.sharding import (
+    DEFAULT_RULES, LONG_CONTEXT_RULES, SERVE_RULES, SMALL_MODEL_RULES,
+    SMALL_SERVE_RULES, ShardingCtx, param_shardings,
+)
+
+# d_model at or below this: TP all-reduce (O(B*S*d) per layer) outweighs its
+# O(d^2) flops share; spend the model axis on DP instead (see SMALL_*_RULES)
+SMALL_D_MODEL = 3072
+from repro.serve.decode import make_prefill_step, make_serve_step
+from repro.train.train_step import TrainHParams, make_train_step
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, rules_override=None):
+    if rules_override is not None:
+        return rules_override
+    # MoE keeps DEFAULT even at small d_model: the expert dim is where the
+    # parallelism lives; SMALL rules would replicate the expert weights.
+    small = cfg.d_model <= SMALL_D_MODEL and cfg.moe is None
+    if shape.kind == "train":
+        return SMALL_MODEL_RULES if small else DEFAULT_RULES
+    if shape.name == "long_500k":
+        return LONG_CONTEXT_RULES
+    return SMALL_SERVE_RULES if small else SERVE_RULES
+
+
+def make_ctx(mesh, cfg: ModelConfig, shape: ShapeConfig,
+             rules_override=None, **ctx_opts) -> ShardingCtx:
+    return ShardingCtx(mesh=mesh, rules=rules_for(cfg, shape, rules_override),
+                       **ctx_opts)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardingCtx,
+                *, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct tree, NamedSharding tree) for the input batch."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    specs, shards = {}, {}
+    if cfg.input_mode == "embeds":
+        specs["embeds"] = _sds((B, S, cfg.d_model), dtype)
+        shards["embeds"] = ctx.sharding_for((B, S, cfg.d_model),
+                                            ("batch", "seq", "embed"))
+    else:
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        shards["tokens"] = ctx.sharding_for((B, S), ("batch", "seq"))
+    if shape.kind == "train":
+        specs["targets"] = _sds((B, S), jnp.int32)
+        shards["targets"] = ctx.sharding_for((B, S), ("batch", "seq"))
+    if cfg.mrope:
+        specs["positions"] = _sds((3, B, S), jnp.int32)
+        shards["positions"] = ctx.sharding_for((3, B, S),
+                                               (None, "batch", "seq"))
+    return specs, shards
+
+
+def cache_specs(cfg: ModelConfig, B: int, max_len: int, ctx: ShardingCtx,
+                dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        functools.partial(M.init_caches, cfg, B, max_len, dtype))
+    axes = M.cache_logical_axes(cfg)
+    specs, shards = [], []
+    for pos_shapes, pos_axes in zip(shapes, axes):
+        specs.append(tuple(_sds(s.shape, s.dtype) for s in pos_shapes))
+        shards.append(tuple(
+            ctx.sharding_for(s.shape, a) for s, a in zip(pos_shapes, pos_axes)))
+    return specs, shards
+
+
+def opt_specs(param_spec_tree, ctx: ShardingCtx, opt_impl: str = "adamw"):
+    is_spec = lambda x: hasattr(x, "axes") and hasattr(x, "init")
+    if opt_impl == "adamw8bit":
+        from repro.optim.quantized import scale_shape
+
+        def leaf_spec(s):
+            return {
+                "m_q": _sds(s.shape, jnp.int8),
+                "m_s": _sds(scale_shape(s.shape), jnp.float32),
+                "v_q": _sds(s.shape, jnp.int8),
+                "v_s": _sds(scale_shape(s.shape), jnp.float32),
+            }
+
+        def leaf_shard(s):
+            q = ctx.sharding_for(s.shape, s.axes)
+            # scales share the param's axes; the reduced last dim falls back
+            # to replication automatically when no longer divisible
+            sshape = scale_shape(s.shape)
+            saxes = (s.axes if len(sshape) == len(s.shape)
+                     else s.axes + (None,))[: len(sshape)]
+            sc = ctx.sharding_for(sshape, saxes)
+            return {"m_q": q, "m_s": sc, "v_q": q, "v_s": sc}
+
+        return (jax.tree.map(leaf_spec, param_spec_tree, is_leaf=is_spec),
+                jax.tree.map(leaf_shard, param_spec_tree, is_leaf=is_spec))
+    m = jax.tree.map(lambda s: _sds(s.shape, jnp.float32), param_spec_tree,
+                     is_leaf=is_spec)
+    sh = param_shardings(param_spec_tree, ctx)
+    return {"m": m, "v": m}, {"m": sh, "v": sh}
+
+
+def lower_target(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                 hp: Optional[TrainHParams] = None, param_dtype=jnp.bfloat16,
+                 rules_override=None, **ctx_opts):
+    """Returns (fn, args, in_shardings) ready for
+    ``jax.jit(fn, in_shardings=...).lower(*args)``."""
+    ctx = make_ctx(mesh, cfg, shape, rules_override, **ctx_opts)
+    spec_tree = M.param_specs(cfg)
+    params = M.abstract_model_params(cfg, param_dtype)
+    p_shard = param_shardings(spec_tree, ctx)
+    repl = NamedSharding(mesh, P())
+    b_specs, b_shards = batch_specs(cfg, shape, ctx, dtype=param_dtype)
+
+    if shape.kind == "train":
+        # baseline: full remat — every cell must FIT 16GB v5e HBM first;
+        # relaxing remat is a hillclimb lever where memory headroom exists
+        hp = hp or TrainHParams(remat="full", ce_chunk=1024)
+        fn = make_train_step(cfg, hp, ctx)
+        o_specs, o_shards = opt_specs(spec_tree, ctx, hp.opt_impl)
+        args = (params, o_specs, b_specs, _sds((), jnp.int32))
+        shards = (p_shard, o_shards, b_shards, repl)
+        return fn, args, shards, (0, 1)      # donate params + opt state
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, ctx, max_len=shape.seq_len)
+        return fn, (params, b_specs), (p_shard, b_shards), ()
+
+    # decode: one new token against a full cache of seq_len
+    c_specs, c_shards = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                    ctx, dtype=param_dtype)
+    fn = make_serve_step(cfg, ctx)
+    args = (params, b_specs, c_specs, _sds((), jnp.int32))
+    shards = (p_shard, b_shards, c_shards, repl)
+    return fn, args, shards, (2,)            # donate the KV/SSM caches
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (roofline numerator sanity)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D (+ attention
+    cache reads) for inference steps."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * D
+        attn = 0.0
+        n_attn = sum(1 for s in cfg.pattern if s.kind == "attn")
+        n_attn_layers = n_attn * cfg.n_superblocks
+        for spec in cfg.pattern:
+            if spec.kind != "attn":
+                continue
+            ctx_len = min(cfg.window or shape.seq_len, shape.seq_len) \
+                if spec.attn_type == "local" else shape.seq_len
+            # fwd 2*2*B*S*ctx*Hq*D ; bwd ~2x
+            attn += 3 * 2 * 2 * shape.global_batch * shape.seq_len * ctx_len \
+                * cfg.n_heads * cfg.head_dim * 0.5 * cfg.n_superblocks
+        return base + attn
+    D = shape.global_batch  # one token per sequence
+    base = 2.0 * n_active * D
+    for spec in cfg.pattern:
+        if spec.kind != "attn":
+            continue
+        ctx_len = min(cfg.window or shape.seq_len, shape.seq_len) \
+            if spec.attn_type == "local" else shape.seq_len
+        if shape.kind == "prefill":
+            base += 2 * 2 * shape.global_batch * shape.seq_len * ctx_len * \
+                cfg.n_heads * cfg.head_dim * 0.5 * cfg.n_superblocks
+        else:
+            base += 2 * 2 * shape.global_batch * ctx_len * cfg.n_heads * \
+                cfg.head_dim * cfg.n_superblocks
+    if shape.kind == "prefill":
+        base = 2.0 * n_active * shape.global_batch * shape.seq_len + base \
+            - 2.0 * n_active * shape.global_batch
+    return base

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+Two modes:
+
+* default     — run a REDUCED config of ``--arch`` end-to-end on the local
+  device(s): real data pipeline, checkpointing, restart.  This is what runs
+  in this container and in CI.
+* --dry-run   — delegate to launch.dryrun for the production mesh (512
+  placeholder devices); never allocates.
+
+On a real cluster this script is invoked once per host under
+``jax.distributed.initialize()`` (SPMD: every host runs the same program);
+the mesh spans all pods and the data pipeline shards by
+``jax.process_index()``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser(description="repro trainer")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--path", choices=["gspmd", "regc"], default="gspmd")
+    ap.add_argument("--sync-granularity", choices=["object", "bucket"],
+                    default="bucket")
+    ap.add_argument("--sync-compression", choices=["none", "int8_ring"],
+                    default="none")
+    ap.add_argument("--ckpt-dir", default="ckpts")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", choices=["synthetic", "memmap"],
+                    default="synthetic")
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the FULL assigned config (cluster only)")
+    ap.add_argument("--reduced-periods", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_reduced
+    from repro.data import DataConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.regc_sync.policies import RegCSyncPolicy
+    from repro.train.train_step import TrainHParams
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = (get_config(args.arch) if args.full_config
+           else get_reduced(args.arch, n_periods=args.reduced_periods))
+    sync = RegCSyncPolicy(
+        ordinary_sync="lazy", granularity=args.sync_granularity,
+        compression=None if args.sync_compression == "none" else
+        args.sync_compression)
+    hp = TrainHParams(lr=args.lr, warmup=max(1, args.steps // 20),
+                      total_steps=args.steps, n_micro=args.n_micro,
+                      remat=args.remat, ce_chunk=min(1024, args.seq_len),
+                      sync=sync)
+    tc = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, path=args.path)
+    data = DataConfig(kind=args.data, vocab_size=cfg.vocab_size,
+                      seq_len=args.seq_len, global_batch=args.global_batch,
+                      path=args.data_path)
+    mesh = None
+    if args.path == "regc":
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    trainer = Trainer(cfg, hp, tc, data, mesh=mesh)
+    out = trainer.run()
+    print(f"done: step={out['step']} final_loss={out['history'][-1]['loss']:.4f} "
+          f"restarts={out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,540 @@
+"""Model layers: RMSNorm, RoPE/M-RoPE, GQA attention (blocked online-softmax
+for train/prefill, fused single-token path for decode), SwiGLU/GeGLU MLP and
+gather-based top-k MoE dispatch.
+
+Attention notes
+---------------
+``blocked_attention`` is the pure-XLA flash-attention analogue: a double
+``lax.scan`` over (q-block, kv-block) tiles with online-softmax accumulators.
+Memory is O(block^2) instead of O(S^2) so 32k prefill lowers without
+materializing score matrices.  Causal masking is applied inside the tile;
+fully-masked tiles still burn FLOPs in HLO — this shows up explicitly in the
+roofline's MODEL_FLOPS/HLO_FLOPS ratio and is one of the hillclimb levers
+(the Pallas kernel in ``repro.kernels.flash_attention`` skips them on TPU).
+Local (sliding-window) layers dynamic-slice a window of K/V per q-block, so
+window attention is sub-quadratic in HLO FLOPs too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.sharding import ShardingCtx, constrain
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + multimodal 3D)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _apply_rot(x, cos, sin):
+    # x: (..., D); cos/sin broadcastable (..., D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    inv = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv       # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x, cos, sin)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Qwen2-VL style (t, h, w) split of the D/2 frequency dims.
+
+    head_dim=128 -> (16, 24, 24), matching the published mrope_section."""
+    half = head_dim // 2
+    t = head_dim // 8
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x, positions_thw, theta: float):
+    """x: (B, S, H, D); positions_thw: (3, B, S) int32 (temporal/height/width)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                 # (D/2,)
+    secs = mrope_sections(d)
+    ang_all = positions_thw[..., None].astype(jnp.float32) * inv  # (3, B, S, D/2)
+    pieces, start = [], 0
+    for i, s in enumerate(secs):
+        pieces.append(ang_all[i, :, :, start:start + s])
+        start += s
+    ang = jnp.concatenate(pieces, axis=-1)                     # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _softcap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def repeat_kv(k, n_rep: int):
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D).  Under TP this is a device-
+    local gather (each shard of the repeated 'heads' dim reads one kv head);
+    XLA fuses it into the attention dots, so no HBM blow-up on TPU."""
+    if n_rep == 1:
+        return k
+    B, S, Hkv, D = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (B, S, Hkv, n_rep, D)
+    ).reshape(B, S, Hkv * n_rep, D)
+
+
+def blocked_attention(
+    q, k, v,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+):
+    """Online-softmax tiled attention (MHA layout; repeat_kv applied by the
+    caller so the 'heads' dim TP-shards directly).
+
+    q, k, v: (B, S, H, D).  Returns (B, S, H, D).
+    """
+    B, S, H, D = q.shape
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    assert S % q_block == 0 and S % kv_block == 0
+    nq, nk = S // q_block, S // kv_block
+
+    # (nq, B, qb, H, D) — scan over leading dim.
+    qs = q.reshape(B, nq, q_block, H, D).transpose(1, 0, 2, 3, 4)
+
+    if window is not None:
+        # local layers: slice a static-size window of K/V per q block
+        win_len = min(S, -(-(window + q_block) // kv_block) * kv_block)
+
+    def q_step(_, qi_qblk):
+        qi, q_blk = qi_qblk  # q_blk: (B, qb, H, D)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        if window is None:
+            k_use, v_use, k_start = k, v, 0
+            nk_use = nk
+        else:
+            start = jnp.clip(qi * q_block + q_block - win_len, 0, S - win_len)
+            k_use = lax.dynamic_slice_in_dim(k, start, win_len, axis=1)
+            v_use = lax.dynamic_slice_in_dim(v, start, win_len, axis=1)
+            k_start = start
+            nk_use = win_len // kv_block
+
+        ks = k_use.reshape(B, nk_use, kv_block, H, D).transpose(1, 0, 2, 3, 4)
+        vs = v_use.reshape(B, nk_use, kv_block, H, D).transpose(1, 0, 2, 3, 4)
+
+        m0 = jnp.full((B, H, q_block), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        o0 = jnp.zeros((B, H, q_block, D), jnp.float32)
+
+        def kv_step(carry, ki_kv):
+            m, l_, o = carry
+            ki, k_blk, v_blk = ki_kv
+            k_pos = k_start + ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = _softcap(s, softcap)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask, s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l_ * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            o_new = o * alpha[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        (m, l_, o), _ = lax.scan(
+            kv_step, (m0, l0, o0), (jnp.arange(nk_use), ks, vs)
+        )
+        o = o / jnp.maximum(l_, 1e-30)[..., None]
+        # (B, H, qb, D) -> (B, qb, H, D)
+        return None, o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # (nq, B, qb, H, D) -> (B, S, H, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def reference_attention(q, k, v, *, scale, causal=True, window=None, softcap=None):
+    """Naive O(S^2)-memory oracle (tests only).  q,k,v: (B,S,H,D)."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = _softcap(s * scale, softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bhqd", p, v, preferred_element_type=jnp.float32)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, scale, window=None,
+                     softcap=None):
+    """Single-token attention against a KV cache — GQA-native (no repeat_kv:
+    the cache is the dominant state in decode; repeating it G-fold would
+    multiply the memory term).
+
+    q: (B, 1, Hq, D); k_cache/v_cache: (B, S, Hkv, D); cur_len: () or (B,)
+    — number of valid cache positions.  Returns (B, 1, Hq, D)."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = _softcap(s, softcap)
+    pos = jnp.arange(S)
+    cur = jnp.asarray(cur_len)
+    cur_b = cur if cur.ndim else jnp.full((B,), cur)
+    mask = pos[None, :] < cur_b[:, None]                       # (B, S)
+    if window is not None:
+        mask &= pos[None, :] >= (cur_b[:, None] - window)
+    s = jnp.where(mask[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    # (B, Hkv, G, 1, D) -> (B, 1, Hq, D)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + attention + out proj)
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    params, x, positions, cfg, spec, ctx: Optional[ShardingCtx],
+    *, kv_cache=None, cur_len=None, attn_impl: str = "blocked",
+    mode: str = "train",
+):
+    """Full attention layer. x: (B, S, d).
+
+    mode='train'   : no cache I/O, blocked causal attention.
+    mode='prefill' : kv_cache = (k_buf, v_buf) sized (B, max_len, Hkv, D);
+                     writes the S fresh KV at cur_len, attends within the
+                     prompt, returns updated buffers.
+    mode='decode'  : S==1; writes at cur_len, attends against the cache."""
+    B, S, d = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = Hq // Hkv
+    scale = cfg.query_scale if cfg.query_scale is not None else D ** -0.5
+    window = cfg.window if spec.attn_type == "local" else None
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])           # (B,S,Hq,D)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])           # (B,S,Hkv,D)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    q = constrain(q, ("batch", "seq", "heads", None), ctx)
+    k = constrain(k, ("batch", "seq", "kv_heads", None), ctx)
+    v = constrain(v, ("batch", "seq", "kv_heads", None), ctx)
+
+    if mode in ("train", "prefill"):
+        kr, vr = repeat_kv(k, G), repeat_kv(v, G)
+        if attn_impl == "reference":
+            o = reference_attention(q, kr, vr, scale=scale, causal=True,
+                                    window=window, softcap=cfg.attn_softcap)
+        else:
+            o = blocked_attention(q, kr, vr, scale=scale, causal=True,
+                                  window=window, softcap=cfg.attn_softcap)
+        if mode == "train" or kv_cache is None:
+            new_cache = None
+        else:
+            k_cache, v_cache = kv_cache
+            off = 0 if cur_len is None else cur_len
+            k_cache = lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), off, axis=1)
+            v_cache = lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), off, axis=1)
+            new_cache = (k_cache, v_cache)
+    else:  # decode
+        k_cache, v_cache = kv_cache
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cur_len, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cur_len, axis=1)
+        o = decode_attention(q, k_cache, v_cache,
+                             cur_len + S, scale=scale,
+                             window=window, softcap=cfg.attn_softcap)
+        new_cache = (k_cache, v_cache)
+
+    # cast the (f32-accumulated) attention output back to the residual dtype
+    # BEFORE the out projection: the TP partial-sum of this dot is what GSPMD
+    # all-reduces, and an f32 operand doubles that collective's bytes (the
+    # biggest single AR in the moonshot/gemma2 train HLO — §Perf A2)
+    o = o.astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_block(params, x, cfg, ctx: Optional[ShardingCtx]):
+    act = jax.nn.gelu if cfg.geglu else jax.nn.silu
+    h = act(jnp.einsum("bsd,df->bsf", x, params["w1"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, params["w3"])
+    h = constrain(h, ("batch", "seq", "mlp"), ctx)
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, gather/scatter dispatch with capacity dropping)
+# ---------------------------------------------------------------------------
+
+
+def _moe_groups(cfg, ctx: Optional[ShardingCtx], T: int) -> int:
+    """Dispatch groups aligned to the DP shards so sort/cumsum/scatter are
+    shard-local (a *global* argsort over the batch-sharded token dim would
+    force a distributed sort — hundreds of collectives per layer)."""
+    if ctx is None:
+        return 1
+    axes = ctx.rules.get("batch") or ()
+    axes = tuple(a for a in axes if a in ctx.mesh.shape)
+    g = ctx.axis_size(axes) if axes else 1
+    while g > 1 and T % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_block(params, x, cfg, ctx: Optional[ShardingCtx]):
+    """Token-choice top-k MoE, group-local dropping dispatch (GShard-style).
+
+    Tokens are reshaped (Gg, Tg, d) with the group dim sharded like 'batch';
+    per-group argsort/capacity/scatter are device-local.  Expert weights are
+    EP-sharded over 'model'; the combine contracts the expert-sharded dim so
+    GSPMD inserts exactly one (T, d) psum per layer — the same collective
+    shape as a Megatron TP MLP.
+
+    Returns (out, stats); stats feed regc.reduce (consistency-region state,
+    fine-grained psum — the paper's reduction extension)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    act = jax.nn.gelu if cfg.geglu else jax.nn.silu
+
+    Gg = _moe_groups(cfg, ctx, T)
+    Tg = T // Gg
+    C = max(1, int(Tg * K * m.capacity_factor) // E)
+
+    xt = x.reshape(Gg, Tg, d)
+    xt = constrain(xt, ("batch", None, None), ctx)
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, K)                         # (Gg, Tg, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    ids_1hot = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
+    f_e = ids_1hot.mean((0, 1))
+    p_e = probs.mean((0, 1))
+    aux_loss = E * jnp.sum(f_e * p_e)
+
+    # ---- group-local dispatch: sort (token,k) pairs by expert ------------
+    e_flat = top_e.reshape(Gg, Tg * K)
+    w_flat = top_w.reshape(Gg, Tg * K).astype(x.dtype)
+    perm = jnp.argsort(e_flat, axis=-1)                        # per-group, stable
+    e_sorted = jnp.take_along_axis(e_flat, perm, axis=-1)
+    w_sorted = jnp.take_along_axis(w_flat, perm, axis=-1)
+    tok_sorted = perm // K                                     # (Gg, Tg*K)
+    group_start = jax.vmap(
+        lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_sorted)  # (Gg, E)
+    pos_in_e = jnp.arange(Tg * K)[None, :] - jnp.take_along_axis(
+        group_start, e_sorted, axis=-1)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)     # drop -> scratch
+
+    gathered_in = jnp.take_along_axis(xt, tok_sorted[..., None], axis=1)
+    xe = jnp.zeros((Gg, E * C + 1, d), x.dtype)
+    xe = jax.vmap(lambda b, s, v: b.at[s].set(v))(xe, slot, gathered_in)
+    xe = xe[:, : E * C].reshape(Gg, E, C, d)
+    xe = constrain(xe, ("batch", "expert", None, None), ctx)
+
+    h = act(jnp.einsum("gecd,edf->gecf", xe, params["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w3"])
+    h = constrain(h, ("batch", "expert", None, "mlp"), ctx)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w2"])         # (Gg, E, C, d)
+
+    ye_flat = ye.reshape(Gg, E * C, d)
+    picked = jnp.take_along_axis(
+        ye_flat, jnp.clip(slot, 0, E * C - 1)[..., None], axis=1)
+    picked = jnp.where(keep[..., None], picked, 0.0)           # (Gg, Tg*K, d)
+    contrib = picked * w_sorted[..., None]
+    out = jax.vmap(
+        lambda t, c: jnp.zeros((Tg, d), x.dtype).at[t].add(c)
+    )(tok_sorted, contrib)
+    out = constrain(out, ("batch", None, None), ctx)
+
+    if m.n_shared:
+        hs = act(jnp.einsum("gtd,sdf->gtsf", xt, params["shared_w1"]))
+        hs = hs * jnp.einsum("gtd,sdf->gtsf", xt, params["shared_w3"])
+        out = out + jnp.einsum("gtsf,sfd->gtd", hs, params["shared_w2"])
+
+    load = jnp.zeros((E,), jnp.float32).at[e_sorted.reshape(-1)].add(
+        keep.reshape(-1).astype(jnp.float32))
+    stats = {"aux_loss": aux_loss, "expert_load": load}
+    return out.reshape(B, S, d), stats
+
+
+# ---------------------------------------------------------------------------
+# EP MoE via shard_map (hillclimb variant; see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+
+def moe_block_ep(params, x, cfg, ctx: ShardingCtx):
+    """Expert-parallel MoE, manual shard_map over (batch axes + 'model').
+
+    Why: the GSPMD dense-dispatch path reshapes the expert-sharded (E, C, d)
+    tensor through E*C for the combine gather, which breaks expert locality
+    — the partitioner replicates the ~GB dispatched tensor and all-reduces
+    it across 'model' every layer (704 GB/device/step on moonshot train_4k).
+
+    Here every device routes its OWN data shard's tokens and dispatches only
+    to its OWN E/ep experts (tokens are replicated across 'model', experts
+    across data — dispatch and expert compute are fully local); the combine
+    is a partial sum of local-expert outputs, merged by ONE (B_local, S, d)
+    psum over 'model' per layer — the same collective shape as a Megatron TP
+    MLP.  Fully manual (not partial-auto) because bf16 boundaries through
+    partial-auto shard_map grads hit an XLA-CPU fatal bug ("Invalid binary
+    instruction opcode copy"); manual-everything sidesteps it and is also
+    the explicit-RegC-style code path.
+    """
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    mesh = ctx.mesh
+    if "model" not in mesh.shape or E % mesh.shape["model"] or m.n_shared:
+        return moe_block(params, x, cfg, ctx)     # fallback: dense GSPMD
+    ep = mesh.shape["model"]
+    E_loc = E // ep
+    act = jax.nn.gelu if cfg.geglu else jax.nn.silu
+    B, S, d = x.shape
+    batch_axes = tuple(a for a in (ctx.rules.get("batch") or ())
+                       if a in mesh.shape and a != "model")
+    if B % max(1, ctx.axis_size(batch_axes)):
+        batch_axes = ()
+    cf = m.capacity_factor
+
+    def inner(xb, router, w1, w2, w3):
+        # xb: (B_loc, S, d); router: (d, E); w*: (E_loc, d, f) — all local
+        shard = lax.axis_index("model")
+        Bb, Sb, dd = xb.shape
+        T = Bb * Sb
+        xt = xb.reshape(T, dd)
+        logits = jnp.einsum("td,de->te", xt, router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = lax.top_k(probs, K)                    # (T, K)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        ids_1hot = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
+        aux_loss = E * jnp.sum(ids_1hot.mean(0) * probs.mean(0))
+        if batch_axes:
+            aux_loss = lax.pmean(aux_loss, batch_axes)
+
+        # local dispatch: sort (token, k) pairs by expert, keep my slice
+        C = max(1, int(T * K * cf) // E)
+        e_flat = top_e.reshape(T * K)
+        w_flat = top_w.reshape(T * K).astype(xb.dtype)
+        perm = jnp.argsort(e_flat)
+        e_sorted = e_flat[perm]
+        w_sorted = w_flat[perm]
+        tok_sorted = perm // K
+        start = jnp.searchsorted(e_sorted, jnp.arange(E))
+        pos_in_e = jnp.arange(T * K) - start[e_sorted]
+        e_local = e_sorted - shard * E_loc
+        mine = (e_local >= 0) & (e_local < E_loc) & (pos_in_e < C)
+        slot = jnp.where(mine, e_local * C + pos_in_e, E_loc * C)
+
+        gathered = xt[tok_sorted]                              # (T*K, d)
+        xe = jnp.zeros((E_loc * C + 1, dd), xb.dtype).at[slot].set(gathered)
+        xe = xe[: E_loc * C].reshape(E_loc, C, dd)
+
+        h = act(jnp.einsum("ecd,edf->ecf", xe, w1))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+        ye = jnp.einsum("ecf,efd->ecd", h, w2)                 # (E_loc, C, d)
+
+        ye_flat = ye.reshape(E_loc * C, dd)
+        picked = ye_flat[jnp.clip(slot, 0, E_loc * C - 1)]
+        picked = jnp.where(mine[:, None], picked, 0.0)
+        contrib = picked * w_sorted[:, None]
+        out = jnp.zeros((T, dd), xb.dtype).at[tok_sorted].add(contrib)
+        out = lax.psum(out, "model")                           # THE combine
+
+        load_loc = jnp.zeros((E_loc,), jnp.float32).at[
+            jnp.clip(e_local, 0, E_loc - 1)].add(mine.astype(jnp.float32))
+        load = lax.all_gather(load_loc, "model", tiled=True)   # (E,) tiny
+        if batch_axes:
+            load = lax.psum(load, batch_axes)
+        return out.reshape(Bb, Sb, dd), aux_loss, load
+
+    from jax.sharding import PartitionSpec as P
+    bspec = P(batch_axes if batch_axes else None)
+    manual = set(batch_axes) | {"model"}
+    fn = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(bspec, P(), P("model"), P("model"), P("model")),
+        out_specs=(bspec, P(), P()),
+        axis_names=manual, check_vma=False)
+    out, aux, load = fn(x, params["router"], params["w1"], params["w2"],
+                        params["w3"])
+    return out, {"aux_loss": aux, "expert_load": load}

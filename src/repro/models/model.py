@@ -1,0 +1,439 @@
+"""Composable decoder model: param specs, super-block scan, loss, decode.
+
+The layer stack is ``cfg.pattern`` repeated ``cfg.n_superblocks`` times; all
+super-blocks share code and are driven by one ``lax.scan`` whose xs are the
+parameter (and cache) pytrees stacked on a leading 'layers' dim.  HLO size is
+therefore independent of depth — llama3-405B (126L) lowers as fast as a 2L
+toy.  Cross-entropy is computed in sequence chunks (scan) so the full
+(B, S, vocab) logits tensor is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, LayerSpec
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.sharding import (
+    ParamSpec, ShardingCtx, abstract_params, constrain, init_params,
+)
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, Hq, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = d ** -0.5
+    return {
+        "wq": ParamSpec((d, Hq, D), ("embed_fsdp", "heads", None), "normal", s),
+        "wk": ParamSpec((d, Hkv, D), ("embed_fsdp", "kv_heads", None), "normal", s),
+        "wv": ParamSpec((d, Hkv, D), ("embed_fsdp", "kv_heads", None), "normal", s),
+        "wo": ParamSpec((Hq, D, d), ("heads", None, "embed_fsdp"), "normal",
+                        (Hq * D) ** -0.5),
+    }
+
+
+def _ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    gn = s.n_groups * s.d_state
+    H = d_in // s.head_dim
+    sc = d ** -0.5
+    return {
+        "in_z": ParamSpec((d, d_in), ("embed_fsdp", "ssm_in"), "normal", sc),
+        "in_x": ParamSpec((d, d_in), ("embed_fsdp", "ssm_in"), "normal", sc),
+        "in_B": ParamSpec((d, gn), ("embed_fsdp", None), "normal", sc),
+        "in_C": ParamSpec((d, gn), ("embed_fsdp", None), "normal", sc),
+        "in_dt": ParamSpec((d, H), ("embed_fsdp", None), "normal", sc),
+        "conv_w": ParamSpec((s.d_conv, d_in + 2 * gn), (None, "ssm_in"),
+                            "normal", 0.2),
+        "conv_b": ParamSpec((d_in + 2 * gn,), ("ssm_in",), "zeros"),
+        "A_log": ParamSpec((H,), (None,), "ones"),
+        "D": ParamSpec((H,), (None,), "ones"),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "gate_ln": ParamSpec((d_in,), ("ssm_in",), "zeros"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_in", "embed_fsdp"), "normal",
+                              d_in ** -0.5),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamSpec((d, f), ("embed_fsdp", "mlp"), "normal", d ** -0.5),
+        "w3": ParamSpec((d, f), ("embed_fsdp", "mlp"), "normal", d ** -0.5),
+        "w2": ParamSpec((f, d), ("mlp", "embed_fsdp"), "normal", f ** -0.5),
+    }
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    sp = {
+        "router": ParamSpec((d, E), ("embed_fsdp", None), "normal", d ** -0.5),
+        "w1": ParamSpec((E, d, f), ("expert", "embed_fsdp", "mlp"), "normal", d ** -0.5),
+        "w3": ParamSpec((E, d, f), ("expert", "embed_fsdp", "mlp"), "normal", d ** -0.5),
+        "w2": ParamSpec((E, f, d), ("expert", "mlp", "embed_fsdp"), "normal", f ** -0.5),
+    }
+    if m.n_shared:
+        sp["shared_w1"] = ParamSpec((m.n_shared, d, f), (None, "embed_fsdp", "mlp"),
+                                    "normal", d ** -0.5)
+        sp["shared_w3"] = ParamSpec((m.n_shared, d, f), (None, "embed_fsdp", "mlp"),
+                                    "normal", d ** -0.5)
+        sp["shared_w2"] = ParamSpec((m.n_shared, f, d), (None, "mlp", "embed_fsdp"),
+                                    "normal", f ** -0.5)
+    return sp
+
+
+def _layer_specs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    out: Dict[str, ParamSpec] = {"ln": ParamSpec((d,), (None,), "zeros")}
+    if spec.kind == "attn":
+        out.update(_attn_specs(cfg))
+    else:
+        out.update(_ssm_specs(cfg))
+    if cfg.use_post_norm:
+        out["ln_post"] = ParamSpec((d,), (None,), "zeros")
+    if spec.mlp != "none":
+        out["ln_mlp"] = ParamSpec((d,), (None,), "zeros")
+        if cfg.use_post_norm:
+            out["ln_mlp_post"] = ParamSpec((d,), (None,), "zeros")
+        out.update({f"mlp_{k}": v for k, v in
+                    (_mlp_specs(cfg) if spec.mlp == "dense" else _moe_specs(cfg)).items()})
+    return out
+
+
+def _stack(spec_dict: Dict[str, ParamSpec], n: int) -> Dict[str, ParamSpec]:
+    return {
+        k: ParamSpec((n,) + v.shape, ("layers",) + v.axes, v.init, v.scale)
+        for k, v in spec_dict.items()
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    tree: Dict[str, Any] = {
+        # vocab-only sharding: a 2-axis-sharded table makes the token gather
+        # reshard pathologically under SPMD (full remat warning); the table
+        # is small (<300MB/shard at 405B) so d_model stays replicated.
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                           ("vocab", None), "normal", 1.0),
+        "final_ln": ParamSpec((cfg.d_model,), (None,), "zeros"),
+        "blocks": [
+            _stack(_layer_specs(cfg, spec), cfg.n_superblocks)
+            for spec in cfg.pattern
+        ],
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                    ("embed_fsdp", "vocab"), "normal",
+                                    cfg.d_model ** -0.5)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Layer / super-block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg, spec: LayerSpec, p, x, positions, ctx, *,
+                 mode, cache, cur_len, attn_impl):
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    if spec.kind == "attn":
+        out, new_cache = L.attention_block(
+            p, h, positions, cfg, spec, ctx,
+            kv_cache=cache, cur_len=cur_len, attn_impl=attn_impl, mode=mode)
+    else:
+        out, new_cache = S.mamba2_block(p, h, cfg, ctx, cache=cache, mode=mode)
+    if cfg.use_post_norm:
+        out = L.rmsnorm(out, p["ln_post"], cfg.norm_eps)
+    x = x + out
+    stats = {"aux_loss": jnp.zeros((), jnp.float32)}
+    if cfg.moe is not None:
+        stats["expert_load"] = jnp.zeros((cfg.moe.n_experts,), jnp.float32)
+    if spec.mlp != "none":
+        h2 = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            mp = {k[4:]: v for k, v in p.items() if k.startswith("mlp_")}
+            out2 = L.mlp_block(mp, h2, cfg, ctx)
+        else:
+            mp = {k[4:]: v for k, v in p.items() if k.startswith("mlp_")}
+            if ctx is not None and ctx.moe_impl == "ep":
+                out2, mstats = L.moe_block_ep(mp, h2, cfg, ctx)
+            else:
+                out2, mstats = L.moe_block(mp, h2, cfg, ctx)
+            stats.update(mstats)
+        if cfg.use_post_norm:
+            out2 = L.rmsnorm(out2, p["ln_mlp_post"], cfg.norm_eps)
+        x = x + out2
+    return x, new_cache, stats
+
+
+def run_stack(cfg: ModelConfig, params, x, positions, ctx, *,
+              mode: str = "train", caches=None, cur_len=None,
+              attn_impl: str = "blocked", remat: Optional[str] = None,
+              remat_segment: int = 0):
+    """Apply all layers.  Returns (hidden, new_caches, stats_sum).
+
+    remat_segment > 0 segments the super-block scan into (outer, inner) with
+    checkpointing at BOTH levels (sqrt-N remat): live boundary activations
+    drop from n_superblocks x act to (outer + inner) x act at the cost of
+    one extra forward inside each segment's backward."""
+
+    # FSDP gather-weights semantics: re-constrain each sliced layer param to
+    # its logical axes with 'embed_fsdp' replicated.  Without this, GSPMD may
+    # contract over the data-sharded dim instead — a partial dot followed by
+    # an all-reduce of the (much larger) activation, which is the wrong side
+    # of the FSDP trade for training these models.  Decode flips the trade
+    # (ctx.gather_fsdp=False): regathering all weights per generated token
+    # costs ~params bytes of all-gather per step, while the partial-dot
+    # all-reduce is only an activation row (§Perf llama3-405b decode).
+    if ctx is not None and not ctx.gather_fsdp:
+        gather_axes = [
+            {k: s.axes for k, s in _layer_specs(cfg, spec).items()}
+            for spec in cfg.pattern
+        ]
+    else:
+        gather_axes = [
+            {k: tuple(None if a == "embed_fsdp" else a for a in s.axes)
+             for k, s in _layer_specs(cfg, spec).items()}
+            for spec in cfg.pattern
+        ]
+
+    def superblock(carry_x, xs):
+        p_blocks, cache_blocks = xs
+        stats_acc = None
+        new_caches = []
+        xx = carry_x
+        for pos, spec in enumerate(cfg.pattern):
+            cache = None if cache_blocks is None else cache_blocks[pos]
+            p_gathered = {
+                k: constrain(v, gather_axes[pos][k], ctx)
+                for k, v in p_blocks[pos].items()
+            }
+            xx, ncache, stats = _apply_layer(
+                cfg, spec, p_gathered, xx, positions, ctx,
+                mode=mode, cache=cache, cur_len=cur_len, attn_impl=attn_impl)
+            new_caches.append(ncache)
+            stats_acc = stats if stats_acc is None else jax.tree.map(
+                jnp.add, stats_acc, stats)
+        if mode == "train":
+            new_caches = None
+            # the carry is what the scan SAVES for backward; seq_sp-shard it
+            # (rules decide; None rule == current batch-only sharding)
+            xx = constrain(xx, ("batch", "seq_sp", "embed"), ctx)
+        return xx, (new_caches, stats_acc)
+
+    body = superblock
+    if remat and mode == "train":
+        policy = {
+            "full": None,
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }[remat]
+        body = jax.checkpoint(superblock, policy=policy, prevent_cse=False) \
+            if policy else jax.checkpoint(superblock, prevent_cse=False)
+
+    n_sb = cfg.n_superblocks
+    if (remat_segment and mode == "train" and remat_segment > 1
+            and n_sb % remat_segment == 0 and n_sb // remat_segment > 1):
+        inner = remat_segment
+        outer = n_sb // inner
+
+        def segment(carry_x, seg_xs):
+            xx, (ncaches, stats) = lax.scan(body, carry_x, seg_xs)
+            return xx, (ncaches, stats)
+
+        seg_body = jax.checkpoint(segment, prevent_cse=False)
+        blocks_r = jax.tree.map(
+            lambda a: a.reshape(outer, inner, *a.shape[1:]),
+            params["blocks"])
+        # train mode: caches is None (scan over None leaves is fine)
+        x, (new_caches, stats) = lax.scan(seg_body, x, (blocks_r, caches))
+        stats = jax.tree.map(lambda a: a.sum((0, 1)), stats)
+        return x, new_caches, stats
+
+    x, (new_caches, stats) = lax.scan(body, x, (params["blocks"], caches))
+    stats = jax.tree.map(lambda a: a.sum(0), stats)  # sum over super-blocks
+    return x, new_caches, stats
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params, batch, ctx):
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"]
+    else:
+        x = params["embed"][batch["tokens"]]
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma scaling
+    return constrain(x, ("batch", "seq", "embed"), ctx)
+
+
+def _lm_matrix(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T      # (d, V)
+    return params["lm_head"]
+
+
+def chunked_ce_loss(cfg: ModelConfig, params, hidden, targets, ctx, *,
+                    chunk: int = 1024, mask=None):
+    """Cross-entropy without materializing (B, S, V) logits."""
+    B, S_, d = hidden.shape
+    c = min(chunk, S_)
+    assert S_ % c == 0
+    nc = S_ // c
+    w = _lm_matrix(cfg, params)
+    hs = hidden.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nc, c).transpose(1, 0, 2)
+    if mask is None:
+        ms = jnp.ones((nc, B, c), jnp.float32)
+    else:
+        ms = mask.reshape(B, nc, c).transpose(1, 0, 2).astype(jnp.float32)
+
+    def step(acc, inp):
+        hc, tc, mc = inp
+        logits = jnp.einsum("bcd,dv->bcv", hc, w,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss = ((lse - ll) * mc).sum()
+        ntok = mc.sum()
+        return (acc[0] + loss, acc[1] + ntok), None
+
+    (loss, ntok), _ = lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (hs, ts, ms))
+    return loss / jnp.maximum(ntok, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def make_positions(cfg: ModelConfig, B: int, S: int, offset=0):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx=None, *,
+            attn_impl="blocked", remat=None, ce_chunk=1024,
+            remat_segment=0):
+    """Training loss. batch: tokens/embeds (B,S[,d]), targets (B,S),
+    optional positions, optional loss_mask."""
+    x = embed_inputs(cfg, params, batch, ctx)
+    B, S_ = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S_)
+    hidden, _, stats = run_stack(cfg, params, x, positions, ctx,
+                                 mode="train", attn_impl=attn_impl,
+                                 remat=remat, remat_segment=remat_segment)
+    hidden = L.rmsnorm(hidden, params["final_ln"], cfg.norm_eps)
+    ce = chunked_ce_loss(cfg, params, hidden, batch["targets"], ctx,
+                         chunk=ce_chunk, mask=batch.get("loss_mask"))
+    aux = stats["aux_loss"]
+    aux = aux.sum() if getattr(aux, "ndim", 0) else aux
+    total = ce
+    if cfg.moe is not None:
+        total = total + cfg.moe.router_aux_weight * aux / cfg.n_layers
+    metrics = {"ce": ce, "aux_loss": aux}
+    if cfg.moe is not None:
+        load = stats["expert_load"]
+        metrics["expert_load"] = load.sum(0) if load.ndim > 1 else load
+    return total, metrics
+
+
+def init_caches(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-position stacked cache buffers (leading dim n_superblocks)."""
+    n = cfg.n_superblocks
+    caches = []
+    for spec in cfg.pattern:
+        if spec.kind == "attn":
+            kv_shape = (n, B, max_len, cfg.n_kv_heads, cfg.head_dim)
+            caches.append((jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype)))
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            H = d_in // s.head_dim
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            caches.append((
+                jnp.zeros((n, B, s.d_conv - 1, conv_dim), dtype),
+                jnp.zeros((n, B, H, s.head_dim, s.d_state), jnp.float32),
+            ))
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes matching init_caches structure (for dry-run shardings)."""
+    axes = []
+    for spec in cfg.pattern:
+        if spec.kind == "attn":
+            a = ("layers", "batch", "kv_seq", "kv_heads", None)
+            axes.append((a, a))
+        else:
+            axes.append((
+                ("layers", "batch", None, "ssm_in"),
+                ("layers", "batch", "ssm_in", None, None),
+            ))
+    return axes
+
+
+def forward_hidden(cfg, params, batch, ctx=None, *, mode, caches, cur_len,
+                   attn_impl="blocked"):
+    x = embed_inputs(cfg, params, batch, ctx)
+    B, S_ = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S_, offset=cur_len if cur_len is not None else 0)
+    hidden, new_caches, _ = run_stack(
+        cfg, params, x, positions, ctx, mode=mode, caches=caches,
+        cur_len=cur_len, attn_impl=attn_impl)
+    return L.rmsnorm(hidden, params["final_ln"], cfg.norm_eps), new_caches
+
+
+def decode_step(cfg: ModelConfig, params, batch, caches, cur_len, ctx=None):
+    """One-token decode. batch: tokens (B,1) or embeds (B,1,d).
+    Returns (next_token_logits (B, V), new_caches)."""
+    hidden, new_caches = forward_hidden(
+        cfg, params, batch, ctx, mode="decode", caches=caches, cur_len=cur_len)
+    w = _lm_matrix(cfg, params)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], w,
+                        preferred_element_type=jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, ctx=None,
+            attn_impl="blocked", cache_dtype=jnp.bfloat16):
+    """Run the prompt, returning (last_hidden, primed caches, prompt_len)."""
+    x = batch["tokens"] if cfg.input_mode == "tokens" else batch["embeds"]
+    B, S_ = x.shape[0], x.shape[1]
+    caches = init_caches(cfg, B, max_len, cache_dtype)
+    hidden, new_caches = forward_hidden(
+        cfg, params, batch, ctx, mode="prefill", caches=caches, cur_len=0,
+        attn_impl=attn_impl)
+    return hidden, new_caches, S_
+
+
+def init_model_params(cfg: ModelConfig, rng, dtype=jnp.float32):
+    return init_params(param_specs(cfg), rng, dtype)
+
+
+def abstract_model_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return abstract_params(param_specs(cfg), dtype)

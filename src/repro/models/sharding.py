@@ -1,0 +1,255 @@
+"""Logical-axis sharding: every parameter/activation carries logical axis
+names; a rules table maps logical axes -> mesh axes per parallelism config.
+
+The rules engine only applies a mesh axis when the dimension is divisible by
+the product of mesh-axis sizes (GSPMD requires equal shards); otherwise the
+dimension falls back to replication.  This is what makes e.g. grok-1's 8
+experts work on a 16-way `model` axis (experts replicate, d_ff shards) and
+granite's MQA kv=1 head replicate while q heads shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary -----------------------------------------------------
+#   batch      global batch dim                      -> DP (pod, data)
+#   seq        sequence dim (activations)            -> SP ('model') optionally
+#   kv_seq     KV-cache sequence dim                 -> context parallel ('data')
+#   embed      d_model                               -> replicated (activations)
+#   embed_fsdp d_model on *params*                   -> FSDP ('data')
+#   heads      q heads                               -> TP ('model')
+#   kv_heads   kv heads                              -> TP if divisible
+#   mlp        d_ff                                  -> TP ('model')
+#   vocab      vocabulary                            -> TP ('model')
+#   expert     MoE expert dim                        -> EP ('model')
+#   layers     stacked super-block dim               -> never sharded
+#   ssm_in     SSD inner dim (expand*d_model)        -> TP ('model')
+#   conv / state / groups / misc                     -> replicated
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+# Production default: DP over (pod, data), FSDP params over data, TP over model.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": None,     # sequence sharding of SAVED layer boundaries only
+    "kv_seq": None,
+    "embed": None,
+    "embed_fsdp": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "ssm_in": ("model",),
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "groups": None,
+    None: None,
+}
+
+# Small-model training (d_model <= ~3k): Megatron-style TP=16 is collective-
+# bound (4 all-reduces of (B,S,d) per layer vs O(d^2) flops), so the 'model'
+# axis is spent on extra data parallelism instead; params/opt shard over
+# 'data' (FSDP) which keeps optimizer state under HBM.
+SMALL_MODEL_RULES: Rules = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data", "model"),
+    heads=None, kv_heads=None, mlp=None, expert=None, ssm_in=None,
+    vocab=("model",),   # CE logits stay sharded (the big activation)
+)
+
+# (defined after SERVE_RULES below)
+
+# Serving (decode): KV cache is the dominant state.  GQA kv-head counts (8)
+# don't divide the 16-way model axis, so the cache shards its *seq* dim over
+# 'model' (distributed-softmax decode; GSPMD inserts the psum combine).
+SERVE_RULES: Rules = dict(
+    DEFAULT_RULES,
+    kv_seq=("model",),
+    kv_heads=None,
+)
+
+# Small models at decode: TP stays (1-token activations make its all-reduce
+# negligible) but FSDP is dropped — replicating a few GB of weights beats a
+# per-layer all-gather that moves 15/16 of the weights per generated token.
+SMALL_SERVE_RULES: Rules = dict(SERVE_RULES, embed_fsdp=None)
+
+# Long-context decode (global_batch=1): context-parallel KV over every
+# available axis (batch=1 cannot use them otherwise).
+LONG_CONTEXT_RULES: Rules = dict(
+    DEFAULT_RULES,
+    batch=None,
+    kv_seq=("pod", "data", "model"),
+    kv_heads=None,
+    seq=None,
+)
+
+# Decode for big dense models (§Perf B-series): baseline SERVE_RULES
+# re-gathers the FSDP-sharded weights every generated token (~100 GB/device
+# of all-gather per step on llama3-405b).  Here weights stay 2-D sharded
+# (embed_fsdp x TP) and are NEVER gathered (pair with gather_fsdp=False);
+# instead the *batch* is replicated and activations shard their d_model dim
+# over 'data', so every matmul is a local partial dot + a psum of one
+# activation row.  Decode FLOPs are tiny (memory-bound), so the replicated
+# batch compute is free; the KV cache context-shards over BOTH axes.
+DECODE_2D_RULES: Rules = dict(
+    DEFAULT_RULES,
+    batch=None,
+    embed=("data",),
+    kv_seq=("data", "model"),
+    kv_heads=None,
+)
+
+# Sequence-parallel boundaries (§Perf C-series): the residual carry saved at
+# every super-block boundary for the backward pass is resharded over 'model'
+# along seq — 16x less live activation memory, at the cost of one
+# (re)gather per super-block in forward and recompute.
+TRAIN_SP_RULES: Rules = dict(DEFAULT_RULES, seq_sp=("model",))
+
+# ZeRO across pods (§Perf C5): params/optimizer/grads shard over BOTH the
+# pod and data axes (32-way FSDP x 16-way TP = 512-way state sharding on the
+# multi-pod mesh).  Weight gathers then cross the inter-pod links too.
+FSDP_POD_RULES: Rules = dict(DEFAULT_RULES, embed_fsdp=("pod", "data"))
+
+# long-context decode with the 2-D no-regather treatment (pair with
+# gather_fsdp=False): activations shard d_model over 'data'; weights never
+# regathered per token (§Perf B-series generalized to long_500k)
+LONG_2D_RULES: Rules = dict(LONG_CONTEXT_RULES, embed=("data",))
+
+NAMED_RULES = {
+    "default": None,
+    "decode2d": DECODE_2D_RULES,
+    "long": LONG_CONTEXT_RULES,
+    "long2d": LONG_2D_RULES,
+    "serve": SERVE_RULES,
+    "small": SMALL_MODEL_RULES,
+    "train_sp": TRAIN_SP_RULES,
+    "fsdp_pod": FSDP_POD_RULES,
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Mesh + rules; ``None`` ctx means single-device (tests).
+
+    gather_fsdp: constrain FSDP-sharded weights to replicated before each
+    layer (gather-weights semantics — right for training).  False keeps the
+    'embed_fsdp' shard on the weights and pays a small activation psum per
+    matmul instead — right for decode, where regathering the full weight set
+    per generated token dominates the collective term (§Perf).
+    moe_impl: 'dense' (GSPMD dense dispatch) | 'ep' (shard_map expert
+    parallelism, one activation psum per layer)."""
+
+    mesh: Mesh
+    rules: Rules
+    gather_fsdp: bool = True
+    moe_impl: str = "dense"
+
+    def axis_size(self, names: Tuple[str, ...]) -> int:
+        n = 1
+        for name in names:
+            n *= self.mesh.shape[name]
+        return n
+
+    def spec_for(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        parts = []
+        for dim, ax in zip(shape, axes):
+            mesh_axes = self.rules.get(ax)
+            if not mesh_axes:
+                parts.append(None)
+                continue
+            mesh_axes = tuple(m for m in mesh_axes if m in self.mesh.shape)
+            # divisibility fallback: longest prefix of the axis tuple that
+            # divides the dim (e.g. batch=(pod,data,model) -> (pod,data))
+            while mesh_axes and dim % self.axis_size(mesh_axes) != 0:
+                mesh_axes = mesh_axes[:-1]
+            if mesh_axes:
+                parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            else:
+                parts.append(None)
+        # PartitionSpec must not reuse a mesh axis twice; later dims lose.
+        used = set()
+        clean = []
+        for p in parts:
+            tup = (p,) if isinstance(p, str) else (p or ())
+            if any(t in used for t in tup):
+                clean.append(None)
+            else:
+                used.update(tup)
+                clean.append(p)
+        return P(*clean)
+
+    def sharding_for(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+def constrain(x, axes: Sequence[Optional[str]], ctx: Optional[ShardingCtx]):
+    """with_sharding_constraint by logical axes (no-op when ctx is None)."""
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding_for(x.shape, axes))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # 'normal' | 'zeros' | 'ones' | 'scaled'
+    scale: float = 1.0         # stddev for 'normal'; fan-in applied for 'scaled'
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_param(spec: ParamSpec, key, dtype):
+    import jax.numpy as jnp
+
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "scaled":  # fan-in scaled normal (last-but-one dim = fan_in)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale * (fan_in ** -0.5)
+        return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+    return (jax.random.normal(key, spec.shape) * spec.scale).astype(dtype)
+
+
+def init_params(spec_tree, rng, dtype):
+    """Initialize a pytree of ParamSpec -> pytree of arrays (single device)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [init_param(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_shardings(spec_tree, ctx: ShardingCtx):
+    """Pytree of NamedSharding matching a ParamSpec tree."""
+    return jax.tree.map(
+        lambda s: ctx.sharding_for(s.shape, s.axes),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def abstract_params(spec_tree, dtype):
+    """ShapeDtypeStruct tree (for dry-run lowering, no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (
+    AdamWConfig, adamw_update, clip_by_global_norm, init_opt_state,
+    warmup_cosine,
+)

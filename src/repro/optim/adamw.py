@@ -1,0 +1,82 @@
+"""AdamW with fp32 master moments, decoupled weight decay and global-norm
+clipping.  Optimizer state is a pytree with the same structure (and logical
+sharding) as the parameters, so FSDP/ZeRO sharding of m/v falls out of the
+params' ``embed_fsdp`` axes for free — the 'memory server striping' of the
+paper, applied to optimizer state."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_sq_norm, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def init_opt_state(params):
+    return {
+        "m": tree_zeros_like(params, jnp.float32),
+        "v": tree_zeros_like(params, jnp.float32),
+    }
+
+
+def _decay_mask(p):
+    return jnp.asarray(1.0 if p.ndim >= 2 else 0.0, jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm, *, sq_norm=None):
+    """sq_norm may be supplied externally (RegC path: psum of local sq-norms
+    via the reduction extension)."""
+    if sq_norm is None:
+        sq_norm = global_sq_norm(grads)
+    norm = jnp.sqrt(sq_norm)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state, step, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state, grad_norm)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = jnp.sqrt(global_sq_norm(grads))
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * (g * g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * _decay_mask(p) * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}, gnorm
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * (step + 1.0) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

@@ -1,0 +1,128 @@
+"""Blockwise-int8 AdamW state (beyond-paper optimization, §Perf C-series).
+
+Why: at 405B on a 256-chip pod, f32 AdamW m+v alone is 11.8 GiB/device of
+the 16 GiB HBM — training cannot fit regardless of activation policy.  The
+fix (bitsandbytes-style) stores both moments as int8 with per-block absmax
+scales: 8 bytes/param -> ~2.06 bytes/param.
+
+Two representation choices that matter at scale:
+
+* blocks run along the LAST axis only (shape (..., ceil(last/128)) scales) —
+  a flatten-the-leaf layout would destroy the parameter's GSPMD sharding
+  and force a full f32 gather of every moment at dequantize time (measured:
+  6.7 TB/device on llama3-405b — §Perf C4 refuted iteration);
+* v is stored as sqrt(v): linear absmax int8 on raw v zeroes small entries
+  whose block-mate is large while their m survives -> m/(0+eps) update
+  explosions.  sqrt halves the dynamic range and makes m and sigma quantize
+  to zero together (|m| <~ sigma), which is benign.
+
+The update dequantizes, applies AdamW, re-quantizes; quantization noise is
+bounded by absmax/127 per block and is second-order for Adam.  Convergence
+is asserted by ``tests/test_quantized_opt.py`` against the f32 reference.
+
+This is the training-layer twin of the paper's fine-grained *diffs*: store /
+ship the compressed representation of slowly-varying state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, clip_by_global_norm
+from repro.utils.tree import global_sq_norm
+
+BLOCK = 128
+
+
+def _last_pad(last: int) -> int:
+    return (-last) % BLOCK
+
+
+def scale_shape(shape) -> Tuple[int, ...]:
+    if not shape:
+        return (1,)
+    last = int(shape[-1])
+    return tuple(shape[:-1]) + ((last + BLOCK - 1) // BLOCK,)
+
+
+def quantize_blockwise(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., L) f32 -> (q int8 same shape, scales f32 (..., ceil(L/128))).
+
+    Blocks along the last axis ONLY: leading dims (and their shardings)
+    pass through untouched."""
+    if x.ndim == 0:
+        x = x[None]
+        q, s = quantize_blockwise(x)
+        return q[0], s
+    last = x.shape[-1]
+    pad = _last_pad(last)
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*x.shape[:-1], -1, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(*x.shape[:-1], last + pad)[..., :last]
+    return q, scale
+
+
+def dequantize_blockwise(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    if q.ndim == 0:
+        return dequantize_blockwise(q[None], scale)[0]
+    last = q.shape[-1]
+    pad = _last_pad(last)
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    qb = qp.reshape(*q.shape[:-1], -1, BLOCK).astype(jnp.float32)
+    out = qb * scale[..., None]
+    return out.reshape(*q.shape[:-1], last + pad)[..., :last]
+
+
+def init_opt_state_q8(params):
+    def leaf(p):
+        return {
+            "m_q": jnp.zeros(p.shape, jnp.int8),
+            "m_s": jnp.zeros(scale_shape(p.shape), jnp.float32),
+            "v_q": jnp.zeros(p.shape, jnp.int8),
+            "v_s": jnp.zeros(scale_shape(p.shape), jnp.float32),
+        }
+    return jax.tree.map(leaf, params)
+
+
+def adamw8bit_update(params, grads, state, step, lr, cfg: AdamWConfig):
+    """Drop-in replacement for adamw_update with int8 m / sqrt-v."""
+    sq = global_sq_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm, sq_norm=sq)
+    else:
+        gnorm = jnp.sqrt(sq)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def leaf(p, g, s):
+        g = g.astype(jnp.float32)
+        m = dequantize_blockwise(s["m_q"], s["m_s"])
+        sigma = dequantize_blockwise(s["v_q"], s["v_s"])
+        v = sigma * sigma
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32)
+                 - lr * (upd + wd * p.astype(jnp.float32))).astype(p.dtype)
+        m_q, m_s = quantize_blockwise(m)
+        v_q, v_s = quantize_blockwise(jnp.sqrt(v))
+        return new_p, {"m_q": m_q, "m_s": m_s, "v_q": v_q, "v_s": v_s}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = tdef.flatten_up_to(state)
+    outs = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_state = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_params, new_state, gnorm
+
+
+def opt_bytes_per_param() -> float:
+    """int8 q (x2) + f32 scale per 128 block (x2) = 2.0625 B/param."""
+    return 2.0 + 8.0 / BLOCK

@@ -1,0 +1,3 @@
+from repro.regc_sync.policies import (
+    RegCSyncPolicy, barrier_sync_grads, ring_allreduce_int8, span_reduce,
+)

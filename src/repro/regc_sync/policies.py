@@ -1,0 +1,206 @@
+"""RegC-as-gradient-synchronization: the paper's consistency machinery mapped
+onto distributed training (DESIGN.md §2.2).
+
+The dichotomy the paper introduces:
+
+* **ordinary-region state** — bulk gradients.  Propagated *lazily*: local
+  accumulation across microbatches, one barrier sync per step
+  (``ordinary_sync='lazy'``).  The contrast mode ``'eager'`` syncs at every
+  microbatch — release-consistency-like, no region distinction — and is kept
+  as the measurable baseline (the paper's RC column of Table I).
+* **consistency-region state** — small hot objects (loss metrics, global
+  grad-norm, MoE router load stats).  Synced *fine-grained* via
+  ``span_reduce`` — the paper's §V-B *reduction extension*, which on a TPU
+  mesh is exactly ``lax.psum`` of the object, never a page/bucket.
+
+Granularity of the barrier sync mirrors samhita vs samhita_page:
+
+* ``granularity='object'``  — per-parameter psum (fine-grained updates),
+* ``granularity='bucket'``  — parameters concatenated into page-like buckets;
+  a whole bucket moves even if one element changed.  Fewer, larger messages —
+  cheaper per byte on latency-bound links, wasteful when updates are sparse.
+
+``compression='int8_ring'`` is the beyond-paper optimization: a ring
+all-reduce (ppermute) that re-quantizes each hop to int8 — the training-layer
+analogue of the paper's fine-grained *diffs* (move only compressed deltas).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class RegCSyncPolicy:
+    ordinary_sync: str = "lazy"          # 'lazy' (RegC) | 'eager' (RC baseline)
+    granularity: str = "bucket"          # 'bucket' (page-like) | 'object' (fine)
+    bucket_bytes: int = 64 << 20
+    compression: Optional[str] = None    # None | 'int8_ring'
+
+    def __post_init__(self):
+        assert self.ordinary_sync in ("lazy", "eager")
+        assert self.granularity in ("bucket", "object")
+        assert self.compression in (None, "int8_ring")
+
+
+# ---------------------------------------------------------------------------
+# The reduction extension (paper §V-B): consistency-region objects
+# ---------------------------------------------------------------------------
+
+
+def span_reduce(value, dp_axes: Sequence[str], op: str = "sum"):
+    """Fine-grained (object-granularity) reduction of a small shared object.
+
+    Replaces the mutex-accumulate pattern; must be called inside a
+    ``shard_map`` manual over ``dp_axes``."""
+    axes = tuple(dp_axes)
+    if op == "sum":
+        return lax.psum(value, axes)
+    if op == "mean":
+        return lax.pmean(value, axes)
+    if op == "max":
+        return lax.pmax(value, axes)
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing (page-granularity analogue)
+# ---------------------------------------------------------------------------
+
+
+def _flatten_to_buckets(tree, bucket_bytes: int):
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    buckets: List[jnp.ndarray] = []
+    cur: List[jnp.ndarray] = []
+    cur_b = 0
+    for f in flat:
+        cur.append(f)
+        cur_b += f.size * 4
+        if cur_b >= bucket_bytes:
+            buckets.append(jnp.concatenate(cur))
+            cur, cur_b = [], 0
+    if cur:
+        buckets.append(jnp.concatenate(cur))
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    return buckets, shapes, treedef
+
+
+def _unflatten_buckets(buckets, shapes, treedef):
+    flat = jnp.concatenate([b.reshape(-1) for b in buckets])
+    leaves, off = [], 0
+    for shape, dtype in shapes:
+        n = 1
+        for s in shape:
+            n *= s
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# int8 ring all-reduce (compressed fine-grained diffs; beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def _quant(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ring_allreduce_int8(flat, axis: str, world: int):
+    """Ring all-reduce with per-hop int8 re-quantization.
+
+    Moves ~N bytes/device/direction vs ~8N for fp32 psum.  ``world`` (the
+    static axis size) must be passed in because ppermute's permutation is a
+    static argument."""
+    if world == 1:
+        return flat
+    n = flat.size
+    pad = (-n) % world
+    x = jnp.pad(flat, (0, pad)).reshape(world, -1)
+    idx = lax.axis_index(axis)
+    fwd = [(i, (i + 1) % world) for i in range(world)]
+
+    # reduce-scatter phase: after w-1 hops, chunk (idx+1)%w fully reduced
+    def rs_step(k, chunks):
+        send_ix = (idx - k) % world
+        buf = jnp.take(chunks, send_ix, axis=0)
+        q, s = _quant(buf)
+        q = lax.ppermute(q, axis, fwd)
+        s = lax.ppermute(s, axis, fwd)
+        recv_ix = (idx - k - 1) % world
+        return chunks.at[recv_ix].add(_dequant(q, s))
+
+    chunks = lax.fori_loop(0, world - 1, rs_step, x)
+
+    # all-gather phase: each owner quantizes its fully-reduced chunk ONCE and
+    # the payload circulates verbatim — every rank dequantizes the identical
+    # (q, scale) pair, so all ranks end bitwise-equal (re-quantizing per hop
+    # would compound error and desynchronize replicas)
+    own_ix = (idx + 1) % world
+    q0, s0 = _quant(jnp.take(chunks, own_ix, axis=0))
+    chunks = chunks.at[own_ix].set(_dequant(q0, s0))
+
+    def ag_step(k, carry):
+        chunks, q, s = carry
+        q = lax.ppermute(q, axis, fwd)
+        s = lax.ppermute(s, axis, fwd)
+        recv_ix = (idx - k) % world
+        return chunks.at[recv_ix].set(_dequant(q, s)), q, s
+
+    chunks, _, _ = lax.fori_loop(0, world - 1, ag_step, (chunks, q0, s0))
+    return chunks.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Barrier sync of ordinary-region state (bulk gradients)
+# ---------------------------------------------------------------------------
+
+
+def barrier_sync_grads(grads, dp_axes: Sequence[str], policy: RegCSyncPolicy,
+                       *, axis_sizes: Optional[dict] = None, mean: bool = True):
+    """RegC rule 3 at the step barrier: make every ordinary STORE (gradient
+    contribution) performed with respect to all participants.
+
+    axis_sizes: static {axis: size}; required for 'int8_ring' (ppermute
+    permutations are static)."""
+    axes = tuple(dp_axes)
+
+    def _reduce_flat(flat):
+        if policy.compression == "int8_ring":
+            assert axis_sizes is not None, "int8_ring needs static axis sizes"
+            out = flat
+            # ring over the *last* dp axis; preceding axes use psum
+            if len(axes) > 1:
+                out = lax.psum(out, axes[:-1])
+            return ring_allreduce_int8(out, axes[-1], axis_sizes[axes[-1]])
+        return lax.psum(flat, axes)
+
+    if policy.granularity == "object":
+        synced = jax.tree.map(
+            lambda g: _reduce_flat(g.astype(jnp.float32).reshape(-1)).reshape(g.shape),
+            grads)
+    else:
+        buckets, shapes, treedef = _flatten_to_buckets(grads, policy.bucket_bytes)
+        buckets = [_reduce_flat(b) for b in buckets]
+        synced = _unflatten_buckets(buckets, shapes, treedef)
+
+    if mean:
+        if axis_sizes is not None:
+            denom = 1.0
+            for ax in axes:
+                denom *= float(axis_sizes[ax])
+        else:
+            # lax.psum of 1 gives the live axis size under shard_map
+            denom = lax.psum(jnp.ones(()), axes)
+        synced = jax.tree.map(lambda g: g / denom, synced)
+    return synced

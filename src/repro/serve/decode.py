@@ -1,0 +1,78 @@
+"""Serving steps: batched prefill + single-token decode (the dry-run's
+``serve_step``), greedy sampling, and a simple batched-request driver."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.sharding import ShardingCtx
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ShardingCtx] = None,
+                      *, max_len: Optional[int] = None, attn_impl="blocked",
+                      cache_dtype=jnp.bfloat16):
+    """Returns fn(params, batch) -> (first_token_logits (B,V), caches)."""
+
+    def prefill_step(params, batch):
+        hidden, caches, _ = M.prefill(
+            cfg, params, batch, max_len=max_len or _seq_of(batch),
+            ctx=ctx, attn_impl=attn_impl, cache_dtype=cache_dtype)
+        w = M._lm_matrix(cfg, params)
+        logits = jnp.einsum("bd,dv->bv", hidden[:, -1], w,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, caches
+
+    return prefill_step
+
+
+def _seq_of(batch):
+    x = batch.get("tokens", batch.get("embeds"))
+    return x.shape[1]
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[ShardingCtx] = None):
+    """One new token with an existing KV/SSM cache — the decode-shape target.
+
+    fn(params, batch, caches, cur_len) -> (next_token (B,), logits, caches)."""
+
+    def serve_step(params, batch, caches, cur_len):
+        logits, new_caches = M.decode_step(cfg, params, batch, caches,
+                                           cur_len, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+
+    return serve_step
+
+
+def generate(cfg: ModelConfig, params, prompt_batch, *, max_new_tokens: int,
+             ctx=None, attn_impl="blocked", cache_dtype=jnp.float32):
+    """Greedy generation driver (prefill + decode loop).  Returns (B, T)."""
+    S = _seq_of(prompt_batch)
+    max_len = S + max_new_tokens
+    prefill_step = make_prefill_step(cfg, ctx, max_len=max_len,
+                                     attn_impl=attn_impl,
+                                     cache_dtype=cache_dtype)
+    serve_step = jax.jit(make_serve_step(cfg, ctx))
+    logits, caches = prefill_step(params, prompt_batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    cur = S
+    for _ in range(max_new_tokens - 1):
+        if cfg.input_mode == "embeds":
+            # modality-frontend stub: next-step embedding from the token table
+            batch = {"embeds": params["embed"][tok][:, None]}
+        else:
+            batch = {"tokens": tok[:, None]}
+        if cfg.mrope:
+            batch["positions"] = jnp.full((3, tok.shape[0], 1), cur, jnp.int32)
+        tok, _, caches = serve_step(params, batch, caches, jnp.asarray(cur))
+        out.append(tok)
+        cur += 1
+    return jnp.stack(out, axis=1)

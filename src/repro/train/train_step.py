@@ -1,0 +1,218 @@
+"""Train-step builders.
+
+Two paths, per DESIGN.md §2.2:
+
+* ``make_train_step``       — GSPMD: jit + sharding rules; XLA places the
+  collectives.  Supports DP/FSDP/TP/EP.  This is the production default and
+  the path the multi-pod dry-run lowers.
+* ``make_train_step_regc``  — explicit RegC: ``shard_map`` manual over the DP
+  axes (TP stays automatic inside), gradients accumulated locally over
+  microbatches (ordinary region, lazy propagation) and synced once at the
+  step barrier with policy-chosen granularity/compression; metrics and the
+  global grad-norm go through ``span_reduce`` (the reduction extension).
+  Requires params replicated across DP axes (no FSDP in the manual path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.sharding import ShardingCtx, constrain
+from repro.optim.adamw import (
+    AdamWConfig, adamw_update, clip_by_global_norm, init_opt_state,
+    warmup_cosine,
+)
+from repro.regc_sync.policies import (
+    RegCSyncPolicy, barrier_sync_grads, span_reduce,
+)
+from repro.utils.tree import global_sq_norm, tree_add, tree_scale, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    adamw: AdamWConfig = AdamWConfig()
+    n_micro: int = 1
+    remat: Optional[str] = "dots"
+    remat_segment: int = 0       # >1: sqrt-N segmented remat (see run_stack)
+    attn_impl: str = "blocked"
+    ce_chunk: int = 1024
+    opt_impl: str = "adamw"      # 'adamw' | 'adamw8bit' (blockwise-int8 m,v)
+    sync: RegCSyncPolicy = RegCSyncPolicy()
+
+
+def batch_logical_axes(cfg: ModelConfig, key: str, ndim: int):
+    if key == "positions" and cfg.mrope:
+        return (None, "batch", "seq")
+    if key == "embeds":
+        return ("batch", "seq", "embed")
+    return ("batch", "seq")[:ndim]
+
+
+def _constrain_batch(cfg, batch, ctx):
+    if ctx is None:
+        return batch
+    return {k: constrain(v, batch_logical_axes(cfg, k, v.ndim), ctx)
+            for k, v in batch.items()}
+
+
+def _microbatch(batch, n_micro, batch_dim_of):
+    """Reshape each leaf's batch dim into (n_micro, b/n_micro)."""
+    def resh(k, a):
+        bd = batch_dim_of(k)
+        b = a.shape[bd]
+        assert b % n_micro == 0, (k, b, n_micro)
+        new = a.shape[:bd] + (n_micro, b // n_micro) + a.shape[bd + 1:]
+        a = a.reshape(new)
+        return jnp.moveaxis(a, bd, 0)
+    return {k: resh(k, v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# GSPMD path
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams,
+                    ctx: Optional[ShardingCtx] = None):
+    sched = warmup_cosine(hp.lr, hp.warmup, hp.total_steps)
+    if hp.opt_impl == "adamw8bit":
+        from repro.optim.quantized import adamw8bit_update as opt_update
+    else:
+        opt_update = adamw_update
+
+    def loss_f(params, batch):
+        return M.loss_fn(cfg, params, batch, ctx, attn_impl=hp.attn_impl,
+                         remat=hp.remat, ce_chunk=hp.ce_chunk,
+                         remat_segment=hp.remat_segment)
+
+    def train_step(params, opt_state, batch, step):
+        batch = _constrain_batch(cfg, batch, ctx)
+        if hp.n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_f, has_aux=True)(params, batch)
+        else:
+            bdim = lambda k: 1 if (k == "positions" and cfg.mrope) else 0
+            mbatch = _microbatch(batch, hp.n_micro, bdim)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                mb = _constrain_batch(cfg, mb, ctx)
+                (l, _), g = jax.value_and_grad(loss_f, has_aux=True)(params, mb)
+                return (tree_add(g_acc, g), l_acc + l), None
+
+            g0 = tree_zeros_like(params, jnp.float32)
+            (grads, loss), _ = lax.scan(micro, (g0, jnp.zeros(())), mbatch)
+            grads = tree_scale(grads, 1.0 / hp.n_micro)
+            loss = loss / hp.n_micro
+            metrics = {"ce": loss}
+        new_params, new_opt, gnorm = opt_update(
+            params, grads, opt_state, step, sched(step), hp.adamw)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": sched(step)}
+        out_metrics.update({k: v for k, v in metrics.items()
+                            if v.ndim == 0})
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Explicit RegC path (shard_map manual over DP axes)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step_regc(cfg: ModelConfig, hp: TrainHParams, mesh,
+                         dp_axes=("data",), inner_ctx: Optional[ShardingCtx] = None):
+    """Params/opt replicated over dp_axes; batch sharded on its batch dim."""
+    sched = warmup_cosine(hp.lr, hp.warmup, hp.total_steps)
+    axis_sizes = {a: mesh.shape[a] for a in dp_axes}
+    dp_world = 1
+    for a in dp_axes:
+        dp_world *= axis_sizes[a]
+
+    def loss_f(params, batch):
+        return M.loss_fn(cfg, params, batch, inner_ctx,
+                         attn_impl=hp.attn_impl, remat=hp.remat,
+                         ce_chunk=hp.ce_chunk,
+                         remat_segment=hp.remat_segment)
+
+    def inner(params, opt_state, batch, step):
+        bdim = lambda k: 1 if (k == "positions" and cfg.mrope) else 0
+
+        def local_grads(b):
+            (l, mts), g = jax.value_and_grad(loss_f, has_aux=True)(params, b)
+            return l, mts, g
+
+        if hp.n_micro == 1:
+            loss, mts, grads = local_grads(batch)
+            if hp.sync.ordinary_sync == "eager":
+                grads = barrier_sync_grads(grads, dp_axes, hp.sync,
+                                           axis_sizes=axis_sizes)
+        else:
+            mbatch = _microbatch(batch, hp.n_micro, bdim)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                l, _, g = local_grads(mb)
+                if hp.sync.ordinary_sync == "eager":
+                    # RC-like: propagate ordinary stores at *every* release
+                    g = barrier_sync_grads(g, dp_axes, hp.sync,
+                                           axis_sizes=axis_sizes)
+                return (tree_add(g_acc, g), l_acc + l), None
+
+            g0 = tree_zeros_like(params, jnp.float32)
+            (grads, loss), _ = lax.scan(micro, (g0, jnp.zeros(())), mbatch)
+            grads = tree_scale(grads, 1.0 / hp.n_micro)
+            loss = loss / hp.n_micro
+
+        if hp.sync.ordinary_sync == "lazy":
+            # RegC: ordinary stores propagated once, at the step barrier
+            grads = barrier_sync_grads(grads, dp_axes, hp.sync,
+                                       axis_sizes=axis_sizes)
+
+        # consistency-region objects: reduction extension (fine-grained psum)
+        loss = span_reduce(loss, dp_axes, "mean")
+        sq = global_sq_norm(grads)  # already synced; identical on all shards
+        if hp.adamw.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, hp.adamw.clip_norm,
+                                               sq_norm=sq)
+        else:
+            gnorm = jnp.sqrt(sq)
+        adamw_nocap = dataclasses.replace(hp.adamw, clip_norm=None)
+        new_params, new_opt, _ = adamw_update(
+            params, grads, opt_state, step, sched(step), adamw_nocap)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": sched(step)}
+        return new_params, new_opt, metrics
+
+    def bspec(k):
+        if k == "positions" and cfg.mrope:
+            return P(None, dp_axes)
+        return P(dp_axes)
+
+    def step_fn(params, opt_state, batch, step):
+        batch_specs = {k: bspec(k) for k in batch}
+        fn = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(), batch_specs, P()),
+            out_specs=(P(), P(), P()),
+            axis_names=set(dp_axes),
+            check_vma=False,
+        )
+        return fn(params, opt_state, batch, step)
+
+    return step_fn
+
+
+def init_train_state(cfg: ModelConfig, rng, dtype=jnp.float32):
+    params = M.init_model_params(cfg, rng, dtype)
+    return params, init_opt_state(params)

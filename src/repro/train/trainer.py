@@ -1,0 +1,129 @@
+"""Trainer: the fault-tolerant training loop.
+
+Wires together the data pipeline (stateless-by-step, prefetched), the train
+step (GSPMD or explicit-RegC), the checkpoint manager (async, keep-last-k)
+and the FT runtime (failure injection -> restore -> resume; straggler
+monitor).  The loop is deliberately restart-shaped: ALL mutable state is
+(params, opt_state, step); everything else is reconstructed from configs, so
+recovery == restore + jump the pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, make_pipeline
+from repro.ft import FailureInjector, StragglerMonitor, WorkerFailure
+from repro.models import model as M
+from repro.optim.adamw import init_opt_state
+from repro.train.train_step import (
+    TrainHParams, make_train_step, make_train_step_regc,
+)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "ckpts"
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    log_every: int = 10
+    path: str = "gspmd"               # 'gspmd' | 'regc'
+    dp_axes: tuple = ("data",)
+    max_restarts: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, hp: TrainHParams, tc: TrainerConfig,
+                 data: DataConfig, *, mesh=None, ctx=None,
+                 injector: Optional[FailureInjector] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg, self.hp, self.tc, self.data = cfg, hp, tc, data
+        self.mesh, self.ctx = mesh, ctx
+        self.injector = injector
+        self.log = log_fn
+        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=tc.ckpt_keep,
+                                      async_write=tc.ckpt_async)
+        if tc.path == "regc":
+            assert mesh is not None, "explicit-RegC path needs a mesh"
+            self.step_fn = make_train_step_regc(cfg, hp, mesh,
+                                                dp_axes=tc.dp_axes,
+                                                inner_ctx=ctx)
+        else:
+            self.step_fn = jax.jit(make_train_step(cfg, hp, ctx))
+        self.straggler = StragglerMonitor(1)
+        self.history: List[Dict] = []
+        self.restarts = 0
+
+    # ------------------------------------------------------------------
+    def _init_state(self):
+        params = M.init_model_params(self.cfg, jax.random.PRNGKey(self.tc.seed),
+                                     jnp.float32)
+        return params, init_opt_state(params)
+
+    def _resume_or_init(self):
+        last = self.ckpt.latest()
+        if last is None:
+            params, opt = self._init_state()
+            return params, opt, 0
+        params_t, opt_t = self._init_state()
+        state = self.ckpt.restore(last, {"params": params_t, "opt": opt_t})
+        self.log(f"[trainer] restored checkpoint step={last}")
+        return state["params"], state["opt"], last
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict:
+        while True:
+            try:
+                return self._run_inner()
+            except WorkerFailure as e:
+                self.restarts += 1
+                if self.restarts > self.tc.max_restarts:
+                    raise
+                self.log(f"[trainer] {e} -> restart "
+                         f"{self.restarts}/{self.tc.max_restarts}")
+
+    def _run_inner(self) -> Dict:
+        params, opt, start = self._resume_or_init()
+        pipe = make_pipeline(self.data, start_step=start)
+        t_prev = time.perf_counter()
+        try:
+            step = start
+            while step < self.tc.total_steps:
+                step, batch = next(pipe)
+                if self.injector is not None:       # simulated failure point
+                    self.injector.check(step)
+                params, opt, metrics = self.step_fn(
+                    params, opt, batch, jnp.asarray(step, jnp.int32))
+                loss = float(metrics["loss"])       # blocks; paces the loop
+                now = time.perf_counter()
+                dur = now - t_prev
+                t_prev = now
+                slow = self.straggler.observe([dur])
+                rec = {"step": step, "loss": loss, "t_s": dur,
+                       "straggler": bool(slow)}
+                self.history.append(rec)
+                if step % self.tc.log_every == 0:
+                    self.log(f"[trainer] step={step} loss={loss:.4f} "
+                             f"({dur*1e3:.0f} ms)")
+                next_step = step + 1
+                if next_step % self.tc.ckpt_every == 0 \
+                        or next_step == self.tc.total_steps:
+                    self.ckpt.save(next_step,
+                                   {"params": params, "opt": opt},
+                                   extra={"loss": loss})
+                step = next_step
+        finally:
+            pipe.close()
+        self.ckpt.wait()
+        return {"params": params, "opt": opt, "step": step,
+                "history": self.history, "restarts": self.restarts}

@@ -1,0 +1,4 @@
+from repro.utils.tree import (
+    global_sq_norm, tree_add, tree_bytes, tree_cast, tree_scale, tree_size,
+    tree_zeros_like,
+)

@@ -1,0 +1,35 @@
+"""Small pytree utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype), tree)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda a: jnp.zeros(a.shape, dtype or a.dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda a: a * s, tree)
+
+
+def global_sq_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def tree_size(tree) -> int:
+    return sum(l.size for l in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))

@@ -1,0 +1,47 @@
+"""Examples are part of the public API surface — they must run green."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable] + args, env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stdout[-1500:] + "\n" + out.stderr[-2500:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run(["examples/quickstart.py"])
+    assert "fine ships a ~2-word diff" in out
+    assert "residual = 28.0" in out
+
+
+@pytest.mark.slow
+def test_dsm_jacobi_converges():
+    out = _run(["examples/dsm_jacobi.py", "--n", "24", "--iters", "400",
+                "--workers", "2"])
+    assert "converged" in out
+
+
+@pytest.mark.slow
+def test_train_lm_with_failure(tmp_path):
+    out = _run(["examples/train_lm.py", "--steps", "16",
+                "--inject-failure-at", "9",
+                "--ckpt-dir", str(tmp_path / "ck")])
+    assert "restarts=1" in out
+
+
+@pytest.mark.slow
+def test_serve_batch():
+    out = _run(["examples/serve_batch.py", "--n-requests", "4",
+                "--batch", "2"])
+    assert "served 4 requests" in out

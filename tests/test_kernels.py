@@ -1,0 +1,218 @@
+"""Per-kernel allclose vs pure-jnp oracles, swept over shapes/dtypes.
+
+Kernels run in interpret mode on CPU: the Pallas kernel *body* executes with
+JAX semantics, validating the tiling/index-map/accumulator logic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import diff_apply, diff_encode, flash_attention, ssd_chunk
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# page_diff
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_pages,page_words", [(8, 1024), (16, 256), (32, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_diff_encode_matches_ref(n_pages, page_words, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    twin = jax.random.normal(k1, (n_pages, page_words), dtype)
+    # sparse modifications: ~10% of words
+    noise = jax.random.normal(k2, twin.shape, dtype)
+    m = jax.random.bernoulli(k3, 0.1, twin.shape)
+    curr = jnp.where(m, twin + noise, twin)
+    mask, vals, count = diff_encode(curr, twin, interpret=True)
+    mask_r, vals_r, count_r = ref.diff_encode_ref(curr, twin)
+    np.testing.assert_array_equal(mask, mask_r)
+    np.testing.assert_allclose(vals, vals_r, rtol=0, atol=0)
+    np.testing.assert_array_equal(count, count_r)
+
+
+@pytest.mark.parametrize("n_pages,page_words", [(8, 1024), (16, 128)])
+def test_diff_roundtrip(n_pages, page_words):
+    """encode(curr, twin) applied onto twin reconstructs curr exactly."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    twin = jax.random.normal(k1, (n_pages, page_words))
+    m = jax.random.bernoulli(k3, 0.3, twin.shape)
+    curr = jnp.where(m, jax.random.normal(k2, twin.shape), twin)
+    mask, vals, _ = diff_encode(curr, twin, interpret=True)
+    rebuilt = diff_apply(twin, mask, vals, interpret=True)
+    np.testing.assert_allclose(rebuilt, curr, rtol=0, atol=0)
+    rr = ref.diff_apply_ref(twin, mask, vals)
+    np.testing.assert_allclose(rebuilt, rr, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 4, 256, 64),     # MHA
+    (2, 4, 2, 128, 32),     # GQA
+    (1, 4, 1, 256, 64),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (B, Hq, S, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Hkv, S, D)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, Hkv, S, D)) * 0.5).astype(dtype)
+    out = flash_attention(q, k, v, q_block=64, kv_block=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [None, 64, 128])
+def test_flash_attention_window_softcap(window):
+    B, Hq, Hkv, S, D = 1, 2, 2, 256, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, Hkv, S, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, Hkv, S, D)) * 0.5
+    out = flash_attention(q, k, v, window=window, softcap=30.0,
+                          q_block=64, kv_block=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, window=window, softcap=30.0)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_vs_model_blocked_path():
+    """Kernel agrees with the XLA blocked_attention used by the models."""
+    from repro.models.layers import blocked_attention, repeat_kv
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, Hkv, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, Hkv, D)) * 0.5
+    xla = blocked_attention(q, repeat_kv(k, 2), repeat_kv(v, 2),
+                            scale=D ** -0.5, q_block=64, kv_block=64)
+    pallas = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), q_block=64, kv_block=64, interpret=True)
+    np.testing.assert_allclose(
+        xla, pallas.transpose(0, 2, 1, 3), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_chunk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,Q,P,N", [(4, 64, 32, 64), (2, 128, 64, 128),
+                                     (8, 32, 16, 32)])
+def test_ssd_chunk_matches_ref(M, Q, P, N):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (M, Q, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (M, Q, 1)))
+    dA = -jax.nn.softplus(jax.random.normal(ks[2], (M, Q, 1)))
+    cum = jnp.cumsum(dA, axis=1)
+    B_ = jax.random.normal(ks[3], (M, Q, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (M, Q, N)) * 0.3
+    y, st = ssd_chunk(x, dt, cum, B_, C_, interpret=True)
+    y_r, st_r = ref.ssd_chunk_ref(x, dt, cum, B_, C_)
+    np.testing.assert_allclose(y, y_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st, st_r, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_composes_to_full_ssd():
+    """Kernel intra-chunk + XLA inter-chunk recurrence == sequential oracle."""
+    from repro.models.ssm import ssd_reference
+    B, S, H, P, G, N = 1, 128, 2, 16, 1, 32
+    Q = 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+
+    nc = S // Q
+    # pack (B, nc, H) grid cells
+    xm = x.reshape(B, nc, Q, H, P).transpose(0, 1, 3, 2, 4).reshape(-1, Q, P)
+    dtm = dt.reshape(B, nc, Q, H).transpose(0, 1, 3, 2).reshape(-1, Q, 1)
+    dA = dt * A
+    cum_full = dA.reshape(B, nc, Q, H).transpose(0, 1, 3, 2)
+    cum = jnp.cumsum(cum_full, axis=-1).reshape(-1, Q, 1)
+    hg = H // G
+    Bh = jnp.repeat(B_, hg, axis=2)
+    Ch = jnp.repeat(C_, hg, axis=2)
+    Bm = Bh.reshape(B, nc, Q, H, N).transpose(0, 1, 3, 2, 4).reshape(-1, Q, N)
+    Cm = Ch.reshape(B, nc, Q, H, N).transpose(0, 1, 3, 2, 4).reshape(-1, Q, N)
+
+    y_inner, states = ssd_chunk(xm, dtm, cum, Bm, Cm, interpret=True)
+    y_inner = y_inner.reshape(B, nc, H, Q, P)
+    states = states.reshape(B, nc, H, P, N)
+    cumr = cum.reshape(B, nc, H, Q)
+
+    # inter-chunk recurrence in XLA
+    chunk_decay = jnp.exp(cumr[..., -1])            # (B, nc, H)
+    h0 = jnp.zeros((B, H, P, N))
+    def step(h, inp):
+        dec, s_in = inp
+        return h * dec[..., None, None] + s_in, h
+    _, prev = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev = prev.transpose(1, 0, 2, 3, 4)            # (B, nc, H, P, N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bchqp",
+                         Cm.reshape(B, nc, H, Q, N).transpose(0, 1, 3, 2, 4),
+                         prev)
+    y_inter = y_inter * jnp.exp(cumr)[..., None]
+    y = (y_inner + y_inter).transpose(0, 1, 3, 2, 4).reshape(B, S, H, P)
+
+    y_ref, _ = ssd_reference(x, dt, A, B_, C_)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,Q,P,N", [(4, 64, 32, 64), (2, 256, 64, 128)])
+def test_ssd_chunk_bf16_inputs(M, Q, P, N):
+    """bf16 inputs: kernel accumulates f32 internally; tolerance scales
+    with bf16 resolution."""
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (M, Q, P)).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (M, Q, 1))).astype(jnp.bfloat16)
+    dA = -jax.nn.softplus(jax.random.normal(ks[2], (M, Q, 1)))
+    cum = jnp.cumsum(dA, axis=1).astype(jnp.bfloat16)
+    B_ = (jax.random.normal(ks[3], (M, Q, N)) * 0.3).astype(jnp.bfloat16)
+    C_ = (jax.random.normal(ks[4], (M, Q, N)) * 0.3).astype(jnp.bfloat16)
+    y, st = ssd_chunk(x, dt, cum, B_, C_, interpret=True)
+    y_r, st_r = ref.ssd_chunk_ref(x, dt, cum, B_, C_)
+    np.testing.assert_allclose(y, y_r, rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(st, st_r, rtol=3e-2, atol=3e-2)
+
+
+def test_diff_encode_denormals_and_signed_zero():
+    """Bitwise (memcmp) semantics: denormals and -0.0 vs +0.0 are real
+    changes even when float comparison would miss them (regression for the
+    FTZ bug found by hypothesis)."""
+    twin = jnp.zeros((8, 1024), jnp.float32)
+    curr = twin.at[0, 3].set(1e-45)          # denormal
+    curr = curr.at[1, 7].set(-0.0)           # signed zero
+    mask, vals, count = diff_encode(curr, twin, interpret=True)
+    assert int(count[0]) == 1 and bool(mask[0, 3])
+    assert int(count[1]) == 1 and bool(mask[1, 7])
+    rebuilt = diff_apply(twin, mask, vals, interpret=True)
+    np.testing.assert_array_equal(
+        jax.lax.bitcast_convert_type(rebuilt, jnp.int32),
+        jax.lax.bitcast_convert_type(curr, jnp.int32))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [(1, 8, 8, 512, 128)])
+def test_flash_attention_large_tile(B, Hq, Hkv, S, D):
+    """MXU-aligned production tile (D=128, 128-blocks)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, Hkv, S, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, Hkv, S, D)) * 0.5
+    out = flash_attention(q, k, v, q_block=128, kv_block=128, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)

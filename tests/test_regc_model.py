@@ -1,0 +1,227 @@
+"""Executable semantics of the RegC model (paper §III) + Table I properties.
+
+Each of the paper's three formal rules gets a direct test; DRF sequential
+consistency is checked property-style with hypothesis (random interval
+writes inside spans / between barriers must equal a sequential oracle).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
+
+
+def mk(protocol, n_workers=2, page_words=64, **kw):
+    return RegCRuntime(n_workers, page_words=page_words, protocol=protocol,
+                       track_values=True, **kw)
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_rule2_span_visibility(proto):
+    """A consistent STORE becomes visible to a worker that subsequently
+    acquires the same lock (rule 2)."""
+    rt = mk(proto)
+    g = rt.alloc(128)
+    with rt.span(0, lock_id=7):
+        rt.write(0, g, 3, 5, np.array([1.5, 2.5], np.float32))
+    with rt.span(1, lock_id=7):
+        got = rt.read(1, g, 3, 5)
+    np.testing.assert_allclose(got, [1.5, 2.5])
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_rule1_ordinary_visibility_at_span_start(proto):
+    """Ordinary STOREs performed before a span at P0 are performed wrt P1
+    once P1 starts a span subsequently after P0's (rule 1)."""
+    rt = mk(proto)
+    g = rt.alloc(128)
+    # P1 caches the page first (stale copy)
+    _ = rt.read(1, g, 0, 4)
+    rt.write(0, g, 0, 4, np.array([9, 9, 9, 9], np.float32))   # ordinary
+    with rt.span(0, lock_id=1):
+        pass                    # span start flushes P0's ordinary stores
+    with rt.span(1, lock_id=2):  # ANY lock (not just lock 1)
+        got = rt.read(1, g, 0, 4)
+    np.testing.assert_allclose(got, [9, 9, 9, 9])
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_rule3_barrier_visibility(proto):
+    rt = mk(proto)
+    g = rt.alloc(128)
+    _ = rt.read(1, g, 0, 2)     # stale copy at P1
+    rt.write(0, g, 0, 2, np.array([4, 2], np.float32))
+    rt.barrier()
+    got = rt.read(1, g, 0, 2)
+    np.testing.assert_allclose(got, [4, 2])
+
+
+def test_fine_protocol_moves_fewer_bytes_than_page():
+    """The paper's core claim: fine-grain consistency-region updates move
+    only the diff; page protocol moves whole pages."""
+    results = {}
+    for proto in (FINE_PROTO, PAGE_PROTO):
+        rt = mk(proto, page_words=1024)
+        g = rt.alloc(1024)
+        with rt.span(0, 1):
+            rt.write(0, g, 0, 2, np.array([1, 2], np.float32))  # 2 words
+        with rt.span(1, 1):
+            _ = rt.read(1, g, 0, 2)
+        results[proto] = rt.traffic.total_bytes
+    assert results[FINE_PROTO] < results[PAGE_PROTO], results
+
+
+def test_spans_of_different_locks_are_independent():
+    """Spans of different locks do not force each other's consistency
+    updates (rule 2 is per-consistency-region)."""
+    rt = mk(FINE_PROTO)
+    g = rt.alloc(128)
+    base = rt.read(1, g, 0, 1).copy()   # P1 caches page
+    with rt.span(0, lock_id=1):
+        rt.write(0, g, 0, 1, np.array([7.0], np.float32))
+    with rt.span(1, lock_id=2):
+        got = rt.read(1, g, 0, 1)
+    # lock 2's region has no pending updates: P1 may still see its cached copy
+    np.testing.assert_allclose(got, base)
+    with rt.span(1, lock_id=1):
+        got2 = rt.read(1, g, 0, 1)
+    np.testing.assert_allclose(got2, [7.0])
+
+
+def test_reduction_extension():
+    rt = mk(FINE_PROTO, n_workers=4)
+    for w in range(4):
+        rt.reduce(w, "residual", w + 1.0)
+    rt.barrier()
+    assert rt.reduction_result("residual") == 10.0
+    assert rt.traffic.reduction_msgs == 3
+
+
+def test_lock_serialization_advances_clock():
+    rt = mk(FINE_PROTO, n_workers=4)
+    g = rt.alloc(64)
+    for w in range(4):
+        with rt.span(w, lock_id=0):
+            rt.compute(w, seconds=1.0)
+    # spans serialize: total time >= 4s
+    assert rt.time >= 4.0
+
+
+def test_lru_capacity_eviction_counts_traffic():
+    rt = mk(FINE_PROTO, n_workers=1, page_words=64, cache_pages=2)
+    g = rt.alloc(64 * 8)        # 8 pages, cache holds 2
+    for p in range(8):
+        rt.read(0, g, p * 64, p * 64 + 1)
+    f1 = rt.traffic.page_fetches
+    for p in range(8):          # second sweep refetches (capacity misses)
+        rt.read(0, g, p * 64, p * 64 + 1)
+    assert rt.traffic.page_fetches > f1
+
+
+# ---------------------------------------------------------------------------
+# property: DRF programs are sequentially consistent (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def drf_program(draw):
+    """A data-race-free program: every shared write happens inside a span of
+    lock 0, in a random worker order; reads after a final barrier."""
+    n_ops = draw(st.integers(2, 12))
+    ops = []
+    for _ in range(n_ops):
+        w = draw(st.integers(0, 2))
+        lo = draw(st.integers(0, 120))
+        hi = draw(st.integers(lo + 1, min(lo + 8, 128)))
+        val = draw(st.floats(-100, 100, allow_nan=False, width=32))
+        ops.append((w, lo, hi, val))
+    return ops
+
+
+@given(drf_program(), st.sampled_from([FINE_PROTO, PAGE_PROTO]))
+@settings(max_examples=40, deadline=None)
+def test_drf_sequential_consistency(ops, proto):
+    rt = RegCRuntime(3, page_words=64, protocol=proto, track_values=True)
+    g = rt.alloc(128)
+    oracle = np.zeros(128, np.float32)
+    for (w, lo, hi, val) in ops:
+        vals = np.full(hi - lo, val, np.float32)
+        with rt.span(w, lock_id=0):
+            rt.write(w, g, lo, hi, vals)
+        oracle[lo:hi] = vals
+    rt.barrier()
+    for w in range(3):
+        got = rt.read(w, g, 0, 128)
+        np.testing.assert_allclose(got, oracle, rtol=0, atol=0)
+
+
+@given(st.integers(1, 20), st.integers(0, 1))
+@settings(max_examples=20, deadline=None)
+def test_ordinary_stores_consistent_after_barrier(n_writes, reader):
+    """Release-consistency-style property for ordinary stores + barriers."""
+    rt = RegCRuntime(2, page_words=32, protocol=FINE_PROTO, track_values=True)
+    g = rt.alloc(64)
+    oracle = np.zeros(64, np.float32)
+    rng = np.random.RandomState(n_writes)
+    for i in range(n_writes):
+        w = int(rng.randint(2))
+        lo = int(rng.randint(0, 63))
+        val = np.array([float(i + 1)], np.float32)
+        # DRF: disjoint location per worker parity
+        loc = (lo // 2) * 2 + w
+        if loc >= 64:
+            loc = w
+        rt.write(w, g, loc, loc + 1, val)
+        oracle[loc] = float(i + 1)
+        rt.barrier()
+    got = rt.read(reader, g, 0, 64)
+    np.testing.assert_allclose(got, oracle)
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_false_sharing_disjoint_words_merge(proto):
+    """Two workers write DISJOINT words of the SAME page in ordinary
+    regions (classic false sharing, DRF).  Both writes must survive the
+    barrier — the ordinary flush merges word-exact dirty masks instead of
+    clobbering whole pages (found by the dsm_jacobi example; regression)."""
+    rt = mk(proto, n_workers=2, page_words=64)
+    g = rt.alloc(64)                         # ONE page
+    rt.write(0, g, 0, 4, np.array([1, 1, 1, 1], np.float32))
+    rt.write(1, g, 8, 12, np.array([2, 2, 2, 2], np.float32))
+    # interleave more: w1 also writes inside w0's gap (still disjoint)
+    rt.write(1, g, 5, 6, np.array([3], np.float32))
+    rt.barrier()
+    got = np.array(rt.read(0, g, 0, 12))
+    np.testing.assert_allclose(got[0:4], 1.0)
+    np.testing.assert_allclose(got[5], 3.0)
+    np.testing.assert_allclose(got[8:12], 2.0)
+    got1 = np.array(rt.read(1, g, 0, 12))
+    np.testing.assert_allclose(got1, got)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_false_sharing_random_disjoint(seed):
+    """Property: random DISJOINT single-word ordinary writes by 3 workers
+    to one page, random flush orderings via spans/barriers -> home equals
+    the sequential oracle."""
+    rng = np.random.RandomState(seed)
+    rt = RegCRuntime(3, page_words=64, protocol=FINE_PROTO,
+                     track_values=True)
+    g = rt.alloc(64)
+    oracle = np.zeros(64, np.float32)
+    owner = rng.randint(0, 3, size=64)       # word -> unique writer
+    for step in range(rng.randint(2, 5)):
+        for w in range(3):
+            words = np.nonzero(owner == w)[0]
+            pick = rng.choice(words, size=rng.randint(1, 5))
+            for wd in np.unique(pick):
+                val = np.array([rng.rand() * 10], np.float32)
+                rt.write(w, g, int(wd), int(wd) + 1, val)
+                oracle[wd] = val[0]
+        if rng.rand() < 0.5:
+            with rt.span(rng.randint(0, 3), lock_id=0):
+                pass
+        rt.barrier()
+    for w in range(3):
+        np.testing.assert_allclose(np.array(rt.read(w, g, 0, 64)), oracle)

@@ -1,0 +1,143 @@
+"""Cross-validation: the vectorized scale engine must produce EXACTLY the
+same protocol traffic as the reference RegCRuntime on random traces (the
+scale engine is what the paper-figure benchmarks run at 256 workers)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
+from repro.core.regc import Traffic
+from repro.core.regc_scale import RegCScaleRuntime
+
+
+@st.composite
+def trace(draw):
+    """A random program over 3 workers / 2 locks / 2 arrays."""
+    n_ops = draw(st.integers(3, 25))
+    ops = []
+    depth = {w: [] for w in range(3)}
+    for _ in range(n_ops):
+        w = draw(st.integers(0, 2))
+        kind = draw(st.sampled_from(
+            ["read", "write", "acquire", "release", "barrier"]))
+        if kind == "release":
+            if not depth[w]:
+                continue
+            ops.append(("release", w, depth[w].pop()))
+        elif kind == "acquire":
+            if len(depth[w]) >= 2:
+                continue
+            lock = draw(st.integers(0, 1))
+            depth[w].append(lock)
+            ops.append(("acquire", w, lock))
+        elif kind == "barrier":
+            if any(depth.values()):
+                continue            # barriers outside spans only
+            ops.append(("barrier",))
+        else:
+            arr = draw(st.integers(0, 1))
+            lo = draw(st.integers(0, 250))
+            hi = draw(st.integers(lo + 1, min(lo + 120, 256)))
+            ops.append((kind, w, arr, lo, hi))
+    # close any open spans, final barrier
+    for w in range(3):
+        while depth[w]:
+            ops.append(("release", w, depth[w].pop()))
+    ops.append(("barrier",))
+    return ops
+
+
+def run_trace(rt, ops, arrays):
+    for op in ops:
+        if op[0] == "read":
+            rt.read(op[1], arrays[op[2]], op[3], op[4])
+        elif op[0] == "write":
+            rt.write(op[1], arrays[op[2]], op[3], op[4],
+                     np.ones(op[4] - op[3], np.float32)
+                     if getattr(rt, "track_values", False) else None)
+        elif op[0] == "acquire":
+            rt.acquire(op[1], op[2])
+        elif op[0] == "release":
+            rt.release(op[1], op[2])
+        else:
+            rt.barrier()
+    return rt
+
+
+@given(trace(), st.sampled_from([FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]),
+       st.sampled_from([32, 64]))
+@settings(max_examples=60, deadline=None)
+def test_scale_engine_traffic_matches_reference(ops, proto, page_words):
+    ref = RegCRuntime(3, page_words=page_words, protocol=proto,
+                      track_values=False, prefetch=1)
+    fast = RegCScaleRuntime(3, page_words=page_words, protocol=proto,
+                            prefetch=1, model_mechanism=False)
+    ga_r = [ref.alloc(256), ref.alloc(256)]
+    ga_f = [fast.alloc(256), fast.alloc(256)]
+    run_trace(ref, ops, ga_r)
+    run_trace(fast, ops, ga_f)
+    for f in dataclasses.fields(Traffic):
+        assert getattr(ref.traffic, f.name) == getattr(fast.traffic, f.name), (
+            f.name, ref.traffic, fast.traffic)
+    # modeled clocks agree too (identical charging rules)
+    np.testing.assert_allclose(fast.clock, ref.clock, rtol=1e-9, atol=1e-12)
+
+
+def test_scale_engine_capacity_eviction_monotone():
+    """Smaller cache -> at least as many fetches (capacity misses)."""
+    fetches = {}
+    for cap in (None, 8, 2):
+        rt = RegCScaleRuntime(1, page_words=64, cache_pages=cap,
+                              model_mechanism=False, prefetch=0)
+        ga = rt.alloc(64 * 16)
+        for sweep in range(3):
+            for p in range(16):
+                rt.read(0, ga, p * 64, p * 64 + 64)
+        fetches[cap] = rt.traffic.page_fetches
+    assert fetches[None] <= fetches[8] <= fetches[2]
+    assert fetches[2] == 3 * 16          # thrashing: every page refetched
+
+
+def test_mechanism_costs_fine_vs_page():
+    """The paper's §IV mechanisms: instrumented stores charge per word
+    (fine), write faults charge per page-epoch (page)."""
+    def run(proto):
+        rt = RegCScaleRuntime(1, page_words=1024, protocol=proto,
+                              model_mechanism=True)
+        ga = rt.alloc(8 * 1024)
+        for it in range(4):
+            rt.write(0, ga, 0, 8 * 1024)
+            rt.barrier()
+        return rt
+
+    fine = run(FINE_PROTO)
+    page = run(PAGE_PROTO)
+    # fine pays instrumentation on every stored word, all iterations
+    from repro.core.regc_scale import FAULT_S, INSTR_S_PER_WORD
+    assert fine.time >= 4 * 8 * 1024 * INSTR_S_PER_WORD
+    # page pays one fault per page per write epoch (flush re-arms)
+    assert page.time >= 4 * 8 * FAULT_S
+    # traffic identical (same ordinary-region protocol)
+    assert fine.traffic.writeback_bytes == page.traffic.writeback_bytes
+
+
+def test_scale_fine_beats_page_on_small_span_updates():
+    """Paper Table I / §V: consistency-region updates move diffs (fine) vs
+    whole pages (page) — 64 workers, steady state (cold fetches amortized)."""
+    totals = {}
+    for proto in (FINE_PROTO, PAGE_PROTO):
+        rt = RegCScaleRuntime(64, page_words=1024, protocol=proto,
+                              model_mechanism=False)
+        ga = rt.alloc(1024)
+        base = None
+        for it in range(8):
+            for w in range(64):
+                with rt.span(w, 0):
+                    rt.write(w, ga, 3, 5)   # 2-word critical-section update
+                rt.read(w, ga, 3, 5)
+            if it == 0:
+                base = rt.traffic.total_bytes      # cold-start iteration
+        totals[proto] = rt.traffic.total_bytes - base
+    assert totals[FINE_PROTO] < totals[PAGE_PROTO] / 5, totals
