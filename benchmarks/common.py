@@ -1,11 +1,13 @@
 """Shared benchmark plumbing: runtime factory (paper series names), steady-
-state timing, CSV emission."""
+state timing, CSV + machine-readable JSON emission."""
 from __future__ import annotations
 
 import csv
+import json
 import os
+import warnings
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO
 from repro.core.regc_scale import RegCScaleRuntime
@@ -37,7 +39,16 @@ class SteadyState:
         self.times.append(rt.time)
 
     def per_iter(self) -> float:
-        assert len(self.times) >= 3, "need >= 3 iterations"
+        if not self.times:
+            raise ValueError("per_iter(): no iterations recorded")
+        if len(self.times) < 3:
+            warnings.warn(
+                f"per_iter(): only {len(self.times)} iteration(s) recorded; "
+                "steady-state estimate degrades to mean of available "
+                "(run with --iters >= 3 for a cold-start-free figure)",
+                RuntimeWarning, stacklevel=2)
+            if len(self.times) == 1:
+                return self.times[0]
         return (self.times[-1] - self.times[0]) / (len(self.times) - 1)
 
 
@@ -60,3 +71,55 @@ def print_rows(rows: List[Dict]):
     for r in rows:
         print(",".join(str(v) for v in r.values()), flush=True)
     print()
+
+
+# ---------------------------------------------------------------------------
+# machine-readable results (BENCH_scale.json) for perf-trajectory tracking
+# ---------------------------------------------------------------------------
+
+
+def bench_json_rows(rows: List[Dict]) -> List[Dict]:
+    """Normalize section rows to the BENCH_scale.json schema:
+    {section, protocol, W, t_wall_s, t_model_s, total_bytes}.  Handles the
+    three row shapes the harness produces: protocol sections (figure/
+    series/p), regc_training (policy), and roofline (arch/shape/mesh)."""
+    out = []
+    for r in rows:
+        if "series" in r:              # protocol sections
+            out.append({
+                "section": r["figure"], "protocol": r["series"],
+                "W": r["p"], "t_wall_s": r.get("t_wall_s"),
+                "t_model_s": r.get("t_model_s", r.get("t_iter_s")),
+                "total_bytes": r.get("net_bytes", 0)})
+        elif "policy" in r:            # regc_training (8-way DP mesh)
+            out.append({
+                "section": "regc_training", "protocol": r["policy"],
+                "W": 8, "t_wall_s": r.get("wall_s_per_step"),
+                "t_model_s": None,
+                "total_bytes": r.get("collective_bytes_per_dev", 0)})
+        elif "mesh" in r:              # roofline (modeled per-cell times)
+            devs = 1
+            for d in str(r["mesh"]).split("x"):
+                devs *= int(d)
+            t_model = (r.get("t_compute_ms", 0) + r.get("t_memory_ms", 0)
+                       + r.get("t_collective_ms", 0)) / 1e3
+            out.append({
+                "section": f"roofline_{r.get('variant', '?')}",
+                "protocol": f"{r.get('arch', '?')}:{r.get('shape', '?')}",
+                "W": devs, "t_wall_s": None,
+                "t_model_s": round(t_model, 6), "total_bytes": 0})
+        else:
+            out.append({"section": "?", "protocol": "?", "W": 0,
+                        "t_wall_s": None, "t_model_s": None,
+                        "total_bytes": 0, "raw": r})
+    return out
+
+
+def write_bench_json(path, rows: List[Dict],
+                     meta: Optional[Dict] = None) -> Path:
+    p = Path(path)
+    if str(p.parent) not in ("", "."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"meta": meta or {}, "rows": bench_json_rows(rows)}
+    p.write_text(json.dumps(payload, indent=1) + "\n")
+    return p

@@ -8,8 +8,10 @@ reduction} + the Pthreads baseline.  Speedup is relative to 1-core Pthreads
 from __future__ import annotations
 
 import argparse
+import time
 
-from benchmarks.common import SteadyState, make_rt, print_rows, write_csv
+from benchmarks.common import (SteadyState, make_rt, print_rows,
+                               write_bench_json, write_csv)
 from repro.dsm.apps import jacobi, jacobi_flops_per_iter
 
 N_BASE = 4096
@@ -18,14 +20,15 @@ CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 def _run(series: str, mode: str, p: int, n: int, iters: int):
     ss = SteadyState()
+    t0 = time.perf_counter()
     rt = make_rt(series, p)
     jacobi(rt, n, iters, mode=mode, on_iter=ss)
-    return ss.per_iter(), rt
+    return ss.per_iter(), rt, time.perf_counter() - t0
 
 
 def strong(iters: int):
     rows = []
-    t_ref, _ = _run("pthreads", "reduction", 1, N_BASE, iters)
+    t_ref, _, _ = _run("pthreads", "reduction", 1, N_BASE, iters)
     variants = [("pthreads", "reduction", "pthreads")] + [
         (s, m, f"{s}_{m}")
         for s in ("samhita", "samhita_page") for m in ("lock", "reduction")]
@@ -33,13 +36,15 @@ def strong(iters: int):
         for series, mode, tag in variants:
             if series == "pthreads" and p > 8:
                 continue
-            t, rt = _run(series, mode, p, N_BASE, iters)
+            t, rt, t_wall = _run(series, mode, p, N_BASE, iters)
             rows.append({"figure": "fig5_strong", "series": tag, "p": p,
                          "n": N_BASE, "t_iter_s": round(t, 6),
                          "speedup": round(t_ref / t, 3),
                          "net_bytes": rt.traffic.total_bytes,
                          "invalidations": rt.traffic.invalidations,
-                         "diff_bytes": rt.traffic.diff_bytes})
+                         "diff_bytes": rt.traffic.diff_bytes,
+                         "t_model_s": round(rt.time, 6),
+                         "t_wall_s": round(t_wall, 4)})
     return rows
 
 
@@ -57,12 +62,14 @@ def weak(iters: int):
                 ("samhita_page", "reduction", "samhita_page_reduction")):
             if series == "pthreads" and p > 8:
                 continue
-            t, rt = _run(series, mode, p, n, iters)
+            t, rt, t_wall = _run(series, mode, p, n, iters)
             rate = (n * n) / t
             rows.append({"figure": "fig6_weak", "series": tag, "p": p,
                          "n": n, "t_iter_s": round(t, 6),
                          "Mpoints_per_s": round(rate / 1e6, 2),
-                         "net_bytes": rt.traffic.total_bytes})
+                         "net_bytes": rt.traffic.total_bytes,
+                         "t_model_s": round(rt.time, 6),
+                         "t_wall_s": round(t_wall, 4)})
     return rows
 
 
@@ -71,6 +78,8 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=8)
     ap.add_argument("--weak", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     rows = []
     if args.all or not args.weak:
@@ -78,6 +87,8 @@ def main(argv=None):
     if args.all or args.weak:
         rows += weak(args.iters)
     write_csv("jacobi", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
     print_rows(rows)
     return rows
 

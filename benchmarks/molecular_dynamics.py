@@ -4,8 +4,10 @@ loop's stores are instrumented even though they're ordinary-region)."""
 from __future__ import annotations
 
 import argparse
+import time
 
-from benchmarks.common import SteadyState, make_rt, print_rows, write_csv
+from benchmarks.common import (SteadyState, make_rt, print_rows,
+                               write_bench_json, write_csv)
 from repro.dsm.apps import molecular_dynamics
 
 N_PARTICLES = 8192
@@ -14,18 +16,21 @@ CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 def _run(series: str, mode: str, p: int, n: int, iters: int):
     ss = SteadyState()
+    t0 = time.perf_counter()
     rt = make_rt(series, p)
     molecular_dynamics(rt, n, iters, mode=mode, on_iter=ss)
-    return ss.per_iter(), rt
+    return ss.per_iter(), rt, time.perf_counter() - t0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=6)
     ap.add_argument("--particles", type=int, default=N_PARTICLES)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     n = args.particles
-    t_ref, _ = _run("pthreads", "reduction", 1, n, args.iters)
+    t_ref, _, _ = _run("pthreads", "reduction", 1, n, args.iters)
     rows = []
     for p in CORES:
         for series, mode, tag in (
@@ -36,12 +41,16 @@ def main(argv=None):
                 ("samhita_page", "reduction", "samhita_page_reduction")):
             if series == "pthreads" and p > 8:
                 continue
-            t, rt = _run(series, mode, p, n, args.iters)
+            t, rt, t_wall = _run(series, mode, p, n, args.iters)
             rows.append({"figure": "fig7_md", "series": tag, "p": p,
                          "n_particles": n, "t_iter_s": round(t, 6),
                          "speedup": round(t_ref / t, 3),
-                         "net_bytes": rt.traffic.total_bytes})
+                         "net_bytes": rt.traffic.total_bytes,
+                         "t_model_s": round(rt.time, 6),
+                         "t_wall_s": round(t_wall, 4)})
     write_csv("molecular_dynamics", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
     print_rows(rows)
     return rows
 

@@ -34,8 +34,8 @@ from repro.regc_sync.policies import RegCSyncPolicy
 from repro.train.train_step import TrainHParams, make_train_step_regc
 
 cfg = get_reduced("internlm2-1.8b", n_periods=2)
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 params = M.init_model_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 opt = init_opt_state(params)
 ks = jax.random.split(jax.random.PRNGKey(1), 2)

@@ -1,40 +1,80 @@
 """Benchmark orchestrator — one section per paper figure/table plus the
-framework-level benches.  ``python -m benchmarks.run [--fast]``."""
+framework-level benches.  ``python -m benchmarks.run [--fast] [--json OUT]``.
+
+Each section is wall-clock timed and failure-isolated (a section that
+cannot run in this container — e.g. a jax-version mismatch — is recorded
+as an error instead of aborting the harness), and the combined results are
+written to a machine-readable ``BENCH_scale.json`` so future changes can
+track the perf trajectory: per-point modeled time + exact traffic, per-
+section wall seconds.
+"""
 from __future__ import annotations
 
 import argparse
-import sys
 import time
+import traceback
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="fewer iterations / skip the slowest sections")
+    ap.add_argument("--json", default="BENCH_scale.json", metavar="OUT",
+                    help="write machine-readable results here "
+                         "('' disables; default: %(default)s)")
     args = ap.parse_args(argv)
     iters = 4 if args.fast else 8
 
-    from benchmarks import (jacobi, molecular_dynamics, regc_training,
-                            roofline, stream_triad)
+    from benchmarks import (common, jacobi, molecular_dynamics,
+                            regc_training, roofline, stream_triad)
+
+    sections = [
+        ("stream_triad (paper Figs. 2/3/4)", "stream_triad", False,
+         lambda: stream_triad.main(["--all", "--iters", str(iters)])),
+        ("Jacobi (paper Figs. 5/6)", "jacobi", False,
+         lambda: jacobi.main(["--all", "--iters", str(iters)])),
+        ("Molecular dynamics (paper Fig. 7)", "molecular_dynamics", False,
+         lambda: molecular_dynamics.main(
+             ["--iters", str(max(4, iters // 2))])),
+        # jax-compile-bound (subprocess trainer), not a protocol section
+        ("RegC training-layer sync policies (DESIGN.md 2.2)",
+         "regc_training", True, lambda: regc_training.main([])),
+        ("Roofline summary (from dry-run artifacts)", "roofline", False,
+         lambda: roofline.main(["--mesh", "16x16"])),
+    ]
 
     t0 = time.time()
-    print("== STREAM TRIAD (paper Figs. 2/3/4) ==", flush=True)
-    stream_triad.main(["--all", "--iters", str(iters)])
+    all_rows = []
+    section_meta = {}
+    for title, name, slow, fn in sections:
+        if slow and args.fast:
+            print(f"== {title} == (skipped: --fast)", flush=True)
+            section_meta[name] = {"wall_s": 0.0, "status": "skipped (--fast)"}
+            continue
+        print(f"== {title} ==", flush=True)
+        s0 = time.time()
+        try:
+            rows = fn() or []
+            status = "ok" if rows else "no data"
+        except Exception as e:
+            rows = []
+            status = f"error: {type(e).__name__}: {e}"
+            print(f"section {name} failed: {status}", flush=True)
+            traceback.print_exc()
+        section_meta[name] = {"wall_s": round(time.time() - s0, 2),
+                              "status": status}
+        all_rows += rows
 
-    print("== Jacobi (paper Figs. 5/6) ==", flush=True)
-    jacobi.main(["--all", "--iters", str(iters)])
-
-    print("== Molecular dynamics (paper Fig. 7) ==", flush=True)
-    molecular_dynamics.main(["--iters", str(max(4, iters // 2))])
-
-    print("== RegC training-layer sync policies (DESIGN.md 2.2) ==",
-          flush=True)
-    regc_training.main([])
-
-    print("== Roofline summary (from dry-run artifacts) ==", flush=True)
-    roofline.main(["--mesh", "16x16"])
-
-    print(f"total bench time: {time.time() - t0:.1f}s")
+    total = time.time() - t0
+    print(f"total bench time: {total:.1f}s")
+    if args.json:
+        path = common.write_bench_json(
+            args.json, all_rows,
+            meta={"fast": bool(args.fast), "iters": iters,
+                  "total_wall_s": round(total, 2),
+                  "sections": section_meta})
+        print(f"wrote {path}")
+    return all_rows
 
 
 if __name__ == "__main__":

@@ -8,8 +8,10 @@ per-iteration time (asserted steady in tests/test_paper_claims.py).
 from __future__ import annotations
 
 import argparse
+import time
 
-from benchmarks.common import SERIES, SteadyState, make_rt, print_rows, write_csv
+from benchmarks.common import (SERIES, SteadyState, make_rt, print_rows,
+                               write_bench_json, write_csv)
 from repro.dsm.apps import stream_triad, triad_bytes_per_iter
 
 N_BASE = 16 << 20          # paper: n = 16M doubles-worth of fp32 words
@@ -20,19 +22,27 @@ def bw_gbs(n: int, t_iter: float) -> float:
     return triad_bytes_per_iter(n) / t_iter / 1e9
 
 
+def _point(figure: str, series: str, p: int, n: int, iters: int, **rt_kw):
+    ss = SteadyState()
+    t0 = time.perf_counter()
+    rt = make_rt(series if series in SERIES else "samhita", p, **rt_kw)
+    stream_triad(rt, n, iters, on_iter=ss)
+    t_wall = time.perf_counter() - t0
+    return {"figure": figure, "series": series, "p": p, "n": n,
+            "t_iter_s": round(ss.per_iter(), 6),
+            "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
+            "net_bytes": rt.traffic.total_bytes,
+            "t_model_s": round(rt.time, 6),
+            "t_wall_s": round(t_wall, 4)}
+
+
 def strong(iters: int):
     rows = []
     for p in CORES:
         for series in SERIES:
             if series == "pthreads" and p > 8:
                 continue       # Pthreads exists only within one node
-            ss = SteadyState()
-            rt = make_rt(series, p)
-            stream_triad(rt, N_BASE, iters, on_iter=ss)
-            rows.append({"figure": "fig2_strong", "series": series, "p": p,
-                         "n": N_BASE, "t_iter_s": round(ss.per_iter(), 6),
-                         "bandwidth_GBs": round(bw_gbs(N_BASE, ss.per_iter()), 3),
-                         "net_bytes": rt.traffic.total_bytes})
+            rows.append(_point("fig2_strong", series, p, N_BASE, iters))
     return rows
 
 
@@ -43,13 +53,7 @@ def weak(iters: int):
         for series in SERIES:
             if series == "pthreads" and p > 8:
                 continue
-            ss = SteadyState()
-            rt = make_rt(series, p)
-            stream_triad(rt, n, iters, on_iter=ss)
-            rows.append({"figure": "fig3_weak", "series": series, "p": p,
-                         "n": n, "t_iter_s": round(ss.per_iter(), 6),
-                         "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
-                         "net_bytes": rt.traffic.total_bytes})
+            rows.append(_point("fig3_weak", series, p, n, iters))
     return rows
 
 
@@ -60,14 +64,9 @@ def spill(iters: int):
     for p in CORES:
         for scale, tag in ((1, "fits"), (2, "spills")):
             n = N_BASE * p * scale
-            ss = SteadyState()
-            rt = make_rt("samhita", p, cache_pages=cache_pages)
-            stream_triad(rt, n, iters, on_iter=ss)
-            rows.append({"figure": "fig4_spill", "series": f"samhita_{tag}",
-                         "p": p, "n": n,
-                         "t_iter_s": round(ss.per_iter(), 6),
-                         "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
-                         "net_bytes": rt.traffic.total_bytes})
+            r = _point("fig4_spill", f"samhita_{tag}", p, n, iters,
+                       cache_pages=cache_pages)
+            rows.append(r)
     return rows
 
 
@@ -77,6 +76,8 @@ def main(argv=None):
     ap.add_argument("--weak", action="store_true")
     ap.add_argument("--spill", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     rows = []
     if args.all or not (args.weak or args.spill):
@@ -86,6 +87,8 @@ def main(argv=None):
     if args.all or args.spill:
         rows += spill(max(4, args.iters // 2))
     write_csv("stream_triad", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
     print_rows(rows)
     return rows
 

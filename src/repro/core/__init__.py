@@ -1,3 +1,5 @@
+from repro.core.directory import IntervalLog, RegionDirectory
 from repro.core.regc import (
     FINE_PROTO, GasArray, IDEAL_PROTO, PAGE_PROTO, RegCRuntime, Traffic,
 )
+from repro.core.regc_scale import RegCScaleRuntime

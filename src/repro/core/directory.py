@@ -1,0 +1,268 @@
+"""Region-level sharing directory for the vectorized RegC protocol engine.
+
+The reference ``RegCRuntime`` and the original scale engine both kept page
+state per (worker, region) — a dict of per-worker ``_Window`` arrays.  Every
+cross-worker protocol event (sharer invalidation on an ordinary flush, lock
+notice replay, barrier sync) then became a Python loop over all workers,
+which is what made 256-worker runs protocol-bound in the *simulator* rather
+than in the modeled network.
+
+``RegionDirectory`` turns the worker axis into an array axis: one object per
+allocation region holds ``valid`` / ``dirty`` / ``wprot`` / ``touch`` as 2D
+``(W, window)`` arrays.  Rows are workers.  Because the paper's benchmarks
+block-partition each array (own block + halo), rows cover *different* page
+intervals of the region; storing the union window densely would cost
+W x region_pages.  Instead every row carries its own base offset: column
+``j`` of row ``w`` is absolute page ``base[w] + j``, and all rows share one
+column capacity (the max touched-window size).  Memory stays O(pages
+actually touched), like the old per-worker windows, while cross-worker
+operations become single gather/scatter numpy ops over the worker axis:
+
+* ``invalidate_sharers`` — one boolean-mask op over all overlapping rows
+  instead of a Python loop over ``range(W)``;
+* ``dirty_cells``       — enumerate every (worker, page) dirty pair of the
+  region at once, in worker-major order (== the sequential flush order);
+* ``window_cover``      — interval-stabbing count of how many worker
+  windows contain each page (lets the barrier flush skip the unshared
+  majority of pages analytically);
+* ``gather_valid``      — the (rows x pages) validity matrix for an
+  arbitrary page set, used by both invalidation and notice replay.
+
+``IntervalLog`` is the companion structure for lock notices: a flat,
+amortized-growth ``(page, lo, hi)`` array segmented by release version, so
+replaying "all notices since this worker last acquired" is an O(1) slice
+plus a vectorized per-page segment-min/max coalesce instead of nested dict
+loops over versions x notices.
+
+Exactness invariant (see DIRECTORY.md): these are pure representation
+changes — the protocol rules and the traffic ledger are byte-identical to
+the reference runtime, which ``tests/test_regc_scale.py`` and
+``tests/test_directory.py`` cross-validate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class RegionDirectory:
+    """2D per-worker page state of one allocation region.
+
+    Cells outside a row's live window ``[0, length[w])`` always hold the
+    init values (valid=False, dirty=False, wprot=True, touch=0), so window
+    extension to the right is free and whole-array reductions are safe.
+    """
+
+    __slots__ = ("W", "region", "page_lo", "page_hi", "base", "length",
+                 "cap", "valid", "dirty", "wprot", "touch", "incache",
+                 "shift", "maybe_dirty", "_cov_stale", "_sorted_bases",
+                 "_sorted_ends")
+
+    def __init__(self, n_workers: int, region: int, page_lo: int,
+                 page_hi: int, *, track_wprot: bool = False,
+                 track_touch: bool = False):
+        self.W = n_workers
+        self.region = region
+        self.page_lo = page_lo
+        self.page_hi = page_hi
+        self.base = np.full(n_workers, -1, np.int64)
+        self.length = np.zeros(n_workers, np.int64)
+        self.cap = 0
+        self.valid = np.zeros((n_workers, 0), bool)
+        self.dirty = np.zeros((n_workers, 0), bool)
+        self.wprot = np.zeros((n_workers, 0), bool) if track_wprot else None
+        # LRU bookkeeping (cache_pages runs only).  ``incache`` is cache
+        # *occupancy*, distinct from ``valid``: the reference runtime keeps
+        # invalidated pages in its LRU dict until they are evicted, so a
+        # page can occupy a cache slot while invalid.
+        self.touch = np.zeros((n_workers, 0), np.int64) if track_touch else None
+        self.incache = np.zeros((n_workers, 0), bool) if track_touch else None
+        # cumulative left-extension shift per row: lets LRU-queue entries
+        # recorded before a window grew leftwards map to current columns
+        self.shift = np.zeros(n_workers, np.int64)
+        self.maybe_dirty = False
+        self._cov_stale = True
+        self._sorted_bases: Optional[np.ndarray] = None
+        self._sorted_ends: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # window management
+    # ------------------------------------------------------------------
+
+    def _grow_cap(self, need: int):
+        new_cap = max(need, 2 * self.cap)
+        pad = new_cap - self.cap
+        self.valid = np.pad(self.valid, ((0, 0), (0, pad)))
+        self.dirty = np.pad(self.dirty, ((0, 0), (0, pad)))
+        if self.wprot is not None:
+            self.wprot = np.pad(self.wprot, ((0, 0), (0, pad)),
+                                constant_values=True)
+        if self.touch is not None:
+            self.touch = np.pad(self.touch, ((0, 0), (0, pad)))
+            self.incache = np.pad(self.incache, ((0, 0), (0, pad)))
+        self.cap = new_cap
+
+    def ensure(self, w: int, lo: int, hi: int):
+        """Grow row w's window to cover absolute pages [lo, hi)."""
+        b = self.base[w]
+        if b < 0:
+            if hi - lo > self.cap:
+                self._grow_cap(hi - lo)
+            self.base[w] = lo
+            self.length[w] = hi - lo
+            self._cov_stale = True
+            return
+        changed = False
+        if lo < b:
+            pad = int(b - lo)
+            n = int(self.length[w])
+            if n + pad > self.cap:
+                self._grow_cap(n + pad)
+            for arr, init in ((self.valid, False), (self.dirty, False),
+                              (self.wprot, True), (self.touch, 0),
+                              (self.incache, False)):
+                if arr is None:
+                    continue
+                row = arr[w]
+                row[pad:pad + n] = row[:n]
+                row[:pad] = init
+            self.base[w] = lo
+            self.length[w] = n + pad
+            self.shift[w] += pad
+            b = lo
+            changed = True
+        if hi > b + self.length[w]:
+            n = int(hi - b)
+            if n > self.cap:
+                self._grow_cap(n)
+            self.length[w] = n
+            changed = True
+        if changed:
+            self._cov_stale = True
+
+    def sl(self, w: int, lo: int, hi: int) -> slice:
+        b = int(self.base[w])
+        return slice(lo - b, hi - b)
+
+    # ------------------------------------------------------------------
+    # cross-worker vector primitives
+    # ------------------------------------------------------------------
+
+    def overlap_rows(self, lo: int, hi: int,
+                     exclude: Optional[int] = None) -> np.ndarray:
+        """Workers whose window intersects absolute pages [lo, hi)."""
+        m = (self.base >= 0) & (self.base < hi) & (self.base + self.length > lo)
+        if exclude is not None:
+            m[exclude] = False
+        return np.nonzero(m)[0]
+
+    def gather_valid(self, rows: np.ndarray,
+                     pages: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(len(rows), len(pages)) validity matrix plus the column-index
+        matrix (for scattering back).  Out-of-window cells read False."""
+        cols = pages[None, :] - self.base[rows][:, None]
+        inr = (cols >= 0) & (cols < self.length[rows][:, None])
+        sub = self.valid[rows[:, None], np.where(inr, cols, 0)] & inr
+        return sub, cols
+
+    def clear_valid_cells(self, rows: np.ndarray, cols: np.ndarray,
+                          hit: np.ndarray) -> np.ndarray:
+        """Clear valid at the True cells of ``hit`` (a (rows x pages) mask
+        aligned with ``cols``); returns per-row cleared counts."""
+        ri, ci = np.nonzero(hit)
+        if ri.size:
+            self.valid[rows[ri], cols[ri, ci]] = False
+        return hit.sum(axis=1)
+
+    def _refresh_bounds(self):
+        if self._cov_stale:
+            live = self.base >= 0
+            self._sorted_bases = np.sort(self.base[live])
+            self._sorted_ends = np.sort((self.base + self.length)[live])
+            self._cov_stale = False
+
+    def shared_intervals(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Absolute page intervals covered by >= 2 worker windows, as
+        (starts, ends) arrays — a sweep over the 2W window bounds.  Pages
+        outside these intervals cannot have sharers, so barrier flushes
+        skip them without per-page work."""
+        self._refresh_bounds()
+        b, e = self._sorted_bases, self._sorted_ends
+        if b.size < 2:
+            z = np.zeros(0, np.int64)
+            return z, z
+        pts = np.concatenate([b, e])
+        delta = np.concatenate([np.ones(b.size, np.int64),
+                                np.full(e.size, -1, np.int64)])
+        order = np.argsort(pts, kind="stable")
+        pts = pts[order]
+        cover = np.cumsum(delta[order])
+        multi = cover >= 2
+        edge = np.diff(np.concatenate([[False], multi]).astype(np.int8))
+        starts = pts[np.nonzero(edge == 1)[0]]
+        ends_i = np.nonzero(edge == -1)[0]
+        ends = pts[ends_i]
+        if multi[-1]:
+            ends = np.concatenate([ends, pts[-1:]])
+        keep = ends > starts
+        return starts[keep], ends[keep]
+
+    def row_dirty_cols(self, w: int) -> np.ndarray:
+        n = int(self.length[w])
+        return np.nonzero(self.dirty[w, :n])[0]
+
+
+class IntervalLog:
+    """Flat, version-segmented (page, lo, hi) notice log for one lock.
+
+    ``append_version`` records one release's notices; ``pending`` returns
+    the per-page coalesced (min lo, max hi) intervals of every version in
+    ``[v_from, v_to)`` — a slice of the flat arrays plus one vectorized
+    segment-min/max, replacing the reference's dict-merge over versions.
+    Pages come back sorted ascending, matching the reference's
+    ``sorted(pending.items())`` replay order.
+    """
+
+    __slots__ = ("_p", "_lo", "_hi", "_n", "voff")
+
+    def __init__(self):
+        self._p = np.zeros(8, np.int64)
+        self._lo = np.zeros(8, np.int64)
+        self._hi = np.zeros(8, np.int64)
+        self._n = 0
+        self.voff = [0]
+
+    def _reserve(self, k: int):
+        need = self._n + k
+        if need > self._p.size:
+            cap = max(need, 2 * self._p.size)
+            for name in ("_p", "_lo", "_hi"):
+                arr = getattr(self, name)
+                new = np.zeros(cap, np.int64)
+                new[:self._n] = arr[:self._n]
+                setattr(self, name, new)
+
+    def append_version(self, pages, los, his):
+        k = len(pages)
+        self._reserve(k)
+        n = self._n
+        self._p[n:n + k] = pages
+        self._lo[n:n + k] = los
+        self._hi[n:n + k] = his
+        self._n = n + k
+        self.voff.append(self._n)
+
+    def pending(self, v_from: int, v_to: int):
+        """Coalesced (pages, lo_min, hi_max) over versions [v_from, v_to)."""
+        a, b = self.voff[v_from], self.voff[v_to]
+        if a == b:
+            e = np.zeros(0, np.int64)
+            return e, e, e
+        seg_p = self._p[a:b]
+        u, inv = np.unique(seg_p, return_inverse=True)
+        lo_min = np.full(u.size, np.iinfo(np.int64).max, np.int64)
+        hi_max = np.full(u.size, np.iinfo(np.int64).min, np.int64)
+        np.minimum.at(lo_min, inv, self._lo[a:b])
+        np.maximum.at(hi_max, inv, self._hi[a:b])
+        return u, lo_min, hi_max

@@ -1,19 +1,30 @@
-"""Vectorized RegC protocol engine for paper-scale runs (256 workers).
+"""Directory-vectorized RegC protocol engine for paper-scale runs.
 
 Same protocol as ``core.regc.RegCRuntime`` — same rules, same traffic
-accounting — but metadata-only and interval-vectorized so the paper's
-figures (STREAM TRIAD / Jacobi / MD up to 256 cores, millions of pages) run
-in seconds.  ``tests/test_regc_scale.py`` cross-validates the traffic
-counters against the reference runtime on random traces.
+accounting — but all cross-worker paths are vectorized over the worker axis
+through a per-region sharing directory (``core.directory.RegionDirectory``)
+so the paper's figures (STREAM TRIAD / Jacobi / MD up to 256 cores,
+millions of pages) run in seconds.  ``tests/test_regc_scale.py`` and
+``tests/test_directory.py`` cross-validate the traffic counters (exactly)
+and the modeled clocks (to float tolerance) against the reference runtime.
 
 Key representation choices:
 
-* cache state is per (worker, allocation-region) *window* — a numpy array
-  over the contiguous page range of that region the worker actually touches
-  (workers in the paper's benchmarks access contiguous blocks + halos), so
-  state is O(touched), never O(n_pages x workers);
-* reads/writes are per-*interval* (vectorized over the page range), not
-  per-page Python loops;
+* page state is per *region*: ``valid/dirty/wprot/touch`` live in one 2D
+  ``(W, window)`` directory per allocation region, rows = workers, each row
+  offset to the worker's touched window, so memory is O(touched) while
+  sharer invalidation, barrier flushes, and notice replay are single
+  boolean-mask / gather-scatter numpy ops instead of ``range(W)`` loops;
+* reads/writes are per-*interval* (vectorized over the page range);
+* eviction is watermark-triggered: a per-worker resident counter makes the
+  common no-eviction case O(1), and when the watermark is crossed the
+  oldest pages are selected in one batched argpartition at the *end* of
+  the op.  Per-page monotone touch ticks make the victim set identical to
+  the reference runtime's per-op LRU (proved equivalent because no page is
+  re-touched after its last tick within an op — see DIRECTORY.md);
+* lock notices are flat, version-segmented numpy interval logs
+  (``core.directory.IntervalLog``); acquire/barrier replay is one slice +
+  segment-min/max coalesce per (lock, worker);
 * span-touched pages stay in small dicts (critical sections touch few
   pages — that is the paper's whole point).
 
@@ -30,11 +41,12 @@ store-tracking *mechanisms* (§IV):
 from __future__ import annotations
 
 import bisect
-import dataclasses
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.directory import IntervalLog, RegionDirectory
 from repro.core.regc import (FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, GasArray,
                              Traffic, _WORD)
 from repro.dsm.costmodel import CostModel, IB_2013
@@ -46,53 +58,6 @@ INSTR_S_PER_WORD = 1.5e-9
 FAULT_S = 4.0e-6
 
 
-class _Window:
-    """Windowed page state of one (worker, region)."""
-
-    __slots__ = ("region", "base", "valid", "dirty", "wprot", "touch")
-
-    def __init__(self, region: int):
-        self.region = region
-        self.base = -1
-        self.valid = np.zeros(0, bool)
-        self.dirty = np.zeros(0, bool)     # ordinary-region dirty pages
-        self.wprot = np.zeros(0, bool)     # page proto: write-protected
-        self.touch = np.zeros(0, np.int64)
-
-    def ensure(self, lo: int, hi: int):
-        if self.base < 0:
-            self.base = lo
-            n = hi - lo
-            self.valid = np.zeros(n, bool)
-            self.dirty = np.zeros(n, bool)
-            self.wprot = np.ones(n, bool)
-            self.touch = np.zeros(n, np.int64)
-            return
-        if lo < self.base:
-            pad = self.base - lo
-            self.valid = np.concatenate([np.zeros(pad, bool), self.valid])
-            self.dirty = np.concatenate([np.zeros(pad, bool), self.dirty])
-            self.wprot = np.concatenate([np.ones(pad, bool), self.wprot])
-            self.touch = np.concatenate([np.zeros(pad, np.int64), self.touch])
-            self.base = lo
-        if hi > self.base + self.valid.size:
-            pad = hi - (self.base + self.valid.size)
-            self.valid = np.concatenate([self.valid, np.zeros(pad, bool)])
-            self.dirty = np.concatenate([self.dirty, np.zeros(pad, bool)])
-            self.wprot = np.concatenate([self.wprot, np.ones(pad, bool)])
-            self.touch = np.concatenate([self.touch, np.zeros(pad, np.int64)])
-
-    def sl(self, lo: int, hi: int) -> slice:
-        return slice(lo - self.base, hi - self.base)
-
-    def intersect(self, lo: int, hi: int) -> Optional[Tuple[int, int]]:
-        if self.base < 0:
-            return None
-        lo = max(lo, self.base)
-        hi = min(hi, self.base + self.valid.size)
-        return (lo, hi) if lo < hi else None
-
-
 class _Span:
     __slots__ = ("lock", "touched")
 
@@ -102,17 +67,17 @@ class _Span:
 
 
 class _Lock:
-    __slots__ = ("version", "notices", "last_release_time", "seen")
+    __slots__ = ("version", "log", "last_release_time", "seen")
 
     def __init__(self, n_workers):
         self.version = 0
-        self.notices: List[List[Tuple[int, int, int]]] = []
+        self.log = IntervalLog()
         self.last_release_time = 0.0
         self.seen = np.zeros(n_workers, np.int64)
 
 
 class RegCScaleRuntime:
-    """Drop-in (metadata-only) scale version of RegCRuntime."""
+    """Drop-in (metadata-only) directory-vectorized version of RegCRuntime."""
 
     def __init__(self, n_workers: int, *, page_words: int = 1024,
                  protocol: str = FINE_PROTO, cost: CostModel = IB_2013,
@@ -136,16 +101,27 @@ class RegCScaleRuntime:
         # pages costs ceil(k/fetch_batch) request/reply pairs, not k.
         # fetch_batch=1 == reference runtime accounting.
         self.fetch_batch = max(1, fetch_batch)
+        self._track_wprot = (protocol == PAGE_PROTO and model_mechanism)
+        self._track_touch = cache_pages is not None
 
         self.n_pages = 0
         self._region_starts: List[int] = []     # sorted page_lo per region
         self._region_ends: List[int] = []
-        # windows[w][region] created lazily
-        self.windows: List[Dict[int, _Window]] = [dict() for _ in range(n_workers)]
+        self._region_starts_np = np.zeros(0, np.int64)
+        self.dirs: List[RegionDirectory] = []
         self.spans: List[List[_Span]] = [[] for _ in range(n_workers)]
         self.locks: Dict[int, _Lock] = {}
         self.clock = np.zeros(n_workers)
         self.traffic = Traffic()
+        # per-worker cache occupancy (valid + invalidated-but-not-evicted
+        # pages, matching the reference's LRU dict): the eviction watermark
+        self.resident = np.zeros(n_workers, np.int64)
+        # per-worker FIFO of touch runs [t0, region, col0, n, off, shift0]:
+        # ticks are globally monotone, so the queue is tick-ordered and an
+        # LRU pop is a front scan that lazily skips re-touched (stale) and
+        # already-evicted cells — amortized O(1) per page
+        self._lru_q: List[deque] = [deque() for _ in range(n_workers)]
+        self._dirty_regions: List[set] = [set() for _ in range(n_workers)]
         self._reductions: Dict[str, List[Tuple[float, str]]] = {}
         self._reduction_results: Dict[str, float] = {}
         self._tick = 0
@@ -156,6 +132,10 @@ class RegCScaleRuntime:
         ga = GasArray(self.n_pages, n_elems, self.page_words)
         self._region_starts.append(self.n_pages)
         self._region_ends.append(self.n_pages + pages)
+        self._region_starts_np = np.asarray(self._region_starts, np.int64)
+        self.dirs.append(RegionDirectory(
+            self.W, len(self.dirs), self.n_pages, self.n_pages + pages,
+            track_wprot=self._track_wprot, track_touch=self._track_touch))
         self.n_pages += pages
         return ga
 
@@ -163,13 +143,6 @@ class RegCScaleRuntime:
         i = bisect.bisect_right(self._region_starts, page) - 1
         assert 0 <= i and page < self._region_ends[i], page
         return i
-
-    def _window(self, w: int, region: int) -> _Window:
-        win = self.windows[w].get(region)
-        if win is None:
-            win = _Window(region)
-            self.windows[w][region] = win
-        return win
 
     def _net(self, w: int, n_bytes: float, msgs: int = 1):
         if self.protocol == IDEAL_PROTO:
@@ -189,49 +162,127 @@ class RegCScaleRuntime:
             self.clock[w] += n_words * self.instr_s_per_word
 
     # ------------------------------------------------------------------
-    # interval fetch / evict
+    # interval fetch / batched eviction
     # ------------------------------------------------------------------
 
     def _fetch_range(self, w: int, region: int, p_lo: int, p_hi: int):
         """Make pages [p_lo, p_hi) valid at w, charging misses."""
-        c = self._window(w, region)
-        c.ensure(p_lo, p_hi)
-        s = c.sl(p_lo, p_hi)
-        n_miss = int((~c.valid[s]).sum())
-        self._tick += 1
-        c.touch[s] = self._tick
-        if n_miss and self.protocol != IDEAL_PROTO:
-            self.traffic.page_fetches += n_miss
-            self.traffic.fetch_bytes += n_miss * self.page_bytes
-            n_req = -(-n_miss // self.fetch_batch)
-            self._net(w, n_miss * self.page_bytes, 2 * n_req)
-        c.valid[s] = True
-        self._evict(w)
+        d = self.dirs[region]
+        d.ensure(w, p_lo, p_hi)
+        s = d.sl(w, p_lo, p_hi)
+        n = p_hi - p_lo
+        n_miss = n - int(d.valid[w, s].sum())
+        if d.touch is not None:
+            # per-page monotone ticks: ascending within the interval, so
+            # batched eviction reproduces the reference's per-op LRU exactly
+            d.touch[w, s] = np.arange(self._tick + 1, self._tick + 1 + n)
+            self._lru_q[w].append([self._tick + 1, region, s.start, n, 0,
+                                   int(d.shift[w])])
+            n_enter = n - int(d.incache[w, s].sum())
+            if n_enter:
+                d.incache[w, s] = True
+                self.resident[w] += n_enter
+        self._tick += n
+        if n_miss:
+            if self.protocol != IDEAL_PROTO:
+                self.traffic.page_fetches += n_miss
+                self.traffic.fetch_bytes += n_miss * self.page_bytes
+                n_req = -(-n_miss // self.fetch_batch)
+                self._net(w, n_miss * self.page_bytes, 2 * n_req)
+            d.valid[w, s] = True
 
-    def _evict(self, w: int):
-        if self.cache_pages is None:
+    def _danger(self, w: int, n_enter: int, n: int) -> bool:
+        """Batched end-of-op eviction is exact unless this op can evict a
+        page of its *own* range (one already occupying a cache slot) before
+        touching it — the reference would then refetch / re-enter it
+        mid-op.  That needs both an in-cache page in the range
+        (n_enter < n) and an eviction this op; fully-cold ranges (the spill
+        benchmarks' steady state) and eviction-free ops stay on the batch
+        path."""
+        return (self.cache_pages is not None
+                and self.protocol != IDEAL_PROTO
+                and n_enter < n
+                and int(self.resident[w]) + n_enter > self.cache_pages)
+
+    def _evict_now(self, w: int, d: RegionDirectory, vc: np.ndarray):
+        """Evict the cells ``vc`` (ascending tick order) of w's row in
+        region d: dirty victims (valid or not) write back first — one
+        message per page, matching the reference's per-page eviction flush
+        — then both ``valid`` and the cache slot (``incache``) drop."""
+        db = vc[d.dirty[w, vc]]
+        if db.size:
+            d.dirty[w, db] = False
+            if self.protocol != IDEAL_PROTO:
+                self.traffic.writeback_bytes += db.size * self.page_bytes
+                self.clock[w] += (self.cost.net_latency_s * db.size
+                                  + db.size * self.page_bytes
+                                  / self.cost.net_bw_Bps)
+                if d.wprot is not None:
+                    d.wprot[w, db] = True
+                self._invalidate_sharers(w, d.region, d.base[w] + db)
+        d.valid[w, vc] = False
+        d.incache[w, vc] = False
+        self.resident[w] -= vc.size
+
+    def _evict_cells(self, w: int, k: int):
+        """Evict w's k least-recently-touched cache occupants by scanning
+        the tick-ordered run queue from the front, lazily skipping cells
+        that were re-touched (their live entry is a later run) or already
+        evicted.  Each queue cell is examined O(1) times overall, so
+        steady-state spill eviction is amortized O(1) per page."""
+        q = self._lru_q[w]
+        while k > 0:
+            run = q[0]
+            t0, region, col0, n, off, shift0 = run
+            d = self.dirs[region]
+            js = np.arange(off, n)
+            cols = col0 + (int(d.shift[w]) - shift0) + js
+            live = (d.touch[w, cols] == t0 + js) & d.incache[w, cols]
+            idx = np.nonzero(live)[0]
+            if idx.size == 0:
+                q.popleft()
+                continue
+            take = idx[:k]
+            self._evict_now(w, d, cols[take])
+            k -= take.size
+            if take.size == idx.size:
+                q.popleft()          # no live cells remain in this run
+            else:
+                run[4] = off + int(take[-1]) + 1
+
+    def _touch_page_exact(self, w: int, d: RegionDirectory, p: int,
+                          fetch: bool) -> int:
+        """Per-page touch/fetch + immediate LRU eviction, mirroring the
+        reference's ``_fetch``/``_touch_lru`` sequence for dangerous ops.
+        Returns the number of pages fetched (0/1); the *caller* charges
+        the fetch messages once per op so batching (``fetch_batch``)
+        costs the same on this path as on the batch path."""
+        col = p - int(d.base[w])
+        n_miss = 0
+        if not d.valid[w, col]:
+            if fetch and self.protocol != IDEAL_PROTO:
+                self.traffic.page_fetches += 1
+                self.traffic.fetch_bytes += self.page_bytes
+                n_miss = 1
+            d.valid[w, col] = True
+        if not d.incache[w, col]:
+            d.incache[w, col] = True
+            self.resident[w] += 1
+        self._tick += 1
+        d.touch[w, col] = self._tick
+        self._lru_q[w].append([self._tick, d.region, col, 1, 0,
+                               int(d.shift[w])])
+        if self.resident[w] > self.cache_pages:
+            self._evict_cells(w, int(self.resident[w]) - self.cache_pages)
+        return n_miss
+
+    def _maybe_evict(self, w: int):
+        """Watermark-triggered batched eviction: no per-op work unless the
+        occupancy counter crossed ``cache_pages``; then the oldest pages
+        (exact LRU via monotone ticks) are evicted in one queue pass."""
+        if self.cache_pages is None or self.resident[w] <= self.cache_pages:
             return
-        wins = list(self.windows[w].values())
-        n_valid = sum(int(c.valid.sum()) for c in wins)
-        n_over = n_valid - self.cache_pages
-        if n_over <= 0:
-            return
-        # gather (touch, window, local_idx) of all valid pages; evict oldest
-        cands = []
-        for c in wins:
-            idx = np.nonzero(c.valid)[0]
-            if idx.size:
-                cands.append((c.touch[idx], np.full(idx.size, c.region), idx))
-        touch = np.concatenate([t for t, _, _ in cands])
-        regs = np.concatenate([r for _, r, _ in cands])
-        locs = np.concatenate([i for _, _, i in cands])
-        order = np.argpartition(touch, min(n_over, touch.size - 1))[:n_over]
-        for ri, li in zip(regs[order], locs[order]):
-            c = self.windows[w][int(ri)]
-            if c.dirty[li]:      # dirty victims write back before eviction
-                self._writeback_ordinary(w, c, c.base + int(li),
-                                         c.base + int(li) + 1)
-            c.valid[li] = False
+        self._evict_cells(w, int(self.resident[w]) - self.cache_pages)
 
     # ------------------------------------------------------------------
     # reads / writes (interval API)
@@ -243,26 +294,70 @@ class RegCScaleRuntime:
         p_hi = ga.page_lo + (max(hi - 1, lo)) // self.page_words + 1
         arr_end = ga.page_lo + -(-ga.n_elems // self.page_words)
         p_hi_pf = min(p_hi + self.prefetch, arr_end)   # sequential prefetch
-        self._fetch_range(w, region, p_lo, max(p_hi_pf, p_hi))
+        p_hi = max(p_hi_pf, p_hi)
+        if self.cache_pages is not None:
+            d = self.dirs[region]
+            d.ensure(w, p_lo, p_hi)
+            s = d.sl(w, p_lo, p_hi)
+            n = p_hi - p_lo
+            n_enter = n - int(d.incache[w, s].sum())
+            if self._danger(w, n_enter, n):
+                n_miss = 0
+                for p in range(p_lo, p_hi):
+                    n_miss += self._touch_page_exact(w, d, p, fetch=True)
+                if n_miss:
+                    self._net(w, n_miss * self.page_bytes,
+                              2 * -(-n_miss // self.fetch_batch))
+                return None
+        self._fetch_range(w, region, p_lo, p_hi)
+        self._maybe_evict(w)
         return None
 
     def write(self, w: int, ga: GasArray, lo: int, hi: int, values=None):
         region = self._region_of(ga.page_lo)
         p_lo = ga.page_lo + lo // self.page_words
         p_hi = ga.page_lo + (max(hi - 1, lo)) // self.page_words + 1
-        c = self._window(w, region)
-        c.ensure(p_lo, p_hi)
+        d = self.dirs[region]
+        d.ensure(w, p_lo, p_hi)
         in_span = bool(self.spans[w])
         n_words = hi - lo
 
         # mechanism cost: instrumented stores (fine) / write faults (page)
         if self.model_mechanism and self.protocol == FINE_PROTO:
             self.clock[w] += n_words * self.instr_s_per_word
-        if self.model_mechanism and self.protocol == PAGE_PROTO:
-            s = c.sl(p_lo, p_hi)
-            n_faults = int(c.wprot[s].sum())
+        if self._track_wprot:
+            s = d.sl(w, p_lo, p_hi)
+            n_faults = int(d.wprot[w, s].sum())
             self.clock[w] += n_faults * self.fault_s
-            c.wprot[s] = False
+            d.wprot[w, s] = False
+
+        if self.cache_pages is not None and self.protocol != IDEAL_PROTO:
+            s = d.sl(w, p_lo, p_hi)
+            n = p_hi - p_lo
+            n_enter0 = n - int(d.incache[w, s].sum())
+            if self._danger(w, n_enter0, n):
+                # exact per-page replica of the reference's write-allocate +
+                # LRU sequence (see _danger)
+                span = self.spans[w][-1] if in_span else None
+                base = int(d.base[w])
+                n_miss = 0
+                for p in range(p_lo, p_hi):
+                    wlo, whi = ga.word_range_in_page(p, lo, hi)
+                    n_miss += self._touch_page_exact(
+                        w, d, p, fetch=(whi - wlo) < self.page_words)
+                    if in_span:
+                        old = span.touched.get(p)
+                        span.touched[p] = ((min(wlo, old[0]),
+                                            max(whi, old[1]))
+                                           if old else (wlo, whi))
+                    else:
+                        d.dirty[w, p - base] = True
+                        d.maybe_dirty = True
+                        self._dirty_regions[w].add(region)
+                if n_miss:
+                    self._net(w, n_miss * self.page_bytes,
+                              2 * -(-n_miss // self.fetch_batch))
+                return
 
         # write-allocate: partial edge pages must be fetched; interior
         # full-page writes just become valid
@@ -273,14 +368,22 @@ class RegCScaleRuntime:
             else:
                 if lo % self.page_words != 0:
                     self._fetch_range(w, region, p_lo, p_lo + 1)
-                if hi % self.page_words != 0 and hi < ga.n_elems:
+                if hi % self.page_words != 0:
                     self._fetch_range(w, region, p_hi - 1, p_hi)
-                elif hi % self.page_words != 0:   # last page of the array,
-                    self._fetch_range(w, region, p_hi - 1, p_hi)  # partial
-        s = c.sl(p_lo, p_hi)
-        self._tick += 1
-        c.valid[s] = True
-        c.touch[s] = self._tick
+        s = d.sl(w, p_lo, p_hi)
+        n = p_hi - p_lo
+        n_new = n - int(d.valid[w, s].sum())
+        if d.touch is not None:
+            d.touch[w, s] = np.arange(self._tick + 1, self._tick + 1 + n)
+            self._lru_q[w].append([self._tick + 1, region, s.start, n, 0,
+                                   int(d.shift[w])])
+            n_enter = n - int(d.incache[w, s].sum())
+            if n_enter:
+                d.incache[w, s] = True
+                self.resident[w] += n_enter
+        self._tick += n
+        if n_new:
+            d.valid[w, s] = True
 
         if in_span:
             span = self.spans[w][-1]
@@ -290,90 +393,186 @@ class RegCScaleRuntime:
                 span.touched[p] = ((min(wlo, old[0]), max(whi, old[1]))
                                    if old else (wlo, whi))
         else:
-            c.dirty[s] = True
-        self._evict(w)
+            d.dirty[w, s] = True
+            d.maybe_dirty = True
+            self._dirty_regions[w].add(region)
+        self._maybe_evict(w)
 
     # ------------------------------------------------------------------
     # ordinary flush (page granularity in both protocols)
     # ------------------------------------------------------------------
 
-    def _writeback_ordinary(self, w: int, c: _Window, p_lo: int, p_hi: int):
-        """Write back + invalidate sharers for dirty pages of window c in
-        [p_lo, p_hi)."""
-        iv = c.intersect(p_lo, p_hi)
-        if iv is None:
+    def _invalidate_sharers(self, w: int, region: int, pages: np.ndarray):
+        """Invalidate every other worker's valid copy of ``pages`` — one
+        boolean-mask gather/scatter over the worker axis."""
+        d = self.dirs[region]
+        rows = d.overlap_rows(int(pages[0]), int(pages[-1]) + 1, exclude=w)
+        if rows.size == 0:
             return
-        s = c.sl(*iv)
-        dirty_idx = np.nonzero(c.dirty[s])[0]
-        n_dirty = dirty_idx.size
-        if n_dirty == 0:
-            return
-        c.dirty[s] = False
-        if self.protocol == IDEAL_PROTO:
-            return
-        self.traffic.writeback_bytes += n_dirty * self.page_bytes
-        self._net(w, n_dirty * self.page_bytes,
-                  -(-n_dirty // self.fetch_batch))   # batched writeback
-        if self.model_mechanism and self.protocol == PAGE_PROTO:
-            c.wprot[s.start + dirty_idx] = True     # re-arm write protection
-        # invalidate sharers (same region windows of other workers)
-        dirty_pages_abs = iv[0] + dirty_idx
-        for v in range(self.W):
-            if v == w:
-                continue
-            cv = self.windows[v].get(c.region)
-            if cv is None:
-                continue
-            ivv = cv.intersect(iv[0], iv[1])
-            if ivv is None:
-                continue
-            mask = (dirty_pages_abs >= ivv[0]) & (dirty_pages_abs < ivv[1])
-            pages_v = dirty_pages_abs[mask] - cv.base
-            if pages_v.size == 0:
-                continue
-            shared = cv.valid[pages_v]
-            n_inv = int(shared.sum())
-            if n_inv:
-                cv.valid[pages_v[shared]] = False
-                self.traffic.invalidations += n_inv
-                self.traffic.control_msgs += n_inv
+        hit, cols = d.gather_valid(rows, pages)
+        n_inv = int(hit.sum())
+        if n_inv:
+            # valid drops but the pages keep their cache slots (``incache``)
+            # until evicted, exactly like the reference's LRU dict
+            d.clear_valid_cells(rows, cols, hit)
+            self.traffic.invalidations += n_inv
+            self.traffic.control_msgs += n_inv
 
-    def _flush_ordinary(self, w: int):
-        for c in self.windows[w].values():
-            if c.base >= 0 and c.dirty.any():
-                self._writeback_ordinary(w, c, c.base, c.base + c.dirty.size)
+    def _flush_worker(self, w: int):
+        """Write back + invalidate sharers for all of w's ordinary-dirty
+        pages (the single-flusher path used by acquire)."""
+        regions = self._dirty_regions[w]
+        if not regions:
+            return
+        for region in sorted(regions):
+            d = self.dirs[region]
+            cols = d.row_dirty_cols(w)
+            if cols.size == 0:
+                continue
+            d.dirty[w, cols] = False
+            if self.protocol == IDEAL_PROTO:
+                continue
+            n_dirty = cols.size
+            self.traffic.writeback_bytes += n_dirty * self.page_bytes
+            self._net(w, n_dirty * self.page_bytes,
+                      -(-n_dirty // self.fetch_batch))   # batched writeback
+            if d.wprot is not None:
+                d.wprot[w, cols] = True     # re-arm write protection
+            self._invalidate_sharers(w, region, d.base[w] + cols)
+        regions.clear()
+
+    def _flush_all_workers(self):
+        """Barrier-time flush of every worker's ordinary-dirty pages, in
+        one batched pass per region that reproduces the sequential
+        flush-order semantics analytically (see DIRECTORY.md):
+
+        for a page with dirty-worker set D (flushed in worker order) and
+        initial valid set V, the sequential per-worker flushes produce
+        ``|V \\ {d0}| + [|D|>1]*[d0 in V]`` invalidations and leave the page
+        valid only at d0 when ``|D|==1``.  Pages covered by a single worker
+        window contribute nothing (their only possible sharer is their own
+        writer), so the gather runs only over multiply-covered pages.
+        """
+        for d in self.dirs:
+            if not d.maybe_dirty:
+                continue
+            nD_w = d.dirty.sum(axis=1)
+            total = int(nD_w.sum())
+            d.maybe_dirty = False
+            if total == 0:
+                continue
+            if self.protocol == IDEAL_PROTO:
+                d.dirty[:] = False
+                continue
+            active = np.nonzero(nD_w)[0]
+            # per-(worker, region) writeback charge, as in the sequential
+            # flush: one batched message group per worker window
+            self.traffic.writeback_bytes += total * self.page_bytes
+            msgs = -(-nD_w[active] // self.fetch_batch)
+            self.clock[active] += (self.cost.net_latency_s * msgs
+                                   + (nD_w[active] * self.page_bytes)
+                                   / self.cost.net_bw_Bps)
+            if d.wprot is not None:
+                np.logical_or(d.wprot, d.dirty, out=d.wprot)  # re-arm own
+            # sharer invalidation: only pages under >= 2 worker windows can
+            # have sharers, so per-cell work is confined to the (small)
+            # halo/global intervals instead of every dirty page
+            starts, ends = d.shared_intervals()
+            if starts.size:
+                w_list, col_list = [], []
+                for w in active:
+                    b = int(d.base[w])
+                    e = b + int(d.length[w])
+                    i0 = int(np.searchsorted(ends, b, "right"))
+                    i1 = int(np.searchsorted(starts, e, "left"))
+                    for i in range(i0, i1):
+                        lo = max(int(starts[i]), b)
+                        hi = min(int(ends[i]), e)
+                        if lo >= hi:
+                            continue
+                        c = np.nonzero(d.dirty[w, lo - b:hi - b])[0]
+                        if c.size:
+                            col_list.append(c + (lo - b))
+                            w_list.append(np.full(c.size, w, np.int64))
+                if col_list:
+                    w_idx = np.concatenate(w_list)   # ascending worker ==
+                    cols = np.concatenate(col_list)  # sequential flush order
+                    self._invalidate_shared_dirty(d, w_idx, cols)
+            d.dirty[:] = False
+        for regions in self._dirty_regions:
+            regions.clear()
+
+    def _invalidate_shared_dirty(self, d: RegionDirectory,
+                                 w_idx: np.ndarray, cols: np.ndarray):
+        """Apply the analytic sequential-flush invalidation to the dirty
+        cells (worker-major order) of multiply-covered pages."""
+        pages = d.base[w_idx] + cols
+        u, first, counts = np.unique(pages, return_index=True,
+                                     return_counts=True)
+        d0_rows = w_idx[first]                # min dirty worker per page
+        d0_valid = d.valid[d0_rows, cols[first]]
+        rows = d.overlap_rows(int(u[0]), int(u[-1]) + 1)
+        sub, sub_cols = d.gather_valid(rows, u)
+        nV0 = sub.sum(axis=0)
+        d0v = d0_valid.astype(np.int64)
+        n_inv = int((nV0 - d0v + np.where(counts > 1, d0v, 0)).sum())
+        if n_inv:
+            self.traffic.invalidations += n_inv
+            self.traffic.control_msgs += n_inv
+        # final valid state: keep only a sole dirty writer's copy
+        keep = np.zeros_like(sub)
+        sole = counts == 1
+        if sole.any():
+            pos = np.searchsorted(rows, d0_rows[sole])
+            keep[pos, np.nonzero(sole)[0]] = True
+        d.clear_valid_cells(rows, sub_cols, sub & ~keep)
 
     # ------------------------------------------------------------------
-    # spans
+    # spans + notice replay
     # ------------------------------------------------------------------
+
+    def _replay_invalidate(self, w: int, pages: np.ndarray, rearm: bool):
+        """Page-protocol notice replay: invalidate w's valid copies of
+        ``pages`` (grouped per region), returning the number invalidated."""
+        total = 0
+        regions = np.searchsorted(self._region_starts_np, pages, "right") - 1
+        for r in np.unique(regions):
+            d = self.dirs[int(r)]
+            if d.base[w] < 0:
+                continue
+            pr = pages[regions == r]
+            cols = pr - d.base[w]
+            inr = (cols >= 0) & (cols < d.length[w])
+            vcells = d.valid[w, np.where(inr, cols, 0)] & inr
+            n = int(vcells.sum())
+            if n:
+                hot = cols[vcells]
+                d.valid[w, hot] = False
+                if rearm and d.wprot is not None:
+                    d.wprot[w, hot] = True
+                total += n
+        return total
 
     def acquire(self, w: int, lock_id: int):
         lk = self.locks.setdefault(lock_id, _Lock(self.W))
-        self._flush_ordinary(w)                     # RegC rule 1
+        self._flush_worker(w)                       # RegC rule 1
         self._net(w, 64, 2)
         self.traffic.control_msgs += 2
         self.clock[w] = max(self.clock[w], lk.last_release_time)
         # RegC rule 2, notices coalesced per page (matches reference)
-        pending: Dict[int, Tuple[int, int]] = {}
-        for ver in range(int(lk.seen[w]), lk.version):
-            for (p, lo, hi) in lk.notices[ver]:
-                old = pending.get(p)
-                pending[p] = ((min(lo, old[0]), max(hi, old[1]))
-                              if old else (lo, hi))
-        for p, (lo, hi) in sorted(pending.items()):
+        u, lo_u, hi_u = lk.log.pending(int(lk.seen[w]), lk.version)
+        if u.size:
             if self.protocol == FINE_PROTO:
-                nbytes = (hi - lo) * _WORD + self.page_words // 8
-                self.traffic.diff_bytes += nbytes
-                self._net(w, nbytes, 1)
+                nbytes = (hi_u - lo_u) * _WORD + self.page_words // 8
+                tot = int(nbytes.sum())
+                self.traffic.diff_bytes += tot
+                self.clock[w] += (self.cost.net_latency_s * u.size
+                                  + tot / self.cost.net_bw_Bps)
             else:
-                c = self.windows[w].get(self._region_of(p))
-                if c is not None and c.intersect(p, p + 1) is not None \
-                        and c.valid[c.sl(p, p + 1)][0]:
-                    c.valid[c.sl(p, p + 1)] = False
-                    self.traffic.invalidations += 1
-                    if self.model_mechanism:
-                        c.wprot[c.sl(p, p + 1)] = True
-                self.traffic.control_msgs += 1
+                n_inv = self._replay_invalidate(
+                    w, u, rearm=self.model_mechanism)
+                self.traffic.invalidations += n_inv
+                self.traffic.control_msgs += int(u.size)
         lk.seen[w] = lk.version
         self.spans[w].append(_Span(lock_id))
 
@@ -381,7 +580,7 @@ class RegCScaleRuntime:
         span = self.spans[w].pop()
         assert span.lock == lock_id, "unbalanced lock release"
         lk = self.locks[lock_id]
-        notices = []
+        pages, los, his = [], [], []
         for p, (lo, hi) in sorted(span.touched.items()):
             if self.protocol == IDEAL_PROTO:
                 continue
@@ -392,9 +591,11 @@ class RegCScaleRuntime:
                 nbytes = self.page_bytes
                 self.traffic.writeback_bytes += nbytes
             self._net(w, nbytes, 1)
-            notices.append((p, lo, hi))
+            pages.append(p)
+            los.append(lo)
+            his.append(hi)
         if self.protocol != IDEAL_PROTO:
-            lk.notices.append(notices)
+            lk.log.append_version(pages, los, his)
             lk.version += 1
             lk.seen[w] = lk.version
         self._net(w, 64, 1)
@@ -416,6 +617,28 @@ class RegCScaleRuntime:
         return self._SpanCtx(self, w, lock_id)
 
     # ------------------------------------------------------------------
+    # batched SPMD driver fast path
+    # ------------------------------------------------------------------
+
+    def phase(self, w: int, reads=(), writes=(), *, flops: float = 0.0,
+              mem_bytes: float = 0.0, seconds: float = 0.0,
+              instr_words: float = 0.0):
+        """One worker-phase in a single runtime call: interval reads, then
+        interval writes, then the modeled compute + instrumented stores.
+        ``reads``/``writes`` are sequences of ``(ga, lo, hi)``.  Today this
+        runs the same per-interval ops the caller would; it is the API
+        seam for the worker-axis batched driver (ROADMAP: ``phase_all``)
+        where the whole phase becomes one vectorized op over workers."""
+        for ga, lo, hi in reads:
+            self.read(w, ga, lo, hi)
+        for ga, lo, hi in writes:
+            self.write(w, ga, lo, hi)
+        if flops or mem_bytes or seconds:
+            self.compute(w, flops=flops, mem_bytes=mem_bytes, seconds=seconds)
+        if instr_words:
+            self.instr_stores(w, instr_words)
+
+    # ------------------------------------------------------------------
     def reduce(self, w: int, name: str, value: float, op: str = "sum"):
         self._reductions.setdefault(name, []).append((float(value), op))
 
@@ -423,28 +646,34 @@ class RegCScaleRuntime:
         return self._reduction_results[name]
 
     def barrier(self):
-        for w in range(self.W):
-            self._flush_ordinary(w)
+        self._flush_all_workers()
         if self.protocol != IDEAL_PROTO:
             for lk in self.locks.values():
                 for w in range(self.W):
-                    pending: Dict[int, Tuple[int, int]] = {}
-                    for ver in range(int(lk.seen[w]), lk.version):
-                        for (p, lo, hi) in lk.notices[ver]:
-                            old = pending.get(p)
-                            pending[p] = ((min(lo, old[0]), max(hi, old[1]))
-                                          if old else (lo, hi))
-                    for p, (lo, hi) in sorted(pending.items()):
-                        c = self.windows[w].get(self._region_of(p))
-                        if c is None or c.intersect(p, p + 1) is None \
-                                or not c.valid[c.sl(p, p + 1)][0]:
-                            continue
-                        if self.protocol == FINE_PROTO:
-                            self.traffic.diff_bytes += (hi - lo) * _WORD
-                        else:
-                            c.valid[c.sl(p, p + 1)] = False
-                            self.traffic.invalidations += 1
+                    if lk.seen[w] == lk.version:
+                        continue
+                    u, lo_u, hi_u = lk.log.pending(int(lk.seen[w]),
+                                                   lk.version)
                     lk.seen[w] = lk.version
+                    if not u.size:
+                        continue
+                    if self.protocol == FINE_PROTO:
+                        # fine-grain update of valid stale copies only
+                        regions = np.searchsorted(
+                            self._region_starts_np, u, "right") - 1
+                        for r in np.unique(regions):
+                            d = self.dirs[int(r)]
+                            if d.base[w] < 0:
+                                continue
+                            m = regions == r
+                            cols = u[m] - d.base[w]
+                            inr = (cols >= 0) & (cols < d.length[w])
+                            vcells = d.valid[w, np.where(inr, cols, 0)] & inr
+                            self.traffic.diff_bytes += int(
+                                ((hi_u[m] - lo_u[m]) * _WORD)[vcells].sum())
+                    else:
+                        n_inv = self._replay_invalidate(w, u, rearm=False)
+                        self.traffic.invalidations += n_inv
         log_w = max(1, int(np.ceil(np.log2(max(self.W, 2)))))
         for name, contribs in self._reductions.items():
             vals = [v for v, _ in contribs]

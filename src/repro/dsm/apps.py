@@ -22,6 +22,28 @@ RES_LOCK = 0
 ENERGY_LOCK = 1
 
 
+def _phase_fn(rt):
+    """Drive one worker-phase per call: runtimes exposing ``rt.phase``
+    (the scale engine — its seam for worker-axis batching, see ROADMAP)
+    get the phase as a single call; others (the reference runtime) get
+    the equivalent sequence of read/write/compute calls."""
+    ph = getattr(rt, "phase", None)
+    if ph is not None:
+        return ph
+
+    def fallback(w, reads=(), writes=(), *, flops=0.0, mem_bytes=0.0,
+                 seconds=0.0, instr_words=0.0):
+        for ga, lo, hi in reads:
+            rt.read(w, ga, lo, hi)
+        for ga, lo, hi in writes:
+            rt.write(w, ga, lo, hi)
+        if flops or mem_bytes or seconds:
+            rt.compute(w, flops=flops, mem_bytes=mem_bytes, seconds=seconds)
+        if instr_words:
+            rt.instr_stores(w, instr_words)
+    return fallback
+
+
 # ---------------------------------------------------------------------------
 # STREAM TRIAD (paper §V-A, Figs. 2-4)
 # ---------------------------------------------------------------------------
@@ -33,15 +55,14 @@ def stream_triad(rt, n: int, iters: int, *,
     A, B, C = rt.alloc(n), rt.alloc(n), rt.alloc(n)
     W = rt.W
     chunk = n // W
+    phase = _phase_fn(rt)
     for it in range(iters):
         for w in range(W):
             lo = w * chunk
             hi = (w + 1) * chunk if w < W - 1 else n
-            rt.read(w, B, lo, hi)
-            rt.read(w, C, lo, hi)
-            rt.write(w, A, lo, hi)
-            rt.compute(w, flops=2.0 * (hi - lo),
-                       mem_bytes=3.0 * 4 * (hi - lo))
+            phase(w, reads=((B, lo, hi), (C, lo, hi)),
+                  writes=((A, lo, hi),),
+                  flops=2.0 * (hi - lo), mem_bytes=3.0 * 4 * (hi - lo))
         rt.barrier()
         if on_iter is not None:
             on_iter(it, rt)
@@ -74,14 +95,14 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
     f = rt.alloc(n * n)
     res = rt.alloc(1)          # global residual accumulator (one word)
     rows = n // W
+    phase = _phase_fn(rt)
 
     for it in range(iters):
         # phase 1: copy own block u -> uold
         for w in range(W):
             lo, hi = w * rows * n, ((w + 1) * rows if w < W - 1 else n) * n
-            rt.read(w, u, lo, hi)
-            rt.write(w, uold, lo, hi)
-            rt.compute(w, mem_bytes=2.0 * 4 * (hi - lo))
+            phase(w, reads=((u, lo, hi),), writes=((uold, lo, hi),),
+                  mem_bytes=2.0 * 4 * (hi - lo))
         rt.barrier()
 
         # phase 2: stencil + residual
@@ -90,13 +111,12 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
             r1 = (w + 1) * rows if w < W - 1 else n
             lo_h = max(r0 - 1, 0) * n            # halo rows from neighbours
             hi_h = min(r1 + 1, n) * n
-            rt.read(w, uold, lo_h, hi_h)
-            rt.read(w, f, r0 * n, r1 * n)
-            rt.write(w, u, r0 * n, r1 * n)
             pts = (r1 - r0) * n
             # OmpSCR stencil: ~13 adds/muls + one fp DIVISION per point
             # (the residual normalization) — ~50 flop-equivalents scalar
-            rt.compute(w, flops=50.0 * pts, mem_bytes=4.0 * 4 * pts)
+            phase(w, reads=((uold, lo_h, hi_h), (f, r0 * n, r1 * n)),
+                  writes=((u, r0 * n, r1 * n),),
+                  flops=50.0 * pts, mem_bytes=4.0 * 4 * pts)
             if mode == "lock":
                 with rt.span(w, RES_LOCK):
                     rt.read(w, res, 0, 1)
@@ -145,23 +165,25 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
     force = rt.alloc(nw)
     energy = rt.alloc(2)       # [potential, kinetic]
     chunk = n_particles // W
+    phase = _phase_fn(rt)
 
     for it in range(iters):
         # phase A: forces + energies
         for w in range(W):
             p0 = w * chunk
             p1 = (w + 1) * chunk if w < W - 1 else n_particles
-            rt.read(w, pos, 0, nw)                    # all positions
-            rt.read(w, vel, p0 * ndim, p1 * ndim)     # own velocities (KE)
-            rt.write(w, force, p0 * ndim, p1 * ndim)
             inter = (p1 - p0) * n_particles
             # ~18 flops + sqrt + pow per pair (OmpSCR central potential):
-            # ~60 flop-equivalents scalar
-            rt.compute(w, flops=60.0 * inter,
-                       mem_bytes=4.0 * (nw + 2 * (p1 - p0) * ndim))
-            # the pair loop accumulates the 3-vector force per pair —
-            # instrumented stores under `fine` (the paper's §V-C overhead)
-            rt.instr_stores(w, 3.0 * inter)
+            # ~60 flop-equivalents scalar; the pair loop accumulates the
+            # 3-vector force per pair — instrumented stores under `fine`
+            # (the paper's §V-C overhead)
+            phase(w,
+                  reads=((pos, 0, nw),                       # all positions
+                         (vel, p0 * ndim, p1 * ndim)),       # own vel (KE)
+                  writes=((force, p0 * ndim, p1 * ndim),),
+                  flops=60.0 * inter,
+                  mem_bytes=4.0 * (nw + 2 * (p1 - p0) * ndim),
+                  instr_words=3.0 * inter)
             if mode == "lock":
                 with rt.span(w, ENERGY_LOCK):
                     rt.read(w, energy, 0, 2)
@@ -175,15 +197,11 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
         for w in range(W):
             p0, p1 = w * chunk * ndim, ((w + 1) * chunk if w < W - 1
                                         else n_particles) * ndim
-            rt.read(w, pos, p0, p1)
-            rt.read(w, vel, p0, p1)
-            rt.read(w, acc, p0, p1)
-            rt.read(w, force, p0, p1)
-            rt.write(w, pos, p0, p1)
-            rt.write(w, vel, p0, p1)
-            rt.write(w, acc, p0, p1)
-            rt.compute(w, flops=12.0 * (p1 - p0),
-                       mem_bytes=7.0 * 4 * (p1 - p0))
+            phase(w,
+                  reads=((pos, p0, p1), (vel, p0, p1),
+                         (acc, p0, p1), (force, p0, p1)),
+                  writes=((pos, p0, p1), (vel, p0, p1), (acc, p0, p1)),
+                  flops=12.0 * (p1 - p0), mem_bytes=7.0 * 4 * (p1 - p0))
         rt.barrier()
         if on_iter is not None:
             on_iter(it, rt)

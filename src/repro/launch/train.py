@@ -69,8 +69,8 @@ def main():
     mesh = None
     if args.path == "regc":
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((n,), ("data",))
     trainer = Trainer(cfg, hp, tc, data, mesh=mesh)
     out = trainer.run()
     print(f"done: step={out['step']} final_loss={out['history'][-1]['loss']:.4f} "

@@ -530,7 +530,8 @@ def moe_block_ep(params, x, cfg, ctx: ShardingCtx):
     from jax.sharding import PartitionSpec as P
     bspec = P(batch_axes if batch_axes else None)
     manual = set(batch_axes) | {"model"}
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+    fn = shard_map(
         inner, mesh=mesh,
         in_specs=(bspec, P(), P("model"), P("model"), P("model")),
         out_specs=(bspec, P(), P()),

@@ -201,7 +201,8 @@ def make_train_step_regc(cfg: ModelConfig, hp: TrainHParams, mesh,
 
     def step_fn(params, opt_state, batch, step):
         batch_specs = {k: bspec(k) for k in batch}
-        fn = jax.shard_map(
+        from repro.compat import shard_map
+        fn = shard_map(
             inner, mesh=mesh,
             in_specs=(P(), P(), batch_specs, P()),
             out_specs=(P(), P(), P()),

@@ -1,0 +1,48 @@
+"""Drop-in fallback for ``hypothesis`` so its absence only skips the
+property-style tests, not whole modules (see requirements-dev.txt).
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_stub import given, settings, st
+
+``@given(...)`` replaces the test body with ``pytest.importorskip``, so the
+test reports the canonical "could not import 'hypothesis'" skip; strategy
+constructors (including ``st.composite``) return inert placeholders that are
+only ever evaluated at decoration time.
+"""
+import pytest
+
+
+class _Strategies:
+    @staticmethod
+    def composite(fn):
+        def strategy(*args, **kwargs):
+            return None
+        return strategy
+
+    def __getattr__(self, name):
+        def strategy(*args, **kwargs):
+            return None
+        return strategy
+
+
+st = _Strategies()
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        # zero-arg on purpose: the original signature holds strategy
+        # parameters that pytest would otherwise resolve as fixtures
+        def skipper():
+            pytest.importorskip("hypothesis")
+        skipper.__name__ = getattr(fn, "__name__", "test_skipped")
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn

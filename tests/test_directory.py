@@ -1,0 +1,261 @@
+"""Unit + cross-validation tests for the region-level sharing directory
+(``repro.core.directory``) and the directory-vectorized protocol engine.
+
+Unlike the hypothesis suite in test_regc_scale.py, these are deterministic
+(seeded numpy RNG) so they run in environments without hypothesis — they
+are the tier-1 oracle for the directory engine:
+
+* random-trace cross-validation against the reference runtime, including
+  cache-spill configurations (traffic exact, clocks to float tolerance);
+* LRU equivalence: epoch-batched watermark eviction vs the reference's
+  per-op LRU on cache-spill traces;
+* STREAM / Jacobi / MD at small W through the interval fast path;
+* directory primitive semantics (windows, shared intervals, notice logs).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
+from repro.core.directory import IntervalLog, RegionDirectory
+from repro.core.regc import Traffic
+from repro.core.regc_scale import RegCScaleRuntime
+from repro.dsm.apps import jacobi, molecular_dynamics, stream_triad
+
+PROTOS = [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]
+
+
+# ---------------------------------------------------------------------------
+# directory primitives
+# ---------------------------------------------------------------------------
+
+
+def test_window_ensure_grow_and_shift():
+    d = RegionDirectory(3, 0, 0, 100, track_touch=True)
+    d.ensure(1, 10, 14)
+    d.valid[1, d.sl(1, 10, 14)] = True
+    d.touch[1, d.sl(1, 10, 14)] = [1, 2, 3, 4]
+    # left extension shifts existing cells and records the shift
+    d.ensure(1, 6, 20)
+    assert int(d.base[1]) == 6 and int(d.length[1]) == 14
+    assert int(d.shift[1]) == 4
+    assert d.valid[1, d.sl(1, 10, 14)].all()
+    assert not d.valid[1, d.sl(1, 6, 10)].any()
+    np.testing.assert_array_equal(d.touch[1, d.sl(1, 10, 14)], [1, 2, 3, 4])
+    # wprot-free, dirty stays clear
+    assert not d.dirty[1, : d.length[1]].any()
+
+
+def test_overlap_rows_and_gather():
+    d = RegionDirectory(4, 0, 0, 100)
+    d.ensure(0, 0, 10)
+    d.ensure(2, 8, 20)
+    d.ensure(3, 50, 60)
+    assert d.overlap_rows(5, 9).tolist() == [0, 2]
+    assert d.overlap_rows(5, 9, exclude=0).tolist() == [2]
+    d.valid[0, d.sl(0, 4, 9)] = True
+    d.valid[2, d.sl(2, 8, 12)] = True
+    rows = d.overlap_rows(0, 100)
+    sub, cols = d.gather_valid(rows, np.array([4, 8, 55]))
+    # row 0 valid at {4..8}, row 2 valid at {8..11}, row 3 nothing
+    np.testing.assert_array_equal(
+        sub, [[True, True, False], [False, True, False],
+              [False, False, False]])
+
+
+def test_shared_intervals_sweep():
+    d = RegionDirectory(4, 0, 0, 1000)
+    d.ensure(0, 0, 100)
+    d.ensure(1, 90, 200)       # overlaps 0 on [90, 100)
+    d.ensure(2, 300, 400)      # alone
+    d.ensure(3, 150, 160)      # inside 1
+    starts, ends = d.shared_intervals()
+    assert list(zip(starts.tolist(), ends.tolist())) == [(90, 100),
+                                                         (150, 160)]
+
+
+def test_interval_log_segment_minmax():
+    log = IntervalLog()
+    log.append_version([5, 9], [10, 0], [20, 4])
+    log.append_version([], [], [])
+    log.append_version([5, 7], [2, 1], [8, 3])
+    u, lo, hi = log.pending(0, 3)
+    assert u.tolist() == [5, 7, 9]
+    assert lo.tolist() == [2, 1, 0]          # per-page segment min
+    assert hi.tolist() == [20, 3, 4]         # per-page segment max
+    u2, lo2, hi2 = log.pending(2, 3)         # only the last version
+    assert u2.tolist() == [5, 7]
+    assert lo2.tolist() == [2, 1] and hi2.tolist() == [8, 3]
+    assert log.pending(3, 3)[0].size == 0
+
+
+# ---------------------------------------------------------------------------
+# random-trace cross-validation vs the reference runtime (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def gen_trace(rng, n_ops=40):
+    ops = []
+    depth = {w: [] for w in range(3)}
+    for _ in range(n_ops):
+        w = int(rng.integers(0, 3))
+        kind = rng.choice(["read", "write", "acquire", "release", "barrier"])
+        if kind == "release":
+            if not depth[w]:
+                continue
+            ops.append(("release", w, depth[w].pop()))
+        elif kind == "acquire":
+            if len(depth[w]) >= 2:
+                continue
+            lock = int(rng.integers(0, 2))
+            depth[w].append(lock)
+            ops.append(("acquire", w, lock))
+        elif kind == "barrier":
+            if any(depth.values()):
+                continue
+            ops.append(("barrier",))
+        else:
+            arr = int(rng.integers(0, 2))
+            lo = int(rng.integers(0, 250))
+            hi = int(rng.integers(lo + 1, min(lo + 120, 256) + 1))
+            ops.append((kind, w, arr, lo, hi))
+    for w in range(3):
+        while depth[w]:
+            ops.append(("release", w, depth[w].pop()))
+    ops.append(("barrier",))
+    return ops
+
+
+def run_trace(rt, ops, arrays):
+    for op in ops:
+        if op[0] == "read":
+            rt.read(op[1], arrays[op[2]], op[3], op[4])
+        elif op[0] == "write":
+            rt.write(op[1], arrays[op[2]], op[3], op[4])
+        elif op[0] == "acquire":
+            rt.acquire(op[1], op[2])
+        elif op[0] == "release":
+            rt.release(op[1], op[2])
+        else:
+            rt.barrier()
+    return rt
+
+
+def assert_same(ref, fast, ctx=""):
+    for f in dataclasses.fields(Traffic):
+        assert getattr(ref.traffic, f.name) == getattr(fast.traffic, f.name), (
+            ctx, f.name, ref.traffic, fast.traffic)
+    np.testing.assert_allclose(fast.clock, ref.clock, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("cache_pages", [None, 4, 2, 7])
+def test_random_traces_match_reference(cache_pages):
+    for seed in range(60):
+        rng = np.random.default_rng(seed)
+        ops = gen_trace(rng)
+        proto = PROTOS[seed % 3]
+        pw = [32, 64][seed % 2]
+        ref = RegCRuntime(3, page_words=pw, protocol=proto,
+                          track_values=False, prefetch=1,
+                          cache_pages=cache_pages)
+        fast = RegCScaleRuntime(3, page_words=pw, protocol=proto, prefetch=1,
+                                model_mechanism=False,
+                                cache_pages=cache_pages)
+        run_trace(ref, ops, [ref.alloc(256), ref.alloc(256)])
+        run_trace(fast, ops, [fast.alloc(256), fast.alloc(256)])
+        assert_same(ref, fast, f"seed={seed} proto={proto} pw={pw} "
+                               f"cache={cache_pages}")
+        if cache_pages is not None and proto != IDEAL_PROTO:
+            # occupancy counter == per-worker LRU dict length of the ref
+            occ = [sum(int(d.incache[w, :d.length[w]].sum())
+                       for d in fast.dirs if d.base[w] >= 0)
+                   for w in range(3)]
+            assert occ == [len(ref.lru[w]) for w in range(3)]
+            assert occ == fast.resident.tolist()
+
+
+# ---------------------------------------------------------------------------
+# LRU equivalence of the epoch-batched eviction (cache-spill traces)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+@pytest.mark.parametrize("cache_pages", [3, 6, 11])
+def test_epoch_batched_eviction_matches_per_op_lru(proto, cache_pages):
+    """Streaming sweeps over a working set larger than the cache: the
+    scale engine's watermark-triggered batched eviction must produce the
+    reference's per-op LRU traffic exactly — same fetch counts (capacity
+    misses), same dirty-victim writebacks, same sharer invalidations."""
+    ref = RegCRuntime(2, page_words=64, protocol=proto, track_values=False,
+                      prefetch=1, cache_pages=cache_pages)
+    fast = RegCScaleRuntime(2, page_words=64, protocol=proto, prefetch=1,
+                            model_mechanism=False, cache_pages=cache_pages)
+    for rt in (ref, fast):
+        a = rt.alloc(64 * 10)
+        b = rt.alloc(64 * 10)
+        for sweep in range(3):
+            for w in range(2):
+                for blk in range(5):
+                    rt.read(w, a, blk * 128, blk * 128 + 128)
+                    rt.write(w, b, blk * 128 + 7, blk * 128 + 121)  # partial
+            rt.barrier()
+    assert_same(ref, fast, f"{proto} cache={cache_pages}")
+
+
+def test_danger_path_prefetch_refetch():
+    """The op pattern where batched eviction alone would diverge: a read
+    whose prefetch page is valid at op start but evicted by the same op's
+    earlier fetches (the reference refetches it mid-op)."""
+    ref = RegCRuntime(1, page_words=64, protocol=FINE_PROTO,
+                      track_values=False, prefetch=1, cache_pages=2)
+    fast = RegCScaleRuntime(1, page_words=64, protocol=FINE_PROTO,
+                            prefetch=1, model_mechanism=False, cache_pages=2)
+    for rt in (ref, fast):
+        ga = rt.alloc(256)
+        rt.write(0, ga, 140, 148)      # page 2 resident + dirty
+        rt.read(0, ga, 16, 73)         # pages 0-1 + prefetch 2: evicts 2
+        rt.barrier()
+    assert_same(ref, fast, "prefetch-refetch")
+    assert ref.traffic.page_fetches == 4      # page 2 fetched twice
+
+
+# ---------------------------------------------------------------------------
+# paper apps at small W (interval fast path end-to-end)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("proto", PROTOS)
+def test_apps_match_reference_stream(proto):
+    ref = RegCRuntime(4, protocol=proto, track_values=False, prefetch=1)
+    fast = RegCScaleRuntime(4, protocol=proto, prefetch=1,
+                            model_mechanism=False)
+    stream_triad(ref, 64 * 1024, 3)
+    stream_triad(fast, 64 * 1024, 3)
+    assert_same(ref, fast, f"stream {proto}")
+
+
+@pytest.mark.parametrize("proto", PROTOS)
+@pytest.mark.parametrize("mode", ["lock", "reduction"])
+def test_apps_match_reference_jacobi_md(proto, mode):
+    for app, kw in ((jacobi, dict(n=256, iters=3, mode=mode)),
+                    (molecular_dynamics,
+                     dict(n_particles=256, iters=2, mode=mode))):
+        ref = RegCRuntime(4, protocol=proto, track_values=False, prefetch=1)
+        fast = RegCScaleRuntime(4, protocol=proto, prefetch=1,
+                                model_mechanism=False)
+        app(ref, **kw)
+        app(fast, **kw)
+        assert_same(ref, fast, f"{app.__name__} {proto} {mode}")
+
+
+def test_apps_match_reference_spill():
+    """STREAM under a cache smaller than the per-worker working set."""
+    for W, cache in ((4, 10), (2, 5)):
+        ref = RegCRuntime(W, protocol=FINE_PROTO, track_values=False,
+                          prefetch=1, cache_pages=cache)
+        fast = RegCScaleRuntime(W, protocol=FINE_PROTO, prefetch=1,
+                                model_mechanism=False, cache_pages=cache)
+        stream_triad(ref, 64 * 1024, 3)
+        stream_triad(fast, 64 * 1024, 3)
+        assert_same(ref, fast, f"spill W={W} cache={cache}")

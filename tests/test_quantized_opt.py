@@ -4,7 +4,10 @@ convergence on the tiny overfit task."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:           # tier-1 env may lack hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs import get_reduced
 from repro.models import model as M

@@ -6,7 +6,10 @@ writes inside spans / between barriers must equal a sequential oracle).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:           # tier-1 env may lack hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
 

@@ -5,7 +5,10 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:           # tier-1 env may lack hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
 from repro.core.regc import Traffic
@@ -121,6 +124,89 @@ def test_mechanism_costs_fine_vs_page():
     assert page.time >= 4 * 8 * FAULT_S
     # traffic identical (same ordinary-region protocol)
     assert fine.traffic.writeback_bytes == page.traffic.writeback_bytes
+
+
+def _assert_same_traffic(ref, fast):
+    for f in dataclasses.fields(Traffic):
+        assert getattr(ref.traffic, f.name) == getattr(fast.traffic, f.name), (
+            f.name, ref.traffic, fast.traffic)
+    np.testing.assert_allclose(fast.clock, ref.clock, rtol=1e-9, atol=1e-12)
+
+
+def _pair(proto, page_words=64, cache_pages=None, W=3):
+    ref = RegCRuntime(W, page_words=page_words, protocol=proto,
+                      track_values=False, prefetch=1, cache_pages=cache_pages)
+    fast = RegCScaleRuntime(W, page_words=page_words, protocol=proto,
+                            prefetch=1, model_mechanism=False,
+                            cache_pages=cache_pages)
+    return ref, fast
+
+
+# ---------------------------------------------------------------------------
+# directory-specific deterministic traces (no hypothesis needed): false
+# sharing, cache spill, multi-lock — the cross-worker paths the directory
+# engine vectorizes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO])
+def test_directory_trace_false_sharing(proto):
+    """Three workers write disjoint halves/thirds of the SAME page in
+    ordinary regions; flushes must invalidate exactly the reference's
+    sharer set (order-sensitive: first flusher sweeps, later flushers hit
+    an already-invalidated page)."""
+    ref, fast = _pair(proto)
+    for rt in (ref, fast):
+        ga = rt.alloc(256)
+        for it in range(3):
+            for w in range(3):
+                rt.read(w, ga, 0, 64)          # everyone shares page 0
+                rt.write(w, ga, w * 20, w * 20 + 20)   # disjoint words
+            rt.barrier()
+            rt.write(0, ga, 0, 10)
+            rt.acquire(1, 0)                   # acquire-time flush of w1?
+            rt.release(1, 0)
+            rt.write(1, ga, 10, 20)
+            rt.barrier()
+    _assert_same_traffic(ref, fast)
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_directory_trace_cache_spill(proto):
+    """Working set 2x the cache: every epoch re-streams all pages, so the
+    batched watermark eviction must reproduce the reference's per-op LRU
+    (fetch counts AND dirty-victim writebacks)."""
+    ref, fast = _pair(proto, page_words=64, cache_pages=6, W=2)
+    for rt in (ref, fast):
+        a = rt.alloc(64 * 8)
+        b = rt.alloc(64 * 8)
+        for sweep in range(3):
+            for w in range(2):
+                for blk in range(4):
+                    rt.read(w, a, blk * 128, blk * 128 + 128)
+                    rt.write(w, b, blk * 128, blk * 128 + 128)
+            rt.barrier()
+    _assert_same_traffic(ref, fast)
+
+
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_directory_trace_multi_lock(proto):
+    """Interleaved spans on three locks with overlapping pages: notice
+    logs must coalesce per (lock, version-range, page) exactly like the
+    reference's nested dict replay."""
+    ref, fast = _pair(proto, page_words=32)
+    for rt in (ref, fast):
+        ga = rt.alloc(256)
+        for it in range(3):
+            for w in range(3):
+                with rt.span(w, lock_id=w % 2):
+                    rt.write(w, ga, 10 * w, 10 * w + 8)
+                    rt.write(w, ga, 100, 104)          # contended words
+            with rt.span(0, lock_id=2):
+                rt.write(0, ga, 200, 230)
+            rt.read(1, ga, 96, 110)
+            rt.barrier()
+    _assert_same_traffic(ref, fast)
 
 
 def test_scale_fine_beats_page_on_small_span_updates():

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:           # tier-1 env may lack hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.checkpoint import CheckpointManager, latest_step, save_checkpoint
 from repro.checkpoint.store import gc_incomplete, restore_checkpoint

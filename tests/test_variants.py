@@ -26,8 +26,8 @@ from repro.models import model as M
 from repro.models.sharding import (DECODE_2D_RULES, SERVE_RULES, ShardingCtx)
 
 cfg = get_reduced("llama3-405b")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 params = M.init_model_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 B, S = 4, 16
 prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
@@ -98,8 +98,8 @@ from repro.optim.adamw import init_opt_state
 from repro.train.train_step import TrainHParams, make_train_step
 
 cfg = get_reduced("grok-1-314b")    # MoE 8e->4e reduced, top-2
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 params = M.init_model_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 opt = init_opt_state(params)
 ks = jax.random.split(jax.random.PRNGKey(1), 2)
@@ -137,8 +137,8 @@ cfg = get_reduced("jamba-1.5-large-398b")     # hybrid SSM+attn+MoE
 # when capacity is high enough that nothing drops
 cfg = dataclasses.replace(
     cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 params = M.init_model_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 B, S = 4, 16
 prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
