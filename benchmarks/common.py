@@ -88,7 +88,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
         if "series" in r:              # protocol sections
             out.append({
                 "section": r["figure"], "protocol": r["series"],
-                "W": r["p"], "t_wall_s": r.get("t_wall_s"),
+                "W": r["p"], "driver": r.get("driver", "loop"),
+                "t_wall_s": r.get("t_wall_s"),
                 "t_model_s": r.get("t_model_s", r.get("t_iter_s")),
                 "total_bytes": r.get("net_bytes", 0)})
         elif "policy" in r:            # regc_training (8-way DP mesh)

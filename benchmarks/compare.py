@@ -1,0 +1,121 @@
+"""Diff two ``BENCH_scale.json`` files and fail on wall-time regressions.
+
+``python -m benchmarks.compare BASE NEW [--threshold 0.3] [--min-wall 0.2]``
+exits non-zero when a per-section wall time (or the total) regressed by more
+than ``threshold`` (relative), ignoring sections faster than ``min-wall``
+seconds (pure noise on a busy box).  Point rows are matched on
+(section, protocol, W, driver) and compared on modeled time and traffic —
+those are deterministic, so ANY drift is reported (report-only by default;
+``--strict-model`` turns modeled/traffic drift into failures too).
+
+``benchmarks.run --fast`` smoke-invokes :func:`report` against the previous
+JSON so every fast run prints its own trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+
+def _section_walls(data: Dict) -> Dict[str, float]:
+    out = {}
+    for name, m in (data.get("meta", {}).get("sections", {}) or {}).items():
+        if m.get("status") == "ok" and m.get("wall_s") is not None:
+            out[name] = float(m["wall_s"])
+    return out
+
+
+def _point_key(r: Dict) -> Tuple:
+    return (r.get("section"), r.get("protocol"), r.get("W"),
+            r.get("driver", "loop"))
+
+
+def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
+         min_wall: float = 0.2) -> Tuple[List[str], List[str], int]:
+    """Returns (regressions, notes, n_model_drift): regressions are gate
+    failures, notes are informational lines, n_model_drift counts points
+    whose deterministic modeled time / traffic changed."""
+    regressions, notes = [], []
+
+    bw, nw = _section_walls(base), _section_walls(new)
+    for name in sorted(bw.keys() & nw.keys()):
+        b, n = bw[name], nw[name]
+        if max(b, n) < min_wall:
+            continue
+        rel = (n - b) / b if b else float("inf")
+        line = f"section {name}: wall {b:.2f}s -> {n:.2f}s ({rel:+.0%})"
+        if rel > threshold:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    bt = base.get("meta", {}).get("total_wall_s")
+    nt = new.get("meta", {}).get("total_wall_s")
+    if bt and nt:
+        rel = (nt - bt) / bt
+        line = f"total: wall {bt:.2f}s -> {nt:.2f}s ({rel:+.0%})"
+        (regressions if rel > threshold else notes).append(line)
+
+    b_rows = {_point_key(r): r for r in base.get("rows", [])}
+    n_rows = {_point_key(r): r for r in new.get("rows", [])}
+    drift = 0
+    for k in sorted(b_rows.keys() & n_rows.keys(), key=str):
+        br, nr = b_rows[k], n_rows[k]
+        if br.get("total_bytes") != nr.get("total_bytes"):
+            drift += 1
+            notes.append(f"point {k}: traffic {br.get('total_bytes')} -> "
+                         f"{nr.get('total_bytes')}")
+        elif (br.get("t_model_s") is not None
+              and br.get("t_model_s") != nr.get("t_model_s")):
+            drift += 1
+            notes.append(f"point {k}: t_model {br.get('t_model_s')} -> "
+                         f"{nr.get('t_model_s')}")
+    only_b = b_rows.keys() - n_rows.keys()
+    only_n = n_rows.keys() - b_rows.keys()
+    if only_b:
+        notes.append(f"{len(only_b)} point(s) only in base")
+    if only_n:
+        notes.append(f"{len(only_n)} point(s) only in new")
+    if drift:
+        notes.append(f"{drift} point(s) drifted in modeled time/traffic")
+    return regressions, notes, drift
+
+
+def report(base: Dict, new: Dict, *, threshold: float = 0.3,
+           min_wall: float = 0.2, strict_model: bool = False) -> int:
+    regressions, notes, drift = diff(base, new, threshold=threshold,
+                                     min_wall=min_wall)
+    for line in notes:
+        print(f"  {line}")
+    for line in regressions:
+        print(f"  REGRESSION: {line}")
+    if not regressions and not notes:
+        print("  no comparable entries")
+    failed = bool(regressions) or (strict_model and drift > 0)
+    print(f"  verdict: {'FAIL' if failed else 'ok'} "
+          f"({len(regressions)} wall regression(s))")
+    return 1 if failed else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("base", help="baseline BENCH_scale.json")
+    ap.add_argument("new", help="candidate BENCH_scale.json")
+    ap.add_argument("--threshold", type=float, default=0.3,
+                    help="relative wall-time regression gate "
+                         "(default: %(default)s)")
+    ap.add_argument("--min-wall", type=float, default=0.2,
+                    help="ignore sections faster than this many seconds")
+    ap.add_argument("--strict-model", action="store_true",
+                    help="also fail on modeled-time/traffic drift")
+    args = ap.parse_args(argv)
+    base = json.loads(Path(args.base).read_text())
+    new = json.loads(Path(args.new).read_text())
+    return report(base, new, threshold=args.threshold,
+                  min_wall=args.min_wall, strict_model=args.strict_model)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,17 +18,18 @@ N_BASE = 4096
 CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
-def _run(series: str, mode: str, p: int, n: int, iters: int):
+def _run(series: str, mode: str, p: int, n: int, iters: int,
+         driver: str = "batched"):
     ss = SteadyState()
     t0 = time.perf_counter()
     rt = make_rt(series, p)
-    jacobi(rt, n, iters, mode=mode, on_iter=ss)
+    jacobi(rt, n, iters, mode=mode, driver=driver, on_iter=ss)
     return ss.per_iter(), rt, time.perf_counter() - t0
 
 
-def strong(iters: int):
+def strong(iters: int, driver: str):
     rows = []
-    t_ref, _, _ = _run("pthreads", "reduction", 1, N_BASE, iters)
+    t_ref, _, _ = _run("pthreads", "reduction", 1, N_BASE, iters, driver)
     variants = [("pthreads", "reduction", "pthreads")] + [
         (s, m, f"{s}_{m}")
         for s in ("samhita", "samhita_page") for m in ("lock", "reduction")]
@@ -36,9 +37,10 @@ def strong(iters: int):
         for series, mode, tag in variants:
             if series == "pthreads" and p > 8:
                 continue
-            t, rt, t_wall = _run(series, mode, p, N_BASE, iters)
+            t, rt, t_wall = _run(series, mode, p, N_BASE, iters, driver)
             rows.append({"figure": "fig5_strong", "series": tag, "p": p,
-                         "n": N_BASE, "t_iter_s": round(t, 6),
+                         "n": N_BASE, "driver": driver,
+                         "t_iter_s": round(t, 6),
                          "speedup": round(t_ref / t, 3),
                          "net_bytes": rt.traffic.total_bytes,
                          "invalidations": rt.traffic.invalidations,
@@ -48,7 +50,7 @@ def strong(iters: int):
     return rows
 
 
-def weak(iters: int):
+def weak(iters: int, driver: str):
     """n^2 scales with p: n = 4096 -> 65536 over p = 1 -> 256."""
     rows = []
     for p in CORES:
@@ -62,10 +64,11 @@ def weak(iters: int):
                 ("samhita_page", "reduction", "samhita_page_reduction")):
             if series == "pthreads" and p > 8:
                 continue
-            t, rt, t_wall = _run(series, mode, p, n, iters)
+            t, rt, t_wall = _run(series, mode, p, n, iters, driver)
             rate = (n * n) / t
             rows.append({"figure": "fig6_weak", "series": tag, "p": p,
-                         "n": n, "t_iter_s": round(t, 6),
+                         "n": n, "driver": driver,
+                         "t_iter_s": round(t, 6),
                          "Mpoints_per_s": round(rate / 1e6, 2),
                          "net_bytes": rt.traffic.total_bytes,
                          "t_model_s": round(rt.time, 6),
@@ -78,15 +81,19 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=8)
     ap.add_argument("--weak", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched",
+                    help="SPMD phase driver: per-worker loop or phase_all")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     rows = []
     if args.all or not args.weak:
-        rows += strong(args.iters)
+        rows += strong(args.iters, args.driver)
     if args.all or args.weak:
-        rows += weak(args.iters)
-    write_csv("jacobi", rows)
+        rows += weak(args.iters, args.driver)
+    write_csv("jacobi" if args.driver == "batched"
+              else f"jacobi_{args.driver}", rows)
     if args.json:
         write_bench_json(args.json, rows)
     print_rows(rows)

@@ -14,11 +14,12 @@ N_PARTICLES = 8192
 CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
-def _run(series: str, mode: str, p: int, n: int, iters: int):
+def _run(series: str, mode: str, p: int, n: int, iters: int,
+         driver: str = "batched"):
     ss = SteadyState()
     t0 = time.perf_counter()
     rt = make_rt(series, p)
-    molecular_dynamics(rt, n, iters, mode=mode, on_iter=ss)
+    molecular_dynamics(rt, n, iters, mode=mode, driver=driver, on_iter=ss)
     return ss.per_iter(), rt, time.perf_counter() - t0
 
 
@@ -26,11 +27,15 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=6)
     ap.add_argument("--particles", type=int, default=N_PARTICLES)
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched",
+                    help="SPMD phase driver: per-worker loop or phase_all")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     n = args.particles
-    t_ref, _, _ = _run("pthreads", "reduction", 1, n, args.iters)
+    t_ref, _, _ = _run("pthreads", "reduction", 1, n, args.iters,
+                       args.driver)
     rows = []
     for p in CORES:
         for series, mode, tag in (
@@ -41,14 +46,16 @@ def main(argv=None):
                 ("samhita_page", "reduction", "samhita_page_reduction")):
             if series == "pthreads" and p > 8:
                 continue
-            t, rt, t_wall = _run(series, mode, p, n, args.iters)
+            t, rt, t_wall = _run(series, mode, p, n, args.iters, args.driver)
             rows.append({"figure": "fig7_md", "series": tag, "p": p,
-                         "n_particles": n, "t_iter_s": round(t, 6),
+                         "n_particles": n, "driver": args.driver,
+                         "t_iter_s": round(t, 6),
                          "speedup": round(t_ref / t, 3),
                          "net_bytes": rt.traffic.total_bytes,
                          "t_model_s": round(rt.time, 6),
                          "t_wall_s": round(t_wall, 4)})
-    write_csv("molecular_dynamics", rows)
+    write_csv("molecular_dynamics" if args.driver == "batched"
+              else f"molecular_dynamics_{args.driver}", rows)
     if args.json:
         write_bench_json(args.json, rows)
     print_rows(rows)

@@ -11,31 +11,50 @@ section wall seconds.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
+from pathlib import Path
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="fewer iterations / skip the slowest sections")
+    ap.add_argument("--driver", choices=["loop", "batched", "both"],
+                    default="batched",
+                    help="SPMD phase driver for the protocol sections: "
+                         "per-worker loop, worker-axis-batched phase_all, "
+                         "or both (one timed pass per driver)")
     ap.add_argument("--json", default="BENCH_scale.json", metavar="OUT",
                     help="write machine-readable results here "
                          "('' disables; default: %(default)s)")
     args = ap.parse_args(argv)
     iters = 4 if args.fast else 8
+    drivers = (["loop", "batched"] if args.driver == "both"
+               else [args.driver])
 
     from benchmarks import (common, jacobi, molecular_dynamics,
                             regc_training, roofline, stream_triad)
 
-    sections = [
-        ("stream_triad (paper Figs. 2/3/4)", "stream_triad", False,
-         lambda: stream_triad.main(["--all", "--iters", str(iters)])),
-        ("Jacobi (paper Figs. 5/6)", "jacobi", False,
-         lambda: jacobi.main(["--all", "--iters", str(iters)])),
-        ("Molecular dynamics (paper Fig. 7)", "molecular_dynamics", False,
-         lambda: molecular_dynamics.main(
-             ["--iters", str(max(4, iters // 2))])),
+    sections = []
+    for d in drivers:
+        tag = f"[{d}]" if len(drivers) > 1 else ""
+        drv = ["--driver", d]
+        sections += [
+            (f"stream_triad (paper Figs. 2/3/4) {tag}",
+             f"stream_triad{tag}", False,
+             lambda drv=drv: stream_triad.main(
+                 ["--all", "--iters", str(iters)] + drv)),
+            (f"Jacobi (paper Figs. 5/6) {tag}", f"jacobi{tag}", False,
+             lambda drv=drv: jacobi.main(
+                 ["--all", "--iters", str(iters)] + drv)),
+            (f"Molecular dynamics (paper Fig. 7) {tag}",
+             f"molecular_dynamics{tag}", False,
+             lambda drv=drv: molecular_dynamics.main(
+                 ["--iters", str(max(4, iters // 2))] + drv)),
+        ]
+    sections += [
         # jax-compile-bound (subprocess trainer), not a protocol section
         ("RegC training-layer sync policies (DESIGN.md 2.2)",
          "regc_training", True, lambda: regc_training.main([])),
@@ -68,12 +87,25 @@ def main(argv=None):
     total = time.time() - t0
     print(f"total bench time: {total:.1f}s")
     if args.json:
+        prev = None
+        if Path(args.json).exists():
+            try:
+                prev = json.loads(Path(args.json).read_text())
+            except Exception:
+                prev = None
         path = common.write_bench_json(
             args.json, all_rows,
             meta={"fast": bool(args.fast), "iters": iters,
+                  "driver": args.driver,
                   "total_wall_s": round(total, 2),
                   "sections": section_meta})
         print(f"wrote {path}")
+        if args.fast and prev is not None:
+            # smoke-run the regression differ against the previous results
+            # (report-only here; CI gates via `python -m benchmarks.compare`)
+            from benchmarks import compare
+            print("== compare vs previous BENCH_scale.json ==")
+            compare.report(prev, json.loads(Path(path).read_text()))
     return all_rows
 
 

@@ -22,13 +22,15 @@ def bw_gbs(n: int, t_iter: float) -> float:
     return triad_bytes_per_iter(n) / t_iter / 1e9
 
 
-def _point(figure: str, series: str, p: int, n: int, iters: int, **rt_kw):
+def _point(figure: str, series: str, p: int, n: int, iters: int,
+           driver: str = "batched", **rt_kw):
     ss = SteadyState()
     t0 = time.perf_counter()
     rt = make_rt(series if series in SERIES else "samhita", p, **rt_kw)
-    stream_triad(rt, n, iters, on_iter=ss)
+    stream_triad(rt, n, iters, driver=driver, on_iter=ss)
     t_wall = time.perf_counter() - t0
     return {"figure": figure, "series": series, "p": p, "n": n,
+            "driver": driver,
             "t_iter_s": round(ss.per_iter(), 6),
             "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
             "net_bytes": rt.traffic.total_bytes,
@@ -36,35 +38,36 @@ def _point(figure: str, series: str, p: int, n: int, iters: int, **rt_kw):
             "t_wall_s": round(t_wall, 4)}
 
 
-def strong(iters: int):
+def strong(iters: int, driver: str):
     rows = []
     for p in CORES:
         for series in SERIES:
             if series == "pthreads" and p > 8:
                 continue       # Pthreads exists only within one node
-            rows.append(_point("fig2_strong", series, p, N_BASE, iters))
+            rows.append(_point("fig2_strong", series, p, N_BASE, iters,
+                               driver))
     return rows
 
 
-def weak(iters: int):
+def weak(iters: int, driver: str):
     rows = []
     for p in CORES:
         n = N_BASE * p
         for series in SERIES:
             if series == "pthreads" and p > 8:
                 continue
-            rows.append(_point("fig3_weak", series, p, n, iters))
+            rows.append(_point("fig3_weak", series, p, n, iters, driver))
     return rows
 
 
-def spill(iters: int):
+def spill(iters: int, driver: str):
     """samhita only: per-worker problem 2x the local cache (Fig 4)."""
     rows = []
     cache_pages = 3 * (N_BASE // 1024) + 64        # fits the small problem
     for p in CORES:
         for scale, tag in ((1, "fits"), (2, "spills")):
             n = N_BASE * p * scale
-            r = _point("fig4_spill", f"samhita_{tag}", p, n, iters,
+            r = _point("fig4_spill", f"samhita_{tag}", p, n, iters, driver,
                        cache_pages=cache_pages)
             rows.append(r)
     return rows
@@ -76,17 +79,23 @@ def main(argv=None):
     ap.add_argument("--weak", action="store_true")
     ap.add_argument("--spill", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched",
+                    help="SPMD phase driver: per-worker loop or phase_all")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     rows = []
     if args.all or not (args.weak or args.spill):
-        rows += strong(args.iters)
+        rows += strong(args.iters, args.driver)
     if args.all or args.weak:
-        rows += weak(args.iters)
+        rows += weak(args.iters, args.driver)
     if args.all or args.spill:
-        rows += spill(max(4, args.iters // 2))
-    write_csv("stream_triad", rows)
+        rows += spill(max(4, args.iters // 2), args.driver)
+    # non-default drivers get their own CSV so `--driver both` harness
+    # runs don't overwrite the batched rows
+    write_csv("stream_triad" if args.driver == "batched"
+              else f"stream_triad_{args.driver}", rows)
     if args.json:
         write_bench_json(args.json, rows)
     print_rows(rows)

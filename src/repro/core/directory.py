@@ -45,6 +45,17 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+def use_dense(n_rows: int, l_max: int) -> bool:
+    """Strategy pick for per-op batched plane updates: dense (rows x Lmax)
+    gather/scatter matrices win when per-row work is too small to amortize
+    a Python-level row loop (many workers, narrow intervals — the regime
+    that made 256-worker runs driver-bound), or when the whole op is tiny;
+    wide intervals are slice-throughput bound, where per-row contiguous
+    slice ops are ~100x cheaper per cell than gather matrices.  Both
+    strategies charge identically, so the cutoff is invisible to traffic
+    and clocks (cross-validated in tests/test_regc_scale.py)."""
+    return l_max <= 512 or n_rows * l_max <= (1 << 16)
+
 
 class RegionDirectory:
     """2D per-worker page state of one allocation region.
@@ -57,11 +68,11 @@ class RegionDirectory:
     __slots__ = ("W", "region", "page_lo", "page_hi", "base", "length",
                  "cap", "valid", "dirty", "wprot", "touch", "incache",
                  "shift", "maybe_dirty", "_cov_stale", "_sorted_bases",
-                 "_sorted_ends")
+                 "_sorted_ends", "backend")
 
     def __init__(self, n_workers: int, region: int, page_lo: int,
                  page_hi: int, *, track_wprot: bool = False,
-                 track_touch: bool = False):
+                 track_touch: bool = False, backend: str = "numpy"):
         self.W = n_workers
         self.region = region
         self.page_lo = page_lo
@@ -85,6 +96,10 @@ class RegionDirectory:
         self._cov_stale = True
         self._sorted_bases: Optional[np.ndarray] = None
         self._sorted_ends: Optional[np.ndarray] = None
+        # 'numpy' | 'pallas': execution backend for the whole-plane
+        # reductions (barrier-flush popcount, shared-interval sweep).  Both
+        # are integer-exact, so traffic is backend-independent.
+        self.backend = backend
 
     # ------------------------------------------------------------------
     # window management
@@ -145,9 +160,59 @@ class RegionDirectory:
         b = int(self.base[w])
         return slice(lo - b, hi - b)
 
+    def ensure_rows(self, lo: np.ndarray, hi: np.ndarray,
+                    rows: np.ndarray):
+        """Vectorized ``ensure`` over ``rows``: grow row rows[i]'s window
+        to cover [lo[i], hi[i]).  Python-loops only over rows that actually
+        need to grow — zero in the steady state of phase-structured apps."""
+        base = self.base[rows]
+        need = (base < 0) | (lo < base) | (hi > base + self.length[rows])
+        for i in np.nonzero(need)[0]:
+            self.ensure(int(rows[i]), int(lo[i]), int(hi[i]))
+
     # ------------------------------------------------------------------
     # cross-worker vector primitives
     # ------------------------------------------------------------------
+
+    def range_cols(self, lo: np.ndarray, hi: np.ndarray,
+                   rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-row column-index matrix for the absolute page intervals
+        [lo[i], hi[i]) of rows[i] — windows must already cover them
+        (``ensure_rows``).  Returns (cols (R, Lmax), mask (R, Lmax));
+        mask is False past each row's interval length."""
+        L = hi - lo
+        j = np.arange(int(L.max()) if L.size else 0)
+        cols = (lo - self.base[rows])[:, None] + j[None, :]
+        return cols, j[None, :] < L[:, None]
+
+    def count_range(self, plane: np.ndarray, lo: np.ndarray,
+                    hi: np.ndarray) -> np.ndarray:
+        """(W,) counts of True cells of ``plane`` inside [lo[w], hi[w]),
+        reading out-of-window cells as False (windows need NOT cover the
+        intervals — used by the phase_all eviction precheck)."""
+        if plane.shape[1] == 0:
+            return np.zeros(self.W, np.int64)
+        L = hi - lo
+        Lmax = int(L.max()) if L.size else 0
+        if not use_dense(self.W, Lmax):
+            # wide intervals: per-row contiguous slice sums beat building
+            # the (W, Lmax) gather matrices (see use_dense)
+            out = np.zeros(self.W, np.int64)
+            for w in range(self.W):
+                b = int(self.base[w])
+                if b < 0:
+                    continue
+                c0 = max(int(lo[w]) - b, 0)
+                c1 = min(int(hi[w]) - b, int(self.length[w]))
+                if c1 > c0:
+                    out[w] = int(plane[w, c0:c1].sum())
+            return out
+        j = np.arange(Lmax)
+        cols = (lo - self.base)[:, None] + j[None, :]
+        m = ((j[None, :] < L[:, None]) & (cols >= 0)
+             & (cols < self.length[:, None]) & (self.base >= 0)[:, None])
+        sub = plane[np.arange(self.W)[:, None], np.where(m, cols, 0)] & m
+        return sub.sum(axis=1)
 
     def overlap_rows(self, lo: int, hi: int,
                      exclude: Optional[int] = None) -> np.ndarray:
@@ -186,7 +251,8 @@ class RegionDirectory:
         """Absolute page intervals covered by >= 2 worker windows, as
         (starts, ends) arrays — a sweep over the 2W window bounds.  Pages
         outside these intervals cannot have sharers, so barrier flushes
-        skip them without per-page work."""
+        skip them without per-page work.  The coverage cumsum runs on the
+        selected backend (``kernels.protocol_sweep`` for 'pallas')."""
         self._refresh_bounds()
         b, e = self._sorted_bases, self._sorted_ends
         if b.size < 2:
@@ -197,8 +263,11 @@ class RegionDirectory:
                                 np.full(e.size, -1, np.int64)])
         order = np.argsort(pts, kind="stable")
         pts = pts[order]
-        cover = np.cumsum(delta[order])
-        multi = cover >= 2
+        if self.backend == "pallas":
+            from repro.kernels import protocol_sweep as _ps
+            multi = _ps.coverage_multi(delta[order], backend=self.backend)
+        else:
+            multi = np.cumsum(delta[order]) >= 2
         edge = np.diff(np.concatenate([[False], multi]).astype(np.int8))
         starts = pts[np.nonzero(edge == 1)[0]]
         ends_i = np.nonzero(edge == -1)[0]
@@ -207,6 +276,18 @@ class RegionDirectory:
             ends = np.concatenate([ends, pts[-1:]])
         keep = ends > starts
         return starts[keep], ends[keep]
+
+    def dirty_counts(self) -> np.ndarray:
+        """(W,) per-row dirty-page counts — the barrier-flush popcount.
+        On the 'pallas' backend the boolean plane is packed into uint32
+        bitmasks and popcounted by the protocol-sweep kernel; cells outside
+        a row's live window are always False, so whole-plane reduction is
+        exact on both backends."""
+        if self.backend == "pallas":
+            from repro.kernels import protocol_sweep as _ps
+            return _ps.popcount_rows(_ps.pack_mask_rows(self.dirty),
+                                     backend=self.backend)
+        return self.dirty.sum(axis=1)
 
     def row_dirty_cols(self, w: int) -> np.ndarray:
         n = int(self.length[w])

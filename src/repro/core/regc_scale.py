@@ -46,7 +46,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.directory import IntervalLog, RegionDirectory
+from repro.core.directory import IntervalLog, RegionDirectory, use_dense
 from repro.core.regc import (FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, GasArray,
                              Traffic, _WORD)
 from repro.dsm.costmodel import CostModel, IB_2013
@@ -84,8 +84,14 @@ class RegCScaleRuntime:
                  cache_pages: Optional[int] = None, prefetch: int = 1,
                  n_mem_servers: int = 1, model_mechanism: bool = True,
                  instr_s_per_word: float = INSTR_S_PER_WORD,
-                 fault_s: float = FAULT_S, fetch_batch: int = 1):
+                 fault_s: float = FAULT_S, fetch_batch: int = 1,
+                 backend: str = "numpy"):
         assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
+        # 'numpy' | 'pallas': backend for the whole-plane directory
+        # reductions (kernels.protocol_sweep).  Integer-exact either way;
+        # degrades to numpy with a warning when jax is unavailable.
+        from repro.kernels.protocol_sweep import resolve_backend
+        self.backend = resolve_backend(backend)
         self.W = n_workers
         self.page_words = page_words
         self.page_bytes = page_words * _WORD
@@ -125,6 +131,11 @@ class RegCScaleRuntime:
         self._reductions: Dict[str, List[Tuple[float, str]]] = {}
         self._reduction_results: Dict[str, float] = {}
         self._tick = 0
+        self._rows_all = np.arange(n_workers)
+        # one-way latch: once a phase_all precheck fails, later phases go
+        # straight to the per-worker path (a spilling workload keeps
+        # spilling; both paths are exact, so the hint only affects speed)
+        self._assume_spill = False
 
     # ------------------------------------------------------------------
     def alloc(self, n_elems: int) -> GasArray:
@@ -135,7 +146,8 @@ class RegCScaleRuntime:
         self._region_starts_np = np.asarray(self._region_starts, np.int64)
         self.dirs.append(RegionDirectory(
             self.W, len(self.dirs), self.n_pages, self.n_pages + pages,
-            track_wprot=self._track_wprot, track_touch=self._track_touch))
+            track_wprot=self._track_wprot, track_touch=self._track_touch,
+            backend=self.backend))
         self.n_pages += pages
         return ga
 
@@ -208,10 +220,15 @@ class RegCScaleRuntime:
         """Evict the cells ``vc`` (ascending tick order) of w's row in
         region d: dirty victims (valid or not) write back first — one
         message per page, matching the reference's per-page eviction flush
-        — then both ``valid`` and the cache slot (``incache``) drop."""
-        db = vc[d.dirty[w, vc]]
-        if db.size:
-            d.dirty[w, db] = False
+        — then both ``valid`` and the cache slot (``incache``) drop.
+        Contiguous victim runs (the streaming-spill steady state) use
+        slice ops instead of fancy indexing."""
+        lo, hi = int(vc[0]), int(vc[-1]) + 1
+        sl = slice(lo, hi) if hi - lo == vc.size else vc
+        dmask = d.dirty[w, sl]
+        if dmask.any():
+            db = vc[dmask]
+            d.dirty[w, sl] = False     # only the db cells were set
             if self.protocol != IDEAL_PROTO:
                 self.traffic.writeback_bytes += db.size * self.page_bytes
                 self.clock[w] += (self.cost.net_latency_s * db.size
@@ -220,8 +237,8 @@ class RegCScaleRuntime:
                 if d.wprot is not None:
                     d.wprot[w, db] = True
                 self._invalidate_sharers(w, d.region, d.base[w] + db)
-        d.valid[w, vc] = False
-        d.incache[w, vc] = False
+        d.valid[w, sl] = False
+        d.incache[w, sl] = False
         self.resident[w] -= vc.size
 
     def _evict_cells(self, w: int, k: int):
@@ -235,15 +252,16 @@ class RegCScaleRuntime:
             run = q[0]
             t0, region, col0, n, off, shift0 = run
             d = self.dirs[region]
-            js = np.arange(off, n)
-            cols = col0 + (int(d.shift[w]) - shift0) + js
-            live = (d.touch[w, cols] == t0 + js) & d.incache[w, cols]
+            c0 = col0 + (int(d.shift[w]) - shift0)
+            sl = slice(c0 + off, c0 + n)      # run cells are contiguous
+            live = ((d.touch[w, sl] == np.arange(t0 + off, t0 + n))
+                    & d.incache[w, sl])
             idx = np.nonzero(live)[0]
             if idx.size == 0:
                 q.popleft()
                 continue
             take = idx[:k]
-            self._evict_now(w, d, cols[take])
+            self._evict_now(w, d, c0 + off + take)
             k -= take.size
             if take.size == idx.size:
                 q.popleft()          # no live cells remain in this run
@@ -403,18 +421,41 @@ class RegCScaleRuntime:
     # ------------------------------------------------------------------
 
     def _invalidate_sharers(self, w: int, region: int, pages: np.ndarray):
-        """Invalidate every other worker's valid copy of ``pages`` — one
-        boolean-mask gather/scatter over the worker axis."""
+        """Invalidate every other worker's valid copy of ``pages``.
+
+        Small page sets (accumulator pages, many overlapping rows) use one
+        dense boolean-mask gather over the worker axis; wide page sets
+        (block flushes — few overlapping neighbours, thousands of pages)
+        intersect each row's window with the sorted page list instead, so
+        work tracks actual coverage rather than rows x pages."""
         d = self.dirs[region]
         rows = d.overlap_rows(int(pages[0]), int(pages[-1]) + 1, exclude=w)
         if rows.size == 0:
             return
-        hit, cols = d.gather_valid(rows, pages)
-        n_inv = int(hit.sum())
+        if pages.size <= 64:
+            hit, cols = d.gather_valid(rows, pages)
+            n_inv = int(hit.sum())
+            if n_inv:
+                # valid drops but the pages keep their cache slots
+                # (``incache``) until evicted, like the reference's LRU dict
+                d.clear_valid_cells(rows, cols, hit)
+                self.traffic.invalidations += n_inv
+                self.traffic.control_msgs += n_inv
+            return
+        n_inv = 0
+        for v in rows:
+            b = int(d.base[v])
+            i0 = int(np.searchsorted(pages, b))
+            i1 = int(np.searchsorted(pages, b + int(d.length[v])))
+            if i0 >= i1:
+                continue
+            cols = pages[i0:i1] - b
+            vcells = d.valid[v, cols]
+            k = int(vcells.sum())
+            if k:
+                d.valid[v, cols[vcells]] = False
+                n_inv += k
         if n_inv:
-            # valid drops but the pages keep their cache slots (``incache``)
-            # until evicted, exactly like the reference's LRU dict
-            d.clear_valid_cells(rows, cols, hit)
             self.traffic.invalidations += n_inv
             self.traffic.control_msgs += n_inv
 
@@ -456,7 +497,7 @@ class RegCScaleRuntime:
         for d in self.dirs:
             if not d.maybe_dirty:
                 continue
-            nD_w = d.dirty.sum(axis=1)
+            nD_w = d.dirty_counts()        # bitmask popcount on 'pallas'
             total = int(nD_w.sum())
             d.maybe_dirty = False
             if total == 0:
@@ -505,27 +546,43 @@ class RegCScaleRuntime:
     def _invalidate_shared_dirty(self, d: RegionDirectory,
                                  w_idx: np.ndarray, cols: np.ndarray):
         """Apply the analytic sequential-flush invalidation to the dirty
-        cells (worker-major order) of multiply-covered pages."""
+        cells (worker-major order) of multiply-covered pages.
+
+        The gather is sparse: worker windows are intervals, so each row
+        sees only a contiguous slice of the page list ``u`` — total
+        (row, page) pairs ~ the actual window coverage, not rows x pages
+        (a dense gather over block-partitioned arrays touches W x |u|
+        cells to find ~2 live ones per page)."""
         pages = d.base[w_idx] + cols
         u, first, counts = np.unique(pages, return_index=True,
                                      return_counts=True)
         d0_rows = w_idx[first]                # min dirty worker per page
         d0_valid = d.valid[d0_rows, cols[first]]
         rows = d.overlap_rows(int(u[0]), int(u[-1]) + 1)
-        sub, sub_cols = d.gather_valid(rows, u)
-        nV0 = sub.sum(axis=0)
+        pr_l, pu_l, pc_l = [], [], []
+        for w in rows:
+            b = int(d.base[w])
+            i0 = int(np.searchsorted(u, b))
+            i1 = int(np.searchsorted(u, b + int(d.length[w])))
+            if i0 < i1:
+                pr_l.append(np.full(i1 - i0, w, np.int64))
+                pu_l.append(np.arange(i0, i1))
+                pc_l.append(u[i0:i1] - b)
+        pr = np.concatenate(pr_l)             # pair: worker row
+        pu = np.concatenate(pu_l)             # pair: index into u
+        pc = np.concatenate(pc_l)             # pair: column in row
+        val = d.valid[pr, pc]
+        nV0 = np.bincount(pu[val], minlength=u.size)
         d0v = d0_valid.astype(np.int64)
         n_inv = int((nV0 - d0v + np.where(counts > 1, d0v, 0)).sum())
         if n_inv:
             self.traffic.invalidations += n_inv
             self.traffic.control_msgs += n_inv
         # final valid state: keep only a sole dirty writer's copy
-        keep = np.zeros_like(sub)
-        sole = counts == 1
-        if sole.any():
-            pos = np.searchsorted(rows, d0_rows[sole])
-            keep[pos, np.nonzero(sole)[0]] = True
-        d.clear_valid_cells(rows, sub_cols, sub & ~keep)
+        keep = (counts == 1)[pu] & (pr == d0_rows[pu])
+        hot = val & ~keep
+        if hot.any():
+            d.valid[pr[hot], pc[hot]] = False
 
     # ------------------------------------------------------------------
     # spans + notice replay
@@ -625,10 +682,9 @@ class RegCScaleRuntime:
               instr_words: float = 0.0):
         """One worker-phase in a single runtime call: interval reads, then
         interval writes, then the modeled compute + instrumented stores.
-        ``reads``/``writes`` are sequences of ``(ga, lo, hi)``.  Today this
-        runs the same per-interval ops the caller would; it is the API
-        seam for the worker-axis batched driver (ROADMAP: ``phase_all``)
-        where the whole phase becomes one vectorized op over workers."""
+        ``reads``/``writes`` are sequences of ``(ga, lo, hi)``.  This is
+        the per-worker reference path that ``phase_all`` batches over the
+        worker axis (and falls back to when eviction is possible)."""
         for ga, lo, hi in reads:
             self.read(w, ga, lo, hi)
         for ga, lo, hi in writes:
@@ -639,8 +695,233 @@ class RegCScaleRuntime:
             self.instr_stores(w, instr_words)
 
     # ------------------------------------------------------------------
+    # worker-axis batched driver (phase_all)
+    # ------------------------------------------------------------------
+
+    def _w_arr(self, v) -> np.ndarray:
+        return np.broadcast_to(np.asarray(v, np.int64), (self.W,))
+
+    def _page_range_all(self, ga, lo: np.ndarray, hi: np.ndarray, *,
+                        prefetch: bool):
+        pw = self.page_words
+        p_lo = ga.page_lo + lo // pw
+        p_hi = ga.page_lo + np.maximum(hi - 1, lo) // pw + 1
+        if prefetch:
+            arr_end = ga.page_lo + -(-ga.n_elems // pw)
+            p_hi = np.maximum(np.minimum(p_hi + self.prefetch, arr_end), p_hi)
+        return self._region_of(int(ga.page_lo)), p_lo, p_hi
+
+    def _phase_fits(self, ranges) -> bool:
+        """Conservative per-phase no-eviction check: every page that can
+        newly occupy a cache slot this phase is not-incache at phase start
+        and lies in some op range, so ``resident + sum over ops of
+        (range length - in-cache count)`` bounds each worker's peak
+        occupancy; overlapping ranges only loosen the bound.  Under the
+        watermark for every worker, no eviction can trigger, hence no
+        cross-worker invalidation mid-phase — the batched op-major order
+        is then bit-exact vs the per-worker order."""
+        quick = self.resident.copy()
+        for region, p_lo, p_hi in ranges:
+            quick += p_hi - p_lo
+        if (quick <= self.cache_pages).all():
+            return True            # even all-cold ranges fit: no gathers
+        ub = self.resident.copy()
+        for region, p_lo, p_hi in ranges:
+            d = self.dirs[region]
+            ub += (p_hi - p_lo) - d.count_range(d.incache, p_lo, p_hi)
+        return bool((ub <= self.cache_pages).all())
+
+    def _fetch_range_all(self, region: int, p_lo: np.ndarray,
+                         p_hi: np.ndarray, rows: np.ndarray):
+        """Vectorized ``_fetch_range`` over ``rows`` of the worker axis:
+        identical per-worker traffic and clock charges, one gather/scatter
+        per plane instead of a Python loop."""
+        d = self.dirs[region]
+        d.ensure_rows(p_lo, p_hi, rows)
+        cols, mask = d.range_cols(p_lo, p_hi, rows)
+        safe = np.where(mask, cols, 0)
+        r2 = rows[:, None]
+        vsub = d.valid[r2, safe] & mask
+        L = p_hi - p_lo
+        n_miss = L - vsub.sum(axis=1)
+        if d.touch is not None:
+            # per-(worker, op) monotone tick blocks: relative order within
+            # each worker matches the per-worker path, which is all the
+            # LRU victim selection compares (ticks never cross workers)
+            t0 = self._tick + np.concatenate(([0], np.cumsum(L[:-1])))
+            tick_vals = t0[:, None] + 1 + np.arange(cols.shape[1])[None, :]
+            ri, ci = np.nonzero(mask)
+            d.touch[rows[ri], cols[ri, ci]] = tick_vals[ri, ci]
+            for i, w in enumerate(rows):
+                self._lru_q[w].append([int(t0[i]) + 1, region,
+                                       int(cols[i, 0]), int(L[i]), 0,
+                                       int(d.shift[w])])
+            isub = d.incache[r2, safe] & mask
+            ri, ci = np.nonzero(mask & ~isub)
+            if ri.size:
+                d.incache[rows[ri], cols[ri, ci]] = True
+            self.resident[rows] += L - isub.sum(axis=1)
+        self._tick += int(L.sum())
+        tot_miss = int(n_miss.sum())
+        if tot_miss:
+            if self.protocol != IDEAL_PROTO:
+                self.traffic.page_fetches += tot_miss
+                self.traffic.fetch_bytes += tot_miss * self.page_bytes
+                n_req = -(-n_miss // self.fetch_batch)
+                t = (self.cost.net_latency_s * (2 * n_req)
+                     + (n_miss * self.page_bytes) / self.cost.net_bw_Bps)
+                hit = n_miss > 0
+                self.clock[rows[hit]] += t[hit]
+            ri, ci = np.nonzero(mask & ~vsub)
+            d.valid[rows[ri], cols[ri, ci]] = True
+
+    def _read_all(self, ga, lo: np.ndarray, hi: np.ndarray):
+        region, p_lo, p_hi = self._page_range_all(ga, lo, hi, prefetch=True)
+        if not use_dense(self.W, int((p_hi - p_lo).max())):
+            # wide per-worker intervals: contiguous per-row slice ops beat
+            # the dense gather matrices (see directory.use_dense); still
+            # op-major, so charges stay bit-identical
+            for w in range(self.W):
+                self.read(w, ga, int(lo[w]), int(hi[w]))
+            return
+        self._fetch_range_all(region, p_lo, p_hi, self._rows_all)
+
+    def _write_all(self, ga, lo: np.ndarray, hi: np.ndarray):
+        pw = self.page_words
+        region, p_lo, p_hi = self._page_range_all(ga, lo, hi, prefetch=False)
+        if not use_dense(self.W, int((p_hi - p_lo).max())):
+            for w in range(self.W):
+                self.write(w, ga, int(lo[w]), int(hi[w]))
+            return
+        d = self.dirs[region]
+        rows = self._rows_all
+        d.ensure_rows(p_lo, p_hi, rows)
+        n_words = hi - lo
+
+        # mechanism cost, in the per-worker path's charge order
+        if self.model_mechanism and self.protocol == FINE_PROTO:
+            self.clock += n_words * self.instr_s_per_word
+        if self._track_wprot:
+            cols, mask = d.range_cols(p_lo, p_hi, rows)
+            wsub = d.wprot[rows[:, None], np.where(mask, cols, 0)] & mask
+            self.clock += wsub.sum(axis=1) * self.fault_s
+            ri, ci = np.nonzero(mask)
+            d.wprot[rows[ri], cols[ri, ci]] = False
+
+        # write-allocate edge fetches (first page, then last page — the
+        # per-worker path's order), only for the workers that need them
+        n_pg = p_hi - p_lo
+        if self.protocol != IDEAL_PROTO:
+            single = n_pg == 1
+            first = np.where(single, n_words < pw, lo % pw != 0)
+            last = (~single) & (hi % pw != 0)
+            if first.any():
+                r = np.nonzero(first)[0]
+                self._fetch_range_all(region, p_lo[r], p_lo[r] + 1, r)
+            if last.any():
+                r = np.nonzero(last)[0]
+                self._fetch_range_all(region, p_hi[r] - 1, p_hi[r], r)
+
+        cols, mask = d.range_cols(p_lo, p_hi, rows)
+        safe = np.where(mask, cols, 0)
+        vsub = d.valid[rows[:, None], safe] & mask
+        if d.touch is not None:
+            t0 = self._tick + np.concatenate(([0], np.cumsum(n_pg[:-1])))
+            tick_vals = t0[:, None] + 1 + np.arange(cols.shape[1])[None, :]
+            ri, ci = np.nonzero(mask)
+            d.touch[rows[ri], cols[ri, ci]] = tick_vals[ri, ci]
+            for w in range(self.W):
+                self._lru_q[w].append([int(t0[w]) + 1, region,
+                                       int(cols[w, 0]), int(n_pg[w]), 0,
+                                       int(d.shift[w])])
+            isub = d.incache[rows[:, None], safe] & mask
+            ri, ci = np.nonzero(mask & ~isub)
+            if ri.size:
+                d.incache[rows[ri], cols[ri, ci]] = True
+            self.resident += n_pg - isub.sum(axis=1)
+        self._tick += int(n_pg.sum())
+        ri, ci = np.nonzero(mask & ~vsub)
+        if ri.size:
+            d.valid[rows[ri], cols[ri, ci]] = True
+        ri, ci = np.nonzero(mask)
+        d.dirty[rows[ri], cols[ri, ci]] = True
+        d.maybe_dirty = True
+        for w in range(self.W):
+            self._dirty_regions[w].add(region)
+
+    def phase_all(self, reads=(), writes=(), *, flops=0.0, mem_bytes=0.0,
+                  seconds=0.0, instr_words=0.0):
+        """One SPMD phase for ALL workers in a single runtime call.
+
+        ``reads``/``writes`` are sequences of ``(ga, lo, hi)`` with
+        ``lo``/``hi`` as (W,) int arrays (scalars broadcast); ``flops``/
+        ``mem_bytes``/``seconds``/``instr_words`` may be scalars or (W,)
+        arrays.  Bit-exactly equivalent to
+        ``for w in range(W): phase(w, ...)``: within a phase (no barriers,
+        no spans) workers interact only through eviction writebacks, so
+        when no worker can cross the eviction watermark (checked
+        conservatively up front) the per-worker ops are independent and
+        run op-major as single vectorized passes over the (W, window)
+        directory planes; otherwise the whole phase falls back to the
+        per-worker path, which resolves eviction and the ``_danger``
+        pattern in tick order.  Must be called outside spans — consistency
+        regions serialize through their locks and stay per-worker
+        (``span``/``acquire``/``release``)."""
+        assert not any(self.spans), "phase_all must run outside spans"
+        W = self.W
+        reads = [(ga, self._w_arr(lo), self._w_arr(hi))
+                 for ga, lo, hi in reads]
+        writes = [(ga, self._w_arr(lo), self._w_arr(hi))
+                  for ga, lo, hi in writes]
+        if self.cache_pages is not None and (
+                self._assume_spill or not self._phase_fits(
+                    [self._page_range_all(ga, lo, hi, prefetch=True)
+                     for ga, lo, hi in reads]
+                    + [self._page_range_all(ga, lo, hi, prefetch=False)
+                       for ga, lo, hi in writes])):
+            self._assume_spill = True
+            fl = np.broadcast_to(np.asarray(flops, np.float64), (W,))
+            mb = np.broadcast_to(np.asarray(mem_bytes, np.float64), (W,))
+            sec = np.broadcast_to(np.asarray(seconds, np.float64), (W,))
+            iw = np.broadcast_to(np.asarray(instr_words, np.float64), (W,))
+            for w in range(W):
+                self.phase(
+                    w,
+                    reads=[(ga, int(lo[w]), int(hi[w]))
+                           for ga, lo, hi in reads],
+                    writes=[(ga, int(lo[w]), int(hi[w]))
+                            for ga, lo, hi in writes],
+                    flops=float(fl[w]), mem_bytes=float(mb[w]),
+                    seconds=float(sec[w]), instr_words=float(iw[w]))
+            return
+        for ga, lo, hi in reads:
+            self._read_all(ga, lo, hi)
+        for ga, lo, hi in writes:
+            self._write_all(ga, lo, hi)
+        fl = np.asarray(flops, np.float64)
+        mb = np.asarray(mem_bytes, np.float64)
+        sec = np.asarray(seconds, np.float64)
+        if fl.any() or mb.any() or sec.any():
+            sharing = self.cost.workers_on_node(W)
+            bw = self.cost.node_bw(sharing) / max(1, sharing)
+            self.clock += sec + np.maximum(
+                fl / self.cost.flops_per_worker, mb / bw)
+        if self.model_mechanism and self.protocol == FINE_PROTO:
+            iw = np.asarray(instr_words, np.float64)
+            if iw.any():
+                self.clock += iw * self.instr_s_per_word
+
+    # ------------------------------------------------------------------
     def reduce(self, w: int, name: str, value: float, op: str = "sum"):
         self._reductions.setdefault(name, []).append((float(value), op))
+
+    def reduce_all(self, name: str, values, op: str = "sum"):
+        """Batched ``reduce``: one contribution per worker in a single
+        call (``values`` scalar or (W,)); combines identically at the
+        barrier (same values, same op, same reduction_msgs)."""
+        vals = np.broadcast_to(np.asarray(values, np.float64), (self.W,))
+        self._reductions.setdefault(name, []).extend(
+            (float(v), op) for v in vals)
 
     def reduction_result(self, name: str) -> float:
         return self._reduction_results[name]
@@ -649,6 +930,8 @@ class RegCScaleRuntime:
         self._flush_all_workers()
         if self.protocol != IDEAL_PROTO:
             for lk in self.locks.values():
+                if (lk.seen == lk.version).all():
+                    continue       # everyone current (usual post-span state)
                 for w in range(self.W):
                     if lk.seen[w] == lk.version:
                         continue

@@ -4,44 +4,97 @@ These are the Samhita programs of §V — STREAM TRIAD, Jacobi (OmpSCR), and
 molecular dynamics (OmpSCR) — expressed as phase-structured SPMD over a
 RegC runtime (reference or scale engine; both expose the same API).
 
+Each bulk phase is described once as (W,) interval arrays — the worker's
+read/write sets declared up front, which is what makes whole-phase batched
+coherence resolution possible — and handed to a *driver*:
+
+* ``batched`` — one ``rt.phase_all`` call per phase (the scale engine's
+  worker-axis vectorized path);
+* ``loop``    — one ``rt.phase`` (or read/write/compute sequence, for the
+  reference runtime) call per worker, in worker order.
+
+The two drivers are bit-exact against each other: consistency-region spans
+(lock mode) always run in a per-worker pass AFTER the bulk phase, so the
+op order is identical whichever driver executes the bulk part.
+
 Each app takes ``mode``:
 * ``lock``       — global accumulators protected by a mutex (consistency
   region), exactly the paper's threaded port;
 * ``reduction``  — the paper's §V-B programming-model extension:
   ``rt.reduce`` replaces the mutex-accumulate pattern.
 
-Compute costs are charged via ``rt.compute`` from per-phase flop/byte
-counts (the runtime's node model turns them into time); ALL protocol
-traffic is exact.
+Compute costs are charged via per-phase flop/byte counts (the runtime's
+node model turns them into time); ALL protocol traffic is exact.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
+import numpy as np
+
 RES_LOCK = 0
 ENERGY_LOCK = 1
 
 
-def _phase_fn(rt):
-    """Drive one worker-phase per call: runtimes exposing ``rt.phase``
-    (the scale engine — its seam for worker-axis batching, see ROADMAP)
-    get the phase as a single call; others (the reference runtime) get
-    the equivalent sequence of read/write/compute calls."""
-    ph = getattr(rt, "phase", None)
-    if ph is not None:
-        return ph
+def _phase_driver(rt, driver: str = "auto"):
+    """Return ``phase(reads=..., writes=..., flops=..., ...)`` executing one
+    whole SPMD phase.  Interval tuples are ``(ga, lo, hi)`` with (W,) int
+    arrays; flops/mem_bytes/seconds/instr_words scalars or (W,) arrays."""
+    assert driver in ("auto", "batched", "loop"), driver
+    batched = getattr(rt, "phase_all", None)
+    if driver == "auto":
+        driver = "batched" if batched is not None else "loop"
+    if driver == "batched":
+        assert batched is not None, "runtime has no phase_all (use loop)"
+        return batched
 
-    def fallback(w, reads=(), writes=(), *, flops=0.0, mem_bytes=0.0,
-                 seconds=0.0, instr_words=0.0):
-        for ga, lo, hi in reads:
-            rt.read(w, ga, lo, hi)
-        for ga, lo, hi in writes:
-            rt.write(w, ga, lo, hi)
-        if flops or mem_bytes or seconds:
-            rt.compute(w, flops=flops, mem_bytes=mem_bytes, seconds=seconds)
-        if instr_words:
-            rt.instr_stores(w, instr_words)
-    return fallback
+    W = rt.W
+    per_worker = getattr(rt, "phase", None)
+
+    def at(v, w):
+        return float(v[w]) if np.ndim(v) else float(v)
+
+    def loop(reads=(), writes=(), *, flops=0.0, mem_bytes=0.0, seconds=0.0,
+             instr_words=0.0):
+        for w in range(W):
+            r = [(ga, int(lo[w]), int(hi[w])) for ga, lo, hi in reads]
+            wr = [(ga, int(lo[w]), int(hi[w])) for ga, lo, hi in writes]
+            fl, mb = at(flops, w), at(mem_bytes, w)
+            sec, iw = at(seconds, w), at(instr_words, w)
+            if per_worker is not None:
+                per_worker(w, reads=r, writes=wr, flops=fl, mem_bytes=mb,
+                           seconds=sec, instr_words=iw)
+                continue
+            for ga, lo, hi in r:
+                rt.read(w, ga, lo, hi)
+            for ga, lo, hi in wr:
+                rt.write(w, ga, lo, hi)
+            if fl or mb or sec:
+                rt.compute(w, flops=fl, mem_bytes=mb, seconds=sec)
+            if iw:
+                rt.instr_stores(w, iw)
+    return loop
+
+
+def _reduce_all(rt, name: str, value: float = 1.0):
+    """Per-worker reduction contribution, batched when the runtime offers
+    ``reduce_all`` (identical combine either way)."""
+    ra = getattr(rt, "reduce_all", None)
+    if ra is not None:
+        ra(name, value)
+    else:
+        for w in range(rt.W):
+            rt.reduce(w, name, value)
+
+
+def _blocks(n: int, W: int):
+    """Block partition of [0, n): (W,) lo/hi arrays, last worker takes the
+    remainder (the paper's static OpenMP-style schedule)."""
+    chunk = n // W
+    lo = np.arange(W, dtype=np.int64) * chunk
+    hi = lo + chunk
+    hi[-1] = n
+    return lo, hi
 
 
 # ---------------------------------------------------------------------------
@@ -49,20 +102,18 @@ def _phase_fn(rt):
 # ---------------------------------------------------------------------------
 
 
-def stream_triad(rt, n: int, iters: int, *,
+def stream_triad(rt, n: int, iters: int, *, driver: str = "auto",
                  on_iter: Optional[Callable] = None):
     """A = B + alpha*C, one barrier per iteration (400 in the paper)."""
     A, B, C = rt.alloc(n), rt.alloc(n), rt.alloc(n)
     W = rt.W
-    chunk = n // W
-    phase = _phase_fn(rt)
+    lo, hi = _blocks(n, W)
+    phase = _phase_driver(rt, driver)
+    flops = 2.0 * (hi - lo)
+    mem_bytes = 3.0 * 4 * (hi - lo)
     for it in range(iters):
-        for w in range(W):
-            lo = w * chunk
-            hi = (w + 1) * chunk if w < W - 1 else n
-            phase(w, reads=((B, lo, hi), (C, lo, hi)),
-                  writes=((A, lo, hi),),
-                  flops=2.0 * (hi - lo), mem_bytes=3.0 * 4 * (hi - lo))
+        phase(reads=((B, lo, hi), (C, lo, hi)), writes=((A, lo, hi),),
+              flops=flops, mem_bytes=mem_bytes)
         rt.barrier()
         if on_iter is not None:
             on_iter(it, rt)
@@ -79,7 +130,7 @@ def triad_bytes_per_iter(n: int) -> float:
 
 
 def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
-           on_iter: Optional[Callable] = None):
+           driver: str = "auto", on_iter: Optional[Callable] = None):
     """5-point stencil on an n x n grid; per-iteration global residual.
 
     Phases per iteration (3 barriers, as in the paper):
@@ -94,43 +145,40 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
     uold = rt.alloc(n * n)
     f = rt.alloc(n * n)
     res = rt.alloc(1)          # global residual accumulator (one word)
-    rows = n // W
-    phase = _phase_fn(rt)
+    r0, r1 = _blocks(n, W)     # row blocks
+    lo_b, hi_b = r0 * n, r1 * n
+    lo_h = np.maximum(r0 - 1, 0) * n         # halo rows from neighbours
+    hi_h = np.minimum(r1 + 1, n) * n
+    pts = (r1 - r0) * n
+    zero = np.zeros(W, np.int64)
+    one = np.ones(W, np.int64)
+    phase = _phase_driver(rt, driver)
 
     for it in range(iters):
         # phase 1: copy own block u -> uold
-        for w in range(W):
-            lo, hi = w * rows * n, ((w + 1) * rows if w < W - 1 else n) * n
-            phase(w, reads=((u, lo, hi),), writes=((uold, lo, hi),),
-                  mem_bytes=2.0 * 4 * (hi - lo))
+        phase(reads=((u, lo_b, hi_b),), writes=((uold, lo_b, hi_b),),
+              mem_bytes=2.0 * 4 * (hi_b - lo_b))
         rt.barrier()
 
-        # phase 2: stencil + residual
-        for w in range(W):
-            r0 = w * rows
-            r1 = (w + 1) * rows if w < W - 1 else n
-            lo_h = max(r0 - 1, 0) * n            # halo rows from neighbours
-            hi_h = min(r1 + 1, n) * n
-            pts = (r1 - r0) * n
-            # OmpSCR stencil: ~13 adds/muls + one fp DIVISION per point
-            # (the residual normalization) — ~50 flop-equivalents scalar
-            phase(w, reads=((uold, lo_h, hi_h), (f, r0 * n, r1 * n)),
-                  writes=((u, r0 * n, r1 * n),),
-                  flops=50.0 * pts, mem_bytes=4.0 * 4 * pts)
-            if mode == "lock":
+        # phase 2: stencil + residual.  OmpSCR stencil: ~13 adds/muls +
+        # one fp DIVISION per point (the residual normalization) — ~50
+        # flop-equivalents scalar.  The global accumulate runs as a
+        # per-worker span pass after the bulk phase (see module docstring).
+        phase(reads=((uold, lo_h, hi_h), (f, lo_b, hi_b)),
+              writes=((u, lo_b, hi_b),),
+              flops=50.0 * pts, mem_bytes=4.0 * 4 * pts)
+        if mode == "lock":
+            for w in range(W):
                 with rt.span(w, RES_LOCK):
                     rt.read(w, res, 0, 1)
                     rt.write(w, res, 0, 1)
-            else:
-                rt.reduce(w, "residual", 1.0)
+        else:
+            _reduce_all(rt, "residual")
         rt.barrier()
 
         # phase 3: convergence test — everyone reads the residual
-        for w in range(W):
-            if mode == "lock":
-                rt.read(w, res, 0, 1)
-            else:
-                pass                              # reduction result is local
+        if mode == "lock":
+            phase(reads=((res, zero, one),))
         rt.barrier()
         if on_iter is not None:
             on_iter(it, rt)
@@ -148,6 +196,7 @@ def jacobi_flops_per_iter(n: int) -> float:
 
 def molecular_dynamics(rt, n_particles: int, iters: int, *,
                        mode: str = "lock", ndim: int = 3,
+                       driver: str = "auto",
                        on_iter: Optional[Callable] = None):
     """Velocity-Verlet n-body with a central pair potential.
 
@@ -164,44 +213,40 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
     acc = rt.alloc(nw)
     force = rt.alloc(nw)
     energy = rt.alloc(2)       # [potential, kinetic]
-    chunk = n_particles // W
-    phase = _phase_fn(rt)
+    p0, p1 = _blocks(n_particles, W)
+    lo_w, hi_w = p0 * ndim, p1 * ndim        # own word blocks
+    inter = (p1 - p0) * n_particles
+    zero = np.zeros(W, np.int64)
+    all_w = np.full(W, nw, np.int64)
+    phase = _phase_driver(rt, driver)
 
     for it in range(iters):
-        # phase A: forces + energies
-        for w in range(W):
-            p0 = w * chunk
-            p1 = (w + 1) * chunk if w < W - 1 else n_particles
-            inter = (p1 - p0) * n_particles
-            # ~18 flops + sqrt + pow per pair (OmpSCR central potential):
-            # ~60 flop-equivalents scalar; the pair loop accumulates the
-            # 3-vector force per pair — instrumented stores under `fine`
-            # (the paper's §V-C overhead)
-            phase(w,
-                  reads=((pos, 0, nw),                       # all positions
-                         (vel, p0 * ndim, p1 * ndim)),       # own vel (KE)
-                  writes=((force, p0 * ndim, p1 * ndim),),
-                  flops=60.0 * inter,
-                  mem_bytes=4.0 * (nw + 2 * (p1 - p0) * ndim),
-                  instr_words=3.0 * inter)
-            if mode == "lock":
+        # phase A: forces + energies.  ~18 flops + sqrt + pow per pair
+        # (OmpSCR central potential): ~60 flop-equivalents scalar; the
+        # pair loop accumulates the 3-vector force per pair —
+        # instrumented stores under `fine` (the paper's §V-C overhead).
+        phase(reads=((pos, zero, all_w),                 # all positions
+                     (vel, lo_w, hi_w)),                 # own vel (KE)
+              writes=((force, lo_w, hi_w),),
+              flops=60.0 * inter,
+              mem_bytes=4.0 * (nw + 2.0 * (hi_w - lo_w)),
+              instr_words=3.0 * inter)
+        if mode == "lock":
+            for w in range(W):
                 with rt.span(w, ENERGY_LOCK):
                     rt.read(w, energy, 0, 2)
                     rt.write(w, energy, 0, 2)
-            else:
-                rt.reduce(w, "potential", 1.0)
-                rt.reduce(w, "kinetic", 1.0)
+        else:
+            _reduce_all(rt, "potential")
+            _reduce_all(rt, "kinetic")
         rt.barrier()
 
         # phase B: velocity-Verlet update of own particles
-        for w in range(W):
-            p0, p1 = w * chunk * ndim, ((w + 1) * chunk if w < W - 1
-                                        else n_particles) * ndim
-            phase(w,
-                  reads=((pos, p0, p1), (vel, p0, p1),
-                         (acc, p0, p1), (force, p0, p1)),
-                  writes=((pos, p0, p1), (vel, p0, p1), (acc, p0, p1)),
-                  flops=12.0 * (p1 - p0), mem_bytes=7.0 * 4 * (p1 - p0))
+        phase(reads=((pos, lo_w, hi_w), (vel, lo_w, hi_w),
+                     (acc, lo_w, hi_w), (force, lo_w, hi_w)),
+              writes=((pos, lo_w, hi_w), (vel, lo_w, hi_w),
+                      (acc, lo_w, hi_w)),
+              flops=12.0 * (hi_w - lo_w), mem_bytes=7.0 * 4 * (hi_w - lo_w))
         rt.barrier()
         if on_iter is not None:
             on_iter(it, rt)

@@ -1,0 +1,160 @@
+"""Bitmask protocol-sweep kernels for the RegC sharing directory.
+
+The directory's boolean page-state planes (valid/dirty/wprot, one row per
+worker — see ``core.directory.RegionDirectory``) pack 32 pages per lane as
+little-endian ``uint32`` bitmasks: bit ``j`` of word ``k`` in row ``w`` is
+directory column ``32*k + j`` of worker ``w``.  At 256 workers x millions
+of pages that turns the two whole-plane reductions the barrier flush needs
+into dense integer kernels that run on the accelerator:
+
+* ``popcount_rows``  — per-worker dirty-page counts (the barrier-flush
+  writeback charge), a SWAR popcount + row reduction over the packed plane;
+* ``coverage_multi`` — the shared-interval sweep's coverage cumsum over the
+  2W sorted window bounds (pages under >= 2 worker windows are the only
+  candidates for sharer invalidation).
+
+Both are integer-exact, so protocol traffic is identical on every backend
+(``tests/test_directory.py`` oracles the packed kernels against the boolean
+planes).  The kernels follow the repo convention (``kernels/ops.py``):
+identical kernel bodies run compiled on TPU and in interpret mode on CPU.
+When jax itself is unavailable the module degrades to the numpy paths and
+``resolve_backend`` reports that 'pallas' is unavailable.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    HAVE_PALLAS = True
+except Exception:                                  # jax absent / broken
+    HAVE_PALLAS = False
+
+ROWS_PER_BLOCK = 8
+_LANE = 128
+
+
+def resolve_backend(backend: str) -> str:
+    """Map a requested backend to an available one ('pallas' needs jax)."""
+    if backend not in ("numpy", "pallas"):
+        raise ValueError(f"unknown protocol-sweep backend: {backend!r}")
+    if backend == "pallas" and not HAVE_PALLAS:
+        warnings.warn("protocol_sweep: jax/pallas unavailable, "
+                      "falling back to numpy", RuntimeWarning, stacklevel=2)
+        return "numpy"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# bitmask packing (host side, numpy)
+# ---------------------------------------------------------------------------
+
+
+def pack_mask_rows(plane: np.ndarray) -> np.ndarray:
+    """(W, C) bool -> (W, ceil(C/32)) uint32, little-endian bit order:
+    bit j of word k is column 32*k + j."""
+    W, C = plane.shape
+    n_words = -(-C // 32) if C else 0
+    pad = n_words * 32 - C
+    if pad:
+        plane = np.pad(plane, ((0, 0), (0, pad)))
+    if n_words == 0:
+        return np.zeros((W, 0), np.uint32)
+    by = np.packbits(plane.reshape(W, n_words * 4, 8), axis=-1,
+                     bitorder="little")            # (W, n_words*4, 1) uint8
+    return np.ascontiguousarray(by.reshape(W, n_words, 4)).view(
+        np.uint32).reshape(W, n_words)
+
+
+def unpack_mask_rows(bits: np.ndarray, n_cols: int) -> np.ndarray:
+    """Inverse of ``pack_mask_rows`` (oracle/tests)."""
+    W, n_words = bits.shape
+    by = np.ascontiguousarray(bits).view(np.uint8).reshape(W, n_words * 4, 1)
+    cols = np.unpackbits(by, axis=-1, bitorder="little").reshape(W, -1)
+    return cols[:, :n_cols].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# row popcount: numpy SWAR / Pallas kernel (same bit-twiddle)
+# ---------------------------------------------------------------------------
+
+
+def _popcount_rows_np(bits: np.ndarray) -> np.ndarray:
+    v = bits.astype(np.uint32, copy=True)
+    v -= (v >> 1) & np.uint32(0x55555555)
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    v = (v * np.uint32(0x01010101)) >> 24
+    return v.sum(axis=1, dtype=np.int64)
+
+
+if HAVE_PALLAS:
+
+    def _popcount_kernel(bits_ref, out_ref):
+        v = bits_ref[...]
+        v = v - ((v >> 1) & jnp.uint32(0x55555555))
+        v = ((v & jnp.uint32(0x33333333))
+             + ((v >> 2) & jnp.uint32(0x33333333)))
+        v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+        v = (v * jnp.uint32(0x01010101)) >> 24
+        out_ref[...] = jnp.sum(v.astype(jnp.int32), axis=1)
+
+    def _popcount_rows_pallas(bits: np.ndarray) -> np.ndarray:
+        W, n_words = bits.shape
+        Wp = -(-W // ROWS_PER_BLOCK) * ROWS_PER_BLOCK
+        Cp = max(-(-n_words // _LANE) * _LANE, _LANE)
+        padded = np.zeros((Wp, Cp), np.uint32)     # zero words add 0 bits
+        padded[:W, :n_words] = bits
+        out = pl.pallas_call(
+            _popcount_kernel,
+            grid=(Wp // ROWS_PER_BLOCK,),
+            in_specs=[pl.BlockSpec((ROWS_PER_BLOCK, Cp), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((ROWS_PER_BLOCK,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((Wp,), jnp.int32),
+            interpret=jax.default_backend() != "tpu",
+        )(jnp.asarray(padded))
+        return np.asarray(out[:W]).astype(np.int64)
+
+    def _coverage_kernel(delta_ref, multi_ref):
+        cover = jnp.cumsum(delta_ref[...], axis=1)
+        multi_ref[...] = (cover >= 2).astype(jnp.int8)
+
+    def _coverage_multi_pallas(delta: np.ndarray) -> np.ndarray:
+        n = delta.size
+        npad = max(-(-n // _LANE) * _LANE, _LANE)
+        padded = np.zeros((1, npad), np.int32)
+        padded[0, :n] = delta
+        out = pl.pallas_call(
+            _coverage_kernel,
+            in_specs=[pl.BlockSpec((1, npad), lambda: (0, 0))],
+            out_specs=pl.BlockSpec((1, npad), lambda: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, npad), jnp.int8),
+            interpret=jax.default_backend() != "tpu",
+        )(jnp.asarray(padded))
+        return np.asarray(out[0, :n]).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def popcount_rows(bits: np.ndarray, *, backend: str = "numpy") -> np.ndarray:
+    """(W, n_words) uint32 -> (W,) int64 per-row set-bit counts."""
+    if bits.shape[1] == 0:
+        return np.zeros(bits.shape[0], np.int64)
+    if resolve_backend(backend) == "pallas":
+        return _popcount_rows_pallas(bits)
+    return _popcount_rows_np(bits)
+
+
+def coverage_multi(delta: np.ndarray, *, backend: str = "numpy") -> np.ndarray:
+    """Sorted-bound deltas (+1 window start / -1 window end) -> boolean
+    mask of sweep points where the running cover count is >= 2."""
+    if resolve_backend(backend) == "pallas":
+        return _coverage_multi_pallas(delta.astype(np.int32))
+    return np.cumsum(delta) >= 2

@@ -61,6 +61,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
             + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):     # jax <= 0.4.x: one dict per program
+            ca = ca[0] if ca else {}
         rec["xla_cost_analysis"] = {
             k: v for k, v in ca.items()
             if k in ("flops", "bytes accessed") and v == v}

@@ -209,6 +209,144 @@ def test_directory_trace_multi_lock(proto):
     _assert_same_traffic(ref, fast)
 
 
+# ---------------------------------------------------------------------------
+# phase_all (worker-axis batched driver): W-sweep equivalence vs the
+# per-worker `phase` path on seeded false-sharing / spill / multi-lock
+# phase traces.  Traffic must be field-for-field identical and the modeled
+# clocks bit-equal (the batched driver replays the same per-worker charge
+# sequence, just op-major — see regc_scale.phase_all).
+# ---------------------------------------------------------------------------
+
+W_SWEEP = [2, 4, 16, 64]
+
+
+def _assert_drivers_equal(loop_rt, batched_rt, ctx=""):
+    for f in dataclasses.fields(Traffic):
+        assert (getattr(loop_rt.traffic, f.name)
+                == getattr(batched_rt.traffic, f.name)), (
+            ctx, f.name, loop_rt.traffic, batched_rt.traffic)
+    np.testing.assert_allclose(batched_rt.clock, loop_rt.clock,
+                               rtol=0, atol=0)
+
+
+def _drive(rt, phases, driver):
+    """phases: list of (reads, writes, spans) where reads/writes are
+    (ga_idx, lo(W,), hi(W,)) and spans is a list of (lock, ga_idx, lo, hi)
+    per-worker critical-section writes run after the bulk phase."""
+    gas = [rt.alloc(64 * 64), rt.alloc(64 * 64)]
+    W = rt.W
+    for reads, writes, spans in phases:
+        r = [(gas[g], lo, hi) for g, lo, hi in reads]
+        wr = [(gas[g], lo, hi) for g, lo, hi in writes]
+        flops = 7.0 * np.arange(1, W + 1)
+        if driver == "batched":
+            rt.phase_all(reads=r, writes=wr, flops=flops, mem_bytes=64.0)
+        else:
+            for w in range(W):
+                rt.phase(w,
+                         reads=[(ga, int(lo[w]), int(hi[w]))
+                                for ga, lo, hi in r],
+                         writes=[(ga, int(lo[w]), int(hi[w]))
+                                 for ga, lo, hi in wr],
+                         flops=float(flops[w]), mem_bytes=64.0)
+        for lock, g, lo, hi in spans:
+            for w in range(W):
+                with rt.span(w, lock):
+                    rt.read(w, gas[g], lo, hi)
+                    rt.write(w, gas[g], lo, hi)
+        rt.barrier()
+    return rt
+
+
+def _seeded_phases(kind, W, seed=0):
+    rng = np.random.default_rng(seed)
+    n_words = 64 * 64
+    phases = []
+    for it in range(4):
+        if kind == "false_sharing":
+            # all workers share low pages; writes are disjoint slivers of
+            # the SAME pages (sub-page intervals) + an overlapping halo
+            sl = 3 + int(rng.integers(0, 5))
+            lo_w = np.arange(W, dtype=np.int64) * sl
+            reads = [(0, np.zeros(W, np.int64),
+                      np.full(W, 64 + int(rng.integers(0, 64)), np.int64))]
+            writes = [(0, lo_w, lo_w + sl)]
+            spans = []
+        elif kind == "multi_lock":
+            blk = n_words // W
+            lo_b = np.arange(W, dtype=np.int64) * blk
+            reads = [(1, np.maximum(lo_b - 37, 0),
+                      np.minimum(lo_b + blk + 41, n_words))]
+            writes = [(1, lo_b, lo_b + blk)]
+            spans = [(it % 2, 0, 100, 104), (2, 0, 200, 202 + it)]
+        else:                      # spill: stream blocks >> cache
+            blk = n_words // W
+            lo_b = np.arange(W, dtype=np.int64) * blk
+            reads = [(0, lo_b, lo_b + blk)]
+            writes = [(1, lo_b + int(rng.integers(0, 7)),
+                       lo_b + blk - int(rng.integers(0, 5)))]
+            spans = []
+        phases.append((reads, writes, spans))
+    return phases
+
+
+@pytest.mark.parametrize("W", W_SWEEP)
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO])
+@pytest.mark.parametrize("kind", ["false_sharing", "multi_lock"])
+def test_phase_all_matches_phase(W, proto, kind):
+    rts = {}
+    for driver in ("loop", "batched"):
+        rt = RegCScaleRuntime(W, page_words=64, protocol=proto, prefetch=1,
+                              model_mechanism=True)
+        _drive(rt, _seeded_phases(kind, W, seed=W), driver)
+        rts[driver] = rt
+    _assert_drivers_equal(rts["loop"], rts["batched"], (W, proto, kind))
+
+
+@pytest.mark.parametrize("W", W_SWEEP)
+@pytest.mark.parametrize("cache_pages", [6, 16, 10 ** 6])
+def test_phase_all_matches_phase_spill(W, cache_pages):
+    """Small caches force the per-phase fallback (eviction possible);
+    the huge cache exercises the batched tick/incache bookkeeping —
+    both must reproduce the per-worker path exactly."""
+    rts = {}
+    for driver in ("loop", "batched"):
+        rt = RegCScaleRuntime(W, page_words=64, protocol=FINE_PROTO,
+                              prefetch=1, model_mechanism=False,
+                              cache_pages=cache_pages)
+        _drive(rt, _seeded_phases("spill", W, seed=W), driver)
+        rts[driver] = rt
+    _assert_drivers_equal(rts["loop"], rts["batched"], (W, cache_pages))
+
+
+@pytest.mark.parametrize("W", W_SWEEP)
+def test_phase_all_apps_end_to_end(W):
+    """The three paper apps, batched vs loop driver, traffic identical
+    and clocks bit-equal (the benchmark CSV bit-identity guarantee)."""
+    from repro.dsm.apps import jacobi, molecular_dynamics, stream_triad
+    for app, kw in ((stream_triad, dict(n=64 * 1024, iters=2)),
+                    (jacobi, dict(n=256, iters=2, mode="lock")),
+                    (molecular_dynamics,
+                     dict(n_particles=128, iters=2, mode="reduction"))):
+        rts = {}
+        for driver in ("loop", "batched"):
+            rt = RegCScaleRuntime(W, protocol=FINE_PROTO, prefetch=1,
+                                  model_mechanism=True)
+            app(rt, driver=driver, **kw)
+            rts[driver] = rt
+        _assert_drivers_equal(rts["loop"], rts["batched"],
+                              (W, app.__name__))
+
+
+def test_phase_all_rejects_open_spans():
+    rt = RegCScaleRuntime(2, page_words=64)
+    ga = rt.alloc(256)
+    rt.acquire(0, 0)
+    with pytest.raises(AssertionError):
+        rt.phase_all(reads=[(ga, 0, 64)])
+    rt.release(0, 0)
+
+
 def test_scale_fine_beats_page_on_small_span_updates():
     """Paper Table I / §V: consistency-region updates move diffs (fine) vs
     whole pages (page) — 64 workers, steady state (cold fetches amortized)."""
