@@ -29,6 +29,15 @@ def make_rt(series: str, workers: int, **kw) -> RegCScaleRuntime:
     return RegCScaleRuntime(workers, protocol=SERIES[series], **kw)
 
 
+def traffic_fields(rt) -> Dict[str, int]:
+    """Exact per-point protocol traffic, flattened for CSV/JSON rows
+    (``tr_`` prefix).  ``benchmarks.compare`` diffs these field-for-field
+    and fails on ANY mismatch — the exactness regression gate."""
+    import dataclasses
+    return {f"tr_{f.name}": getattr(rt.traffic, f.name)
+            for f in dataclasses.fields(type(rt.traffic))}
+
+
 class SteadyState:
     """Capture per-iteration modeled time, skipping the cold first iter."""
 
@@ -52,9 +61,37 @@ class SteadyState:
         return (self.times[-1] - self.times[0]) / (len(self.times) - 1)
 
 
+def _point_keys(rows) -> set:
+    return {(r.get("figure"), r.get("series"), str(r.get("p")))
+            for r in rows}
+
+
 def write_csv(name: str, rows: List[Dict]):
+    """Write section rows to ``artifacts/bench/<name>.csv``.
+
+    The committed CSVs are ground truth for the no-drift tests and the
+    compare traffic gate, so a *partial* invocation (e.g. a single-figure
+    or smoke run) must not clobber a richer artifact: if the existing
+    file covers (figure, series, p) points the new rows lack, the rows
+    land in ``<name>.partial.csv`` instead, with a printed notice.
+    ``BENCH_REFRESH=1`` overrides the guard — the escape hatch for
+    deliberate point removals/renames, which would otherwise leave a
+    stale key in the committed file forever."""
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     path = OUT_DIR / f"{name}.csv"
+    if path.exists() and os.environ.get("BENCH_REFRESH") != "1":
+        try:
+            with open(path, newline="") as fh:
+                old_keys = _point_keys(csv.DictReader(fh))
+        except Exception:
+            old_keys = set()
+        missing = old_keys - _point_keys(rows)
+        if missing:
+            partial = OUT_DIR / f"{name}.partial.csv"
+            print(f"write_csv: {path} covers {len(missing)} point(s) this "
+                  f"run lacks; writing {partial} instead (BENCH_REFRESH=1 "
+                  "forces a refresh after deliberate point removals)")
+            path = partial
     fields: List[str] = []
     for r in rows:                     # union of keys, first-seen order
         for k in r:
@@ -91,7 +128,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                 "W": r["p"], "driver": r.get("driver", "loop"),
                 "t_wall_s": r.get("t_wall_s"),
                 "t_model_s": r.get("t_model_s", r.get("t_iter_s")),
-                "total_bytes": r.get("net_bytes", 0)})
+                "total_bytes": r.get("net_bytes", 0),
+                **{k: v for k, v in r.items() if k.startswith("tr_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

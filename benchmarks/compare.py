@@ -1,15 +1,25 @@
-"""Diff two ``BENCH_scale.json`` files and fail on wall-time regressions.
+"""Diff two ``BENCH_scale.json`` files; fail on wall-time regressions AND
+on any exact-traffic drift.
 
-``python -m benchmarks.compare BASE NEW [--threshold 0.3] [--min-wall 0.2]``
-exits non-zero when a per-section wall time (or the total) regressed by more
-than ``threshold`` (relative), ignoring sections faster than ``min-wall``
-seconds (pure noise on a busy box).  Point rows are matched on
-(section, protocol, W, driver) and compared on modeled time and traffic —
-those are deterministic, so ANY drift is reported (report-only by default;
-``--strict-model`` turns modeled/traffic drift into failures too).
+``python -m benchmarks.compare BASE NEW [--threshold 0.3] [--min-wall 0.2]
+[--sections SUBSTR ...]`` exits non-zero when
 
-``benchmarks.run --fast`` smoke-invokes :func:`report` against the previous
-JSON so every fast run prints its own trajectory.
+* a per-section wall time (or the total) regressed by more than
+  ``threshold`` (relative), ignoring sections faster than ``min-wall``
+  seconds (pure noise on a busy box); or
+* a point's exact protocol traffic changed — ``total_bytes`` or any
+  ``tr_*`` field both files carry.  Traffic is deterministic (the
+  runtime's exactness invariant), so a mismatch is a correctness
+  regression, not noise, and always fails — spill sections included.
+
+Point rows match on (section, protocol, W, driver).  Modeled-time drift
+stays report-only unless ``--strict-model``.  ``--sections`` restricts
+the diff to sections/protocols containing any given substring (e.g.
+``--sections spill``).
+
+``benchmarks.run --fast`` smoke-invokes :func:`report` against the
+previous JSON — once in full and once focused on the spill sections — so
+every fast run prints its own trajectory and traffic gate.
 """
 from __future__ import annotations
 
@@ -17,7 +27,7 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 def _section_walls(data: Dict) -> Dict[str, float]:
@@ -33,15 +43,24 @@ def _point_key(r: Dict) -> Tuple:
             r.get("driver", "loop"))
 
 
+def _keep(name, sections: Optional[List[str]]) -> bool:
+    return sections is None or any(s in str(name) for s in sections)
+
+
 def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
-         min_wall: float = 0.2) -> Tuple[List[str], List[str], int]:
+         min_wall: float = 0.2,
+         sections: Optional[List[str]] = None
+         ) -> Tuple[List[str], List[str], int]:
     """Returns (regressions, notes, n_model_drift): regressions are gate
-    failures, notes are informational lines, n_model_drift counts points
-    whose deterministic modeled time / traffic changed."""
+    failures (wall regressions AND exact-traffic mismatches), notes are
+    informational lines, n_model_drift counts points whose deterministic
+    modeled time changed.  ``sections`` filters by substring."""
     regressions, notes = [], []
 
     bw, nw = _section_walls(base), _section_walls(new)
     for name in sorted(bw.keys() & nw.keys()):
+        if not _keep(name, sections):
+            continue
         b, n = bw[name], nw[name]
         if max(b, n) < min_wall:
             continue
@@ -53,7 +72,7 @@ def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
             notes.append(line)
     bt = base.get("meta", {}).get("total_wall_s")
     nt = new.get("meta", {}).get("total_wall_s")
-    if bt and nt:
+    if bt and nt and sections is None:
         rel = (nt - bt) / bt
         line = f"total: wall {bt:.2f}s -> {nt:.2f}s ({rel:+.0%})"
         (regressions if rel > threshold else notes).append(line)
@@ -61,32 +80,61 @@ def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
     b_rows = {_point_key(r): r for r in base.get("rows", [])}
     n_rows = {_point_key(r): r for r in new.get("rows", [])}
     drift = 0
+    n_compared = 0
     for k in sorted(b_rows.keys() & n_rows.keys(), key=str):
+        if not (_keep(k[0], sections) or _keep(k[1], sections)):
+            continue
+        n_compared += 1
         br, nr = b_rows[k], n_rows[k]
-        if br.get("total_bytes") != nr.get("total_bytes"):
-            drift += 1
-            notes.append(f"point {k}: traffic {br.get('total_bytes')} -> "
-                         f"{nr.get('total_bytes')}")
+        # exact traffic: total_bytes plus every tr_* field both runs
+        # recorded.  Deterministic -> any mismatch is a gate failure.
+        tfields = ["total_bytes"] + sorted(
+            set(f for f in br if f.startswith("tr_")) & set(nr))
+        bad = [f for f in tfields if br.get(f) != nr.get(f)]
+        if bad:
+            regressions.append(
+                "point %s: TRAFFIC mismatch %s" % (k, ", ".join(
+                    f"{f} {br.get(f)} -> {nr.get(f)}" for f in bad)))
         elif (br.get("t_model_s") is not None
               and br.get("t_model_s") != nr.get("t_model_s")):
             drift += 1
             notes.append(f"point {k}: t_model {br.get('t_model_s')} -> "
                          f"{nr.get('t_model_s')}")
-    only_b = b_rows.keys() - n_rows.keys()
-    only_n = n_rows.keys() - b_rows.keys()
-    if only_b:
-        notes.append(f"{len(only_b)} point(s) only in base")
+    sd_new = {(k[0], k[3]) for k in n_rows}
+    only_b = [k for k in b_rows.keys() - n_rows.keys()
+              if _keep(k[0], sections) or _keep(k[1], sections)]
+    # a vanished point IS a traffic regression (its exact counters are
+    # gone) — but only when the new run actually exercised that
+    # (section, driver) pairing; a --driver batched run diffed against a
+    # --driver both baseline, or a partial-section run, just didn't run
+    # the others.  New points are additions and stay informational.
+    gone = [k for k in only_b if (k[0], k[3]) in sd_new]
+    skipped = len(only_b) - len(gone)
+    if gone:
+        ex = ", ".join(str(k) for k in sorted(gone, key=str)[:3])
+        regressions.append(
+            f"{len(gone)} point(s) VANISHED vs base (e.g. {ex})")
+    if skipped:
+        notes.append(f"{skipped} base point(s) whose (section, driver) "
+                     "was not run")
+    only_n = [k for k in n_rows.keys() - b_rows.keys()
+              if _keep(k[0], sections) or _keep(k[1], sections)]
     if only_n:
         notes.append(f"{len(only_n)} point(s) only in new")
-    if drift:
-        notes.append(f"{drift} point(s) drifted in modeled time/traffic")
+    if n_compared:
+        notes.append(f"{n_compared} point(s) compared "
+                     f"({drift} modeled-time drift(s), traffic exact "
+                     "on the rest)" if drift else
+                     f"{n_compared} point(s) compared, traffic and "
+                     "modeled time exact")
     return regressions, notes, drift
 
 
 def report(base: Dict, new: Dict, *, threshold: float = 0.3,
-           min_wall: float = 0.2, strict_model: bool = False) -> int:
+           min_wall: float = 0.2, strict_model: bool = False,
+           sections: Optional[List[str]] = None) -> int:
     regressions, notes, drift = diff(base, new, threshold=threshold,
-                                     min_wall=min_wall)
+                                     min_wall=min_wall, sections=sections)
     for line in notes:
         print(f"  {line}")
     for line in regressions:
@@ -95,7 +143,7 @@ def report(base: Dict, new: Dict, *, threshold: float = 0.3,
         print("  no comparable entries")
     failed = bool(regressions) or (strict_model and drift > 0)
     print(f"  verdict: {'FAIL' if failed else 'ok'} "
-          f"({len(regressions)} wall regression(s))")
+          f"({len(regressions)} regression(s))")
     return 1 if failed else 0
 
 
@@ -109,12 +157,17 @@ def main(argv=None) -> int:
     ap.add_argument("--min-wall", type=float, default=0.2,
                     help="ignore sections faster than this many seconds")
     ap.add_argument("--strict-model", action="store_true",
-                    help="also fail on modeled-time/traffic drift")
+                    help="also fail on modeled-time drift")
+    ap.add_argument("--sections", nargs="+", default=None, metavar="SUBSTR",
+                    help="restrict the diff to sections/protocols "
+                         "containing any of these substrings "
+                         "(e.g. --sections spill)")
     args = ap.parse_args(argv)
     base = json.loads(Path(args.base).read_text())
     new = json.loads(Path(args.new).read_text())
     return report(base, new, threshold=args.threshold,
-                  min_wall=args.min_wall, strict_model=args.strict_model)
+                  min_wall=args.min_wall, strict_model=args.strict_model,
+                  sections=args.sections)
 
 
 if __name__ == "__main__":

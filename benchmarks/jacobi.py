@@ -11,7 +11,7 @@ import argparse
 import time
 
 from benchmarks.common import (SteadyState, make_rt, print_rows,
-                               write_bench_json, write_csv)
+                               traffic_fields, write_bench_json, write_csv)
 from repro.dsm.apps import jacobi, jacobi_flops_per_iter
 
 N_BASE = 4096
@@ -19,12 +19,35 @@ CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
 def _run(series: str, mode: str, p: int, n: int, iters: int,
-         driver: str = "batched"):
+         driver: str = "batched", **rt_kw):
     ss = SteadyState()
     t0 = time.perf_counter()
-    rt = make_rt(series, p)
+    rt = make_rt(series, p, **rt_kw)
     jacobi(rt, n, iters, mode=mode, driver=driver, on_iter=ss)
     return ss.per_iter(), rt, time.perf_counter() - t0
+
+
+def spill(iters: int, driver: str):
+    """Jacobi under capacity pressure: the cache holds ~half the
+    per-worker 3-grid working set, so phase 2's halo reads evict phase
+    1's copies every iteration.  Halo overlap + prefetch put every
+    spilling worker inside its neighbours' reach, so the batched driver's
+    disjointness analysis replays them tick-ordered — traffic must stay
+    bit-identical to the loop driver (asserted in tests; recorded here)."""
+    rows = []
+    n = N_BASE
+    for p in (16, 64, 256):
+        cache_pages = max((3 * (n * n // 1024)) // (2 * p), 8)
+        t, rt, t_wall = _run("samhita", "reduction", p, n, iters, driver,
+                             cache_pages=cache_pages)
+        rows.append({"figure": "fig5_spill", "series": "samhita_spill",
+                     "p": p, "n": n, "driver": driver,
+                     "t_iter_s": round(t, 6),
+                     "net_bytes": rt.traffic.total_bytes,
+                     "t_model_s": round(rt.time, 6),
+                     "t_wall_s": round(t_wall, 4),
+                     **traffic_fields(rt)})
+    return rows
 
 
 def strong(iters: int, driver: str):
@@ -46,7 +69,8 @@ def strong(iters: int, driver: str):
                          "invalidations": rt.traffic.invalidations,
                          "diff_bytes": rt.traffic.diff_bytes,
                          "t_model_s": round(rt.time, 6),
-                         "t_wall_s": round(t_wall, 4)})
+                         "t_wall_s": round(t_wall, 4),
+                         **traffic_fields(rt)})
     return rows
 
 
@@ -72,7 +96,8 @@ def weak(iters: int, driver: str):
                          "Mpoints_per_s": round(rate / 1e6, 2),
                          "net_bytes": rt.traffic.total_bytes,
                          "t_model_s": round(rt.time, 6),
-                         "t_wall_s": round(t_wall, 4)})
+                         "t_wall_s": round(t_wall, 4),
+                         **traffic_fields(rt)})
     return rows
 
 
@@ -92,6 +117,8 @@ def main(argv=None):
         rows += strong(args.iters, args.driver)
     if args.all or args.weak:
         rows += weak(args.iters, args.driver)
+    if args.all:
+        rows += spill(max(2, args.iters // 2), args.driver)
     write_csv("jacobi" if args.driver == "batched"
               else f"jacobi_{args.driver}", rows)
     if args.json:

@@ -7,7 +7,7 @@ import argparse
 import time
 
 from benchmarks.common import (SteadyState, make_rt, print_rows,
-                               write_bench_json, write_csv)
+                               traffic_fields, write_bench_json, write_csv)
 from repro.dsm.apps import molecular_dynamics
 
 N_PARTICLES = 8192
@@ -15,12 +15,32 @@ CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
 def _run(series: str, mode: str, p: int, n: int, iters: int,
-         driver: str = "batched"):
+         driver: str = "batched", **rt_kw):
     ss = SteadyState()
     t0 = time.perf_counter()
-    rt = make_rt(series, p)
+    rt = make_rt(series, p, **rt_kw)
     molecular_dynamics(rt, n, iters, mode=mode, driver=driver, on_iter=ss)
     return ss.per_iter(), rt, time.perf_counter() - t0
+
+
+def spill(iters: int, driver: str, n: int):
+    """MD under a cache smaller than the (small) position/force arrays:
+    every worker re-reads ALL positions each step, so spill eviction and
+    the unaligned force-row halos interact — the residual-replay regime
+    (traffic bit-identical across drivers; recorded here)."""
+    rows = []
+    n_pages = -(-(n * 3) // 1024)
+    for p in (16, 64, 256):
+        t, rt, t_wall = _run("samhita", "reduction", p, n, iters, driver,
+                             cache_pages=max(n_pages // 2, 4))
+        rows.append({"figure": "fig7_md_spill", "series": "samhita_spill",
+                     "p": p, "n_particles": n, "driver": driver,
+                     "t_iter_s": round(t, 6),
+                     "net_bytes": rt.traffic.total_bytes,
+                     "t_model_s": round(rt.time, 6),
+                     "t_wall_s": round(t_wall, 4),
+                     **traffic_fields(rt)})
+    return rows
 
 
 def main(argv=None):
@@ -53,7 +73,9 @@ def main(argv=None):
                          "speedup": round(t_ref / t, 3),
                          "net_bytes": rt.traffic.total_bytes,
                          "t_model_s": round(rt.time, 6),
-                         "t_wall_s": round(t_wall, 4)})
+                         "t_wall_s": round(t_wall, 4),
+                         **traffic_fields(rt)})
+    rows += spill(max(2, args.iters // 2), args.driver, n)
     write_csv("molecular_dynamics" if args.driver == "batched"
               else f"molecular_dynamics_{args.driver}", rows)
     if args.json:

@@ -104,8 +104,13 @@ def main(argv=None):
             # smoke-run the regression differ against the previous results
             # (report-only here; CI gates via `python -m benchmarks.compare`)
             from benchmarks import compare
+            cur = json.loads(Path(path).read_text())
             print("== compare vs previous BENCH_scale.json ==")
-            compare.report(prev, json.loads(Path(path).read_text()))
+            compare.report(prev, cur)
+            # focused pass over the spill sections: the capacity-pressure
+            # points are where batched eviction must stay traffic-exact
+            print("== compare --sections spill ==")
+            compare.report(prev, cur, sections=["spill"])
     return all_rows
 
 

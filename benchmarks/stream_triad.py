@@ -11,11 +11,20 @@ import argparse
 import time
 
 from benchmarks.common import (SERIES, SteadyState, make_rt, print_rows,
-                               write_bench_json, write_csv)
-from repro.dsm.apps import stream_triad, triad_bytes_per_iter
+                               traffic_fields, write_bench_json, write_csv)
+from repro.dsm.apps import stream_spill, stream_triad, triad_bytes_per_iter
 
 N_BASE = 16 << 20          # paper: n = 16M doubles-worth of fp32 words
 CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+# Fig-4 cache size: fits the small problem, spills at 2x (also imported
+# by the tests that re-derive committed CSV points)
+SPILL_CACHE_PAGES = 3 * (N_BASE // 1024) + 64
+
+
+def spill_iters(iters: int) -> int:
+    """Iteration rule for the spill section (shared with the no-drift
+    tests so re-derivation always matches the harness)."""
+    return max(4, iters // 2)
 
 
 def bw_gbs(n: int, t_iter: float) -> float:
@@ -35,7 +44,8 @@ def _point(figure: str, series: str, p: int, n: int, iters: int,
             "bandwidth_GBs": round(bw_gbs(n, ss.per_iter()), 3),
             "net_bytes": rt.traffic.total_bytes,
             "t_model_s": round(rt.time, 6),
-            "t_wall_s": round(t_wall, 4)}
+            "t_wall_s": round(t_wall, 4),
+            **traffic_fields(rt)}
 
 
 def strong(iters: int, driver: str):
@@ -63,13 +73,42 @@ def weak(iters: int, driver: str):
 def spill(iters: int, driver: str):
     """samhita only: per-worker problem 2x the local cache (Fig 4)."""
     rows = []
-    cache_pages = 3 * (N_BASE // 1024) + 64        # fits the small problem
+    cache_pages = SPILL_CACHE_PAGES
     for p in CORES:
         for scale, tag in ((1, "fits"), (2, "spills")):
             n = N_BASE * p * scale
             r = _point("fig4_spill", f"samhita_{tag}", p, n, iters, driver,
                        cache_pages=cache_pages)
             rows.append(r)
+    rows += spill_heavy(iters, driver)
+    return rows
+
+
+def spill_heavy(iters: int, driver: str):
+    """Rotating-block spill (``apps.stream_spill``): every pass shifts the
+    block assignment, so each worker's dirty block lands inside its
+    neighbours' reach — the batched driver's window-disjointness analysis
+    routes the interacting workers through tick-ordered residual replay.
+    Traffic stays bit-identical across drivers; the points record the
+    wall cost of the adversarial (non-disjoint) spill regime."""
+    rows = []
+    for p in (16, 64, 256):
+        n = (1 << 17) * p              # 128 pages per worker: the rotating
+        # danger/residual regime is per-page Python in BOTH drivers, so
+        # the point stays small — it gates exactness, not throughput
+        cache_pages = (3 * (n // 1024)) // (2 * p)   # ~¾ of the 2-array set
+        ss = SteadyState()
+        t0 = time.perf_counter()
+        rt = make_rt("samhita", p, cache_pages=cache_pages)
+        stream_spill(rt, n, max(2, iters // 2), sweeps=2, driver=driver,
+                     on_iter=ss)
+        rows.append({"figure": "fig4_spill_heavy", "series": "samhita_rot",
+                     "p": p, "n": n, "driver": driver,
+                     "t_iter_s": round(ss.per_iter(), 6),
+                     "net_bytes": rt.traffic.total_bytes,
+                     "t_model_s": round(rt.time, 6),
+                     "t_wall_s": round(time.perf_counter() - t0, 4),
+                     **traffic_fields(rt)})
     return rows
 
 
@@ -91,7 +130,7 @@ def main(argv=None):
     if args.all or args.weak:
         rows += weak(args.iters, args.driver)
     if args.all or args.spill:
-        rows += spill(max(4, args.iters // 2), args.driver)
+        rows += spill(spill_iters(args.iters), args.driver)
     # non-default drivers get their own CSV so `--driver both` harness
     # runs don't overwrite the batched rows
     write_csv("stream_triad" if args.driver == "batched"

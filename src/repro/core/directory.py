@@ -45,6 +45,10 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+_I64_MAX = np.iinfo(np.int64).max
+_I64_MIN = np.iinfo(np.int64).min
+
+
 def use_dense(n_rows: int, l_max: int) -> bool:
     """Strategy pick for per-op batched plane updates: dense (rows x Lmax)
     gather/scatter matrices win when per-row work is too small to amortize
@@ -68,7 +72,7 @@ class RegionDirectory:
     __slots__ = ("W", "region", "page_lo", "page_hi", "base", "length",
                  "cap", "valid", "dirty", "wprot", "touch", "incache",
                  "shift", "maybe_dirty", "_cov_stale", "_sorted_bases",
-                 "_sorted_ends", "backend")
+                 "_sorted_ends", "backend", "dirty_lo", "dirty_hi")
 
     def __init__(self, n_workers: int, region: int, page_lo: int,
                  page_hi: int, *, track_wprot: bool = False,
@@ -92,6 +96,13 @@ class RegionDirectory:
         # cumulative left-extension shift per row: lets LRU-queue entries
         # recorded before a window grew leftwards map to current columns
         self.shift = np.zeros(n_workers, np.int64)
+        # conservative per-row bounding interval of possibly-dirty pages
+        # (absolute page numbers; empty when lo >= hi).  Widened on ordinary
+        # writes, reset on flush; eviction clears cells without narrowing
+        # them, so the interval over-approximates — which is the sound
+        # direction for the phase_all window-disjointness analysis.
+        self.dirty_lo = np.full(n_workers, _I64_MAX, np.int64)
+        self.dirty_hi = np.full(n_workers, _I64_MIN, np.int64)
         self.maybe_dirty = False
         self._cov_stale = True
         self._sorted_bases: Optional[np.ndarray] = None
@@ -186,33 +197,163 @@ class RegionDirectory:
         return cols, j[None, :] < L[:, None]
 
     def count_range(self, plane: np.ndarray, lo: np.ndarray,
-                    hi: np.ndarray) -> np.ndarray:
-        """(W,) counts of True cells of ``plane`` inside [lo[w], hi[w]),
+                    hi: np.ndarray,
+                    rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-row counts of True cells of ``plane`` inside [lo[i], hi[i]),
         reading out-of-window cells as False (windows need NOT cover the
-        intervals — used by the phase_all eviction precheck)."""
+        intervals — used by the phase_all eviction precheck).  ``rows``
+        restricts the count to a row subset (``lo``/``hi`` then align with
+        ``rows``); default is all W rows."""
+        rows = np.arange(self.W) if rows is None else rows
         if plane.shape[1] == 0:
-            return np.zeros(self.W, np.int64)
+            return np.zeros(rows.size, np.int64)
         L = hi - lo
         Lmax = int(L.max()) if L.size else 0
-        if not use_dense(self.W, Lmax):
-            # wide intervals: per-row contiguous slice sums beat building
-            # the (W, Lmax) gather matrices (see use_dense)
-            out = np.zeros(self.W, np.int64)
-            for w in range(self.W):
-                b = int(self.base[w])
-                if b < 0:
-                    continue
-                c0 = max(int(lo[w]) - b, 0)
-                c1 = min(int(hi[w]) - b, int(self.length[w]))
-                if c1 > c0:
-                    out[w] = int(plane[w, c0:c1].sum())
+        base = self.base[rows]
+        length = self.length[rows]
+        if not use_dense(rows.size, Lmax):
+            # wide intervals: contiguous slice sums beat building the
+            # (R, Lmax) gather matrices (see use_dense).  Rows sharing a
+            # clipped window span (block-partitioned phases are uniform up
+            # to edge rows) reduce together as one 2D slice-view sum.
+            livem = base >= 0
+            c0 = np.where(livem, np.maximum(lo - base, 0), 0)
+            c1 = np.maximum(np.where(livem, np.minimum(hi - base, length),
+                                     0), c0)
+            out = np.zeros(rows.size, np.int64)
+            if rows.size > 8:
+                uk, inv = np.unique(np.stack([c0, c1], axis=1), axis=0,
+                                    return_inverse=True)
+                for g in range(uk.shape[0]):
+                    a, b = int(uk[g, 0]), int(uk[g, 1])
+                    if b <= a:
+                        continue
+                    sel = np.nonzero(inv == g)[0]
+                    rb = self.row_block(rows[sel])
+                    out[sel] = plane[rb, a:b].sum(axis=1, dtype=np.int64)
+                return out
+            for i, w in enumerate(rows):
+                a, b = int(c0[i]), int(c1[i])
+                if b > a:
+                    out[i] = int(plane[w, a:b].sum())
             return out
         j = np.arange(Lmax)
-        cols = (lo - self.base)[:, None] + j[None, :]
+        cols = (lo - base)[:, None] + j[None, :]
         m = ((j[None, :] < L[:, None]) & (cols >= 0)
-             & (cols < self.length[:, None]) & (self.base >= 0)[:, None])
-        sub = plane[np.arange(self.W)[:, None], np.where(m, cols, 0)] & m
+             & (cols < length[:, None]) & (base >= 0)[:, None])
+        sub = plane[rows[:, None], np.where(m, cols, 0)] & m
         return sub.sum(axis=1)
+
+    # ------------------------------------------------------------------
+    # dirty bounding intervals (phase_all window-disjointness analysis)
+    # ------------------------------------------------------------------
+
+    def note_dirty(self, rows, lo, hi):
+        """Widen the conservative dirty bounding interval of ``rows`` to
+        cover absolute pages [lo, hi) (scalars or aligned arrays)."""
+        self.dirty_lo[rows] = np.minimum(self.dirty_lo[rows], lo)
+        self.dirty_hi[rows] = np.maximum(self.dirty_hi[rows], hi)
+
+    def clear_dirty_bounds(self, rows=None):
+        """Reset dirty bounds after a flush (``rows=None`` resets all)."""
+        if rows is None:
+            self.dirty_lo[:] = _I64_MAX
+            self.dirty_hi[:] = _I64_MIN
+        else:
+            self.dirty_lo[rows] = _I64_MAX
+            self.dirty_hi[rows] = _I64_MIN
+
+    # ------------------------------------------------------------------
+    # batched eviction primitives (segment LRU over touch-run spans)
+    # ------------------------------------------------------------------
+
+    def row_block(self, rows: np.ndarray):
+        """Row indexer for (rows x column-slice) plane access: a basic
+        slice (zero-copy views, in-place updates) when ``rows`` is an
+        ascending contiguous run — the whole axis or a lockstep-group
+        stretch, the spill steady states — else the index array itself
+        (gather/scatter).  Contiguity is PROVEN (unit steps), not
+        inferred from size/bounds: a permuted row set must never alias a
+        slice, or per-row values misalign with the plane's row order."""
+        if rows.size > 1:
+            if bool((np.diff(rows) == 1).all()):
+                return slice(int(rows[0]), int(rows[-1]) + 1)
+        elif rows.size == 1:
+            return slice(int(rows[0]), int(rows[0]) + 1)
+        return rows
+
+    def run_live(self, rows: np.ndarray, start: int, length: int,
+                 run_ticks: np.ndarray) -> np.ndarray:
+        """(R, length) liveness mask of one LRU touch run per row: cell j
+        of row i is live (still the current LRU entry for its page, and
+        the page still occupies a cache slot) iff its touch tick still
+        equals the run's tick ``run_ticks[i]`` and ``incache`` is set
+        (ticks are one-per-run and globally monotone, so any re-touch by
+        a later run strictly exceeds it).  All rows' runs must share the
+        column span [start, start+length) — the lockstep case batched
+        eviction groups on."""
+        s = slice(start, start + length)
+        rb = self.row_block(rows)
+        return ((self.touch[rb, s] == run_ticks[:, None])
+                & self.incache[rb, s])
+
+    def lru_take(self, live: np.ndarray, k: np.ndarray,
+                 tot: Optional[np.ndarray] = None) -> np.ndarray:
+        """Segment-LRU selection: per row, the first (oldest-tick) k[i]
+        live cells of the run.  Fully-live runs (``tot`` == run length —
+        the streaming steady state) reduce to a columnar cutoff; else a
+        boolean prefix-count on numpy, or on 'pallas' the run packs to
+        uint32 bitmasks and the ``take_first_k`` rank-select kernel
+        computes the mask (integer-exact either way)."""
+        k = np.asarray(k)
+        if tot is not None and bool((tot == live.shape[1]).all()):
+            return np.arange(live.shape[1]) < k[:, None]
+        if self.backend == "pallas":
+            from repro.kernels import protocol_sweep as _ps
+            bits = _ps.take_first_k(_ps.pack_mask_rows(live),
+                                    np.asarray(k, np.int64),
+                                    backend=self.backend)
+            return _ps.unpack_mask_rows(bits, live.shape[1])
+        return live & (np.cumsum(live, axis=1, dtype=np.int32)
+                       <= k[:, None])
+
+    def evict_rows(self, rows: np.ndarray, start: int, length: int,
+                   take: Optional[np.ndarray], *,
+                   set_wprot: bool) -> np.ndarray:
+        """Batched eviction of the ``take`` cells (an (R, length) mask over
+        columns [start, start+length) of ``rows``; None takes the whole
+        span — the streaming steady state): dirty victims clear and
+        re-arm write protection (when ``set_wprot``), then valid and the
+        cache slot (incache) drop.  Returns per-row dirty-victim counts —
+        the runtime's writeback charge; on 'pallas' the count is a packed
+        bitmask popcount.  Plane updates only: traffic/clock accounting
+        (and the sharer-invalidation step, which the caller must have
+        proven a no-op) stay in the runtime."""
+        s = slice(start, start + length)
+        rb = self.row_block(rows)
+        dm = self.dirty[rb, s] if take is None else self.dirty[rb, s] & take
+        if self.backend == "pallas":
+            from repro.kernels import protocol_sweep as _ps
+            db = _ps.popcount_rows(_ps.pack_mask_rows(dm),
+                                   backend=self.backend)
+        else:
+            db = dm.sum(axis=1, dtype=np.int64)
+        if take is None:
+            if db.any():
+                if set_wprot and self.wprot is not None:
+                    self.wprot[rb, s] |= dm
+                self.dirty[rb, s] = False
+            self.valid[rb, s] = False
+            self.incache[rb, s] = False
+        else:
+            keep = ~take
+            if db.any():
+                self.dirty[rb, s] &= ~dm
+                if set_wprot and self.wprot is not None:
+                    self.wprot[rb, s] |= dm
+            self.valid[rb, s] &= keep
+            self.incache[rb, s] &= keep
+        return db
 
     def overlap_rows(self, lo: int, hi: int,
                      exclude: Optional[int] = None) -> np.ndarray:

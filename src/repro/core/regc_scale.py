@@ -17,11 +17,14 @@ Key representation choices:
   boolean-mask / gather-scatter numpy ops instead of ``range(W)`` loops;
 * reads/writes are per-*interval* (vectorized over the page range);
 * eviction is watermark-triggered: a per-worker resident counter makes the
-  common no-eviction case O(1), and when the watermark is crossed the
-  oldest pages are selected in one batched argpartition at the *end* of
-  the op.  Per-page monotone touch ticks make the victim set identical to
-  the reference runtime's per-op LRU (proved equivalent because no page is
-  re-touched after its last tick within an op — see DIRECTORY.md);
+  common no-eviction case O(1); past the watermark the oldest pages pop
+  from a tick-ordered FIFO of touch runs (one monotone tick per run —
+  victim order within a run is its column order, which is the reference's
+  per-op LRU order; see DIRECTORY.md).  ``phase_all`` never abandons the
+  batched path under spill: a window-disjointness analysis over the
+  declared ranges proves which workers' evictions cannot interact, evicts
+  them with vectorized segment-LRU plane ops, and replays only the
+  residual interacting workers tick-ordered;
 * lock notices are flat, version-segmented numpy interval logs
   (``core.directory.IntervalLog``); acquire/barrier replay is one slice +
   segment-min/max coalesce per (lock, worker);
@@ -122,20 +125,26 @@ class RegCScaleRuntime:
         # per-worker cache occupancy (valid + invalidated-but-not-evicted
         # pages, matching the reference's LRU dict): the eviction watermark
         self.resident = np.zeros(n_workers, np.int64)
-        # per-worker FIFO of touch runs [t0, region, col0, n, off, shift0]:
-        # ticks are globally monotone, so the queue is tick-ordered and an
-        # LRU pop is a front scan that lazily skips re-touched (stale) and
-        # already-evicted cells — amortized O(1) per page
+        # per-worker FIFO of touch runs
+        # [t0, region, col0, n, off, shift0, pristine]: ticks are globally
+        # monotone (one per run), so the queue is tick-ordered and an LRU
+        # pop is a front scan that lazily skips re-touched (stale) and
+        # already-evicted cells — amortized O(1) per page.  ``pristine``
+        # runs were never overlapped by a later op of the same worker, so
+        # their live cells are exactly the [off, n) suffix and eviction
+        # needs no touch scan (see _q_append)
         self._lru_q: List[deque] = [deque() for _ in range(n_workers)]
+        self._q_degraded = np.zeros(n_workers, bool)
         self._dirty_regions: List[set] = [set() for _ in range(n_workers)]
         self._reductions: Dict[str, List[Tuple[float, str]]] = {}
         self._reduction_results: Dict[str, float] = {}
         self._tick = 0
         self._rows_all = np.arange(n_workers)
-        # one-way latch: once a phase_all precheck fails, later phases go
-        # straight to the per-worker path (a spilling workload keeps
-        # spilling; both paths are exact, so the hint only affects speed)
-        self._assume_spill = False
+        # phase_all path counters (which engine paths ran; the trace-fuzz
+        # suite asserts the batched-eviction and residual paths are
+        # actually exercised rather than silently bypassed)
+        self.stats = {"batched_phases": 0, "evict_batch_rounds": 0,
+                      "danger_ops": 0, "residual_replays": 0}
 
     # ------------------------------------------------------------------
     def alloc(self, n_elems: int) -> GasArray:
@@ -177,6 +186,39 @@ class RegCScaleRuntime:
     # interval fetch / batched eviction
     # ------------------------------------------------------------------
 
+    _Q_SCAN_LIMIT = 64
+
+    def _q_append(self, w: int, region: int, col0: int, n: int,
+                  shift0: int) -> int:
+        """Append a touch run to w's tick-ordered LRU queue and return its
+        fresh (monotone) tick.  Older queued runs of the same region whose
+        live span overlaps the new run lose their ``pristine`` flag —
+        their overlapped cells are re-touched by this op, so the
+        prefix-liveness shortcut no longer holds for them.  Queues longer
+        than the scan limit (per-page danger-path runs) degrade wholesale
+        to non-pristine, keeping appends O(1) amortized; eviction then
+        falls back to the exact touch scan."""
+        self._tick += 1
+        q = self._lru_q[w]
+        pristine = True
+        if len(q) > self._Q_SCAN_LIMIT:
+            if not self._q_degraded[w]:
+                for e in q:
+                    e[6] = False
+                self._q_degraded[w] = True
+            pristine = False
+        else:
+            self._q_degraded[w] = False
+            hi = col0 + n
+            for e in q:
+                if e[1] != region or not e[6]:
+                    continue
+                ec0 = e[2] + (shift0 - e[5])
+                if ec0 + e[4] < hi and ec0 + e[3] > col0:
+                    e[6] = False
+        q.append([self._tick, region, col0, n, 0, shift0, pristine])
+        return self._tick
+
     def _fetch_range(self, w: int, region: int, p_lo: int, p_hi: int):
         """Make pages [p_lo, p_hi) valid at w, charging misses."""
         d = self.dirs[region]
@@ -185,16 +227,17 @@ class RegCScaleRuntime:
         n = p_hi - p_lo
         n_miss = n - int(d.valid[w, s].sum())
         if d.touch is not None:
-            # per-page monotone ticks: ascending within the interval, so
-            # batched eviction reproduces the reference's per-op LRU exactly
-            d.touch[w, s] = np.arange(self._tick + 1, self._tick + 1 + n)
-            self._lru_q[w].append([self._tick + 1, region, s.start, n, 0,
-                                   int(d.shift[w])])
+            # one monotone tick per touch RUN (column order within a run
+            # is the reference's per-op LRU order, so per-page tick values
+            # are redundant — see DIRECTORY.md): re-touches by later runs
+            # get strictly larger ticks, which is all staleness detection
+            # compares
+            d.touch[w, s] = self._q_append(w, region, s.start, n,
+                                           int(d.shift[w]))
             n_enter = n - int(d.incache[w, s].sum())
             if n_enter:
                 d.incache[w, s] = True
                 self.resident[w] += n_enter
-        self._tick += n
         if n_miss:
             if self.protocol != IDEAL_PROTO:
                 self.traffic.page_fetches += n_miss
@@ -250,12 +293,22 @@ class RegCScaleRuntime:
         q = self._lru_q[w]
         while k > 0:
             run = q[0]
-            t0, region, col0, n, off, shift0 = run
+            t0, region, col0, n, off, shift0, pristine = run
             d = self.dirs[region]
             c0 = col0 + (int(d.shift[w]) - shift0)
+            if pristine:
+                # never re-touched: live cells are exactly [off, n), so
+                # the victims are a contiguous prefix — no touch scan
+                tk = min(k, n - off)
+                self._evict_now(w, d, np.arange(c0 + off, c0 + off + tk))
+                k -= tk
+                if off + tk == n:
+                    q.popleft()
+                else:
+                    run[4] = off + tk
+                continue
             sl = slice(c0 + off, c0 + n)      # run cells are contiguous
-            live = ((d.touch[w, sl] == np.arange(t0 + off, t0 + n))
-                    & d.incache[w, sl])
+            live = (d.touch[w, sl] == t0) & d.incache[w, sl]
             idx = np.nonzero(live)[0]
             if idx.size == 0:
                 q.popleft()
@@ -286,10 +339,8 @@ class RegCScaleRuntime:
         if not d.incache[w, col]:
             d.incache[w, col] = True
             self.resident[w] += 1
-        self._tick += 1
-        d.touch[w, col] = self._tick
-        self._lru_q[w].append([self._tick, d.region, col, 1, 0,
-                               int(d.shift[w])])
+        d.touch[w, col] = self._q_append(w, d.region, col, 1,
+                                         int(d.shift[w]))
         if self.resident[w] > self.cache_pages:
             self._evict_cells(w, int(self.resident[w]) - self.cache_pages)
         return n_miss
@@ -338,6 +389,8 @@ class RegCScaleRuntime:
         d = self.dirs[region]
         d.ensure(w, p_lo, p_hi)
         in_span = bool(self.spans[w])
+        if not in_span:
+            d.note_dirty(w, p_lo, p_hi)
         n_words = hi - lo
 
         # mechanism cost: instrumented stores (fine) / write faults (page)
@@ -392,14 +445,12 @@ class RegCScaleRuntime:
         n = p_hi - p_lo
         n_new = n - int(d.valid[w, s].sum())
         if d.touch is not None:
-            d.touch[w, s] = np.arange(self._tick + 1, self._tick + 1 + n)
-            self._lru_q[w].append([self._tick + 1, region, s.start, n, 0,
-                                   int(d.shift[w])])
+            d.touch[w, s] = self._q_append(w, region, s.start, n,
+                                           int(d.shift[w]))
             n_enter = n - int(d.incache[w, s].sum())
             if n_enter:
                 d.incache[w, s] = True
                 self.resident[w] += n_enter
-        self._tick += n
         if n_new:
             d.valid[w, s] = True
 
@@ -468,6 +519,7 @@ class RegCScaleRuntime:
         for region in sorted(regions):
             d = self.dirs[region]
             cols = d.row_dirty_cols(w)
+            d.clear_dirty_bounds(w)
             if cols.size == 0:
                 continue
             d.dirty[w, cols] = False
@@ -500,6 +552,7 @@ class RegCScaleRuntime:
             nD_w = d.dirty_counts()        # bitmask popcount on 'pallas'
             total = int(nD_w.sum())
             d.maybe_dirty = False
+            d.clear_dirty_bounds()
             if total == 0:
                 continue
             if self.protocol == IDEAL_PROTO:
@@ -684,7 +737,8 @@ class RegCScaleRuntime:
         interval writes, then the modeled compute + instrumented stores.
         ``reads``/``writes`` are sequences of ``(ga, lo, hi)``.  This is
         the per-worker reference path that ``phase_all`` batches over the
-        worker axis (and falls back to when eviction is possible)."""
+        worker axis (and through which it replays the residual
+        interacting workers of eviction-capable phases)."""
         for ga, lo, hi in reads:
             self.read(w, ga, lo, hi)
         for ga, lo, hi in writes:
@@ -711,33 +765,292 @@ class RegCScaleRuntime:
             p_hi = np.maximum(np.minimum(p_hi + self.prefetch, arr_end), p_hi)
         return self._region_of(int(ga.page_lo)), p_lo, p_hi
 
-    def _phase_fits(self, ranges) -> bool:
-        """Conservative per-phase no-eviction check: every page that can
-        newly occupy a cache slot this phase is not-incache at phase start
-        and lies in some op range, so ``resident + sum over ops of
-        (range length - in-cache count)`` bounds each worker's peak
-        occupancy; overlapping ranges only loosen the bound.  Under the
-        watermark for every worker, no eviction can trigger, hence no
-        cross-worker invalidation mid-phase — the batched op-major order
-        is then bit-exact vs the per-worker order."""
+    def _may_evict_mask(self, ranges) -> Optional[np.ndarray]:
+        """Per-worker eviction-possibility upper bound for one phase (the
+        per-worker refinement of the old all-or-nothing ``_phase_fits``
+        precheck): every page that can newly occupy a cache slot this
+        phase is not-incache at phase start and lies in some declared
+        range, so ``resident + sum over ops of (range length - in-cache
+        count)`` bounds each worker's peak occupancy (overlapping ranges
+        only loosen the bound).  Returns None when no worker can cross
+        the watermark — the phase then runs fully batched with no
+        eviction work at all."""
+        if self.cache_pages is None:
+            return None
         quick = self.resident.copy()
         for region, p_lo, p_hi in ranges:
             quick += p_hi - p_lo
         if (quick <= self.cache_pages).all():
-            return True            # even all-cold ranges fit: no gathers
+            return None            # even all-cold ranges fit: no gathers
         ub = self.resident.copy()
         for region, p_lo, p_hi in ranges:
             d = self.dirs[region]
             ub += (p_hi - p_lo) - d.count_range(d.incache, p_lo, p_hi)
-        return bool((ub <= self.cache_pages).all())
+        may = ub > self.cache_pages
+        return may if may.any() else None
+
+    def _residual_workers(self, rranges, wranges,
+                          may: np.ndarray) -> np.ndarray:
+        """Window-disjointness analysis: which workers' phase executions
+        can interact through eviction.
+
+        Within a phase (no barriers, no spans) the ONLY cross-worker
+        effect is an eviction writeback invalidating another worker's
+        valid copy of the victim page — and only ``may``-workers can
+        evict.  An evictor's dirty victims lie inside its conservative
+        dirty bounds (the directory's per-row dirty bounding interval,
+        widened by this phase's declared write ranges); another worker can
+        observe the writeback only if those pages intersect its *reach*
+        (current window + declared ranges: valid copies exist only inside
+        the window, and this phase fetches only inside the ranges).
+        Workers touched by no such intersection are pairwise independent
+        — their per-worker op sequences commute, so they run batched.
+        The returned mask marks the rest, which replay tick-ordered."""
+        resid = np.zeros(self.W, bool)
+        reach: Dict[int, list] = {}
+        for region, p_lo, p_hi in rranges + wranges:
+            r = reach.get(region)
+            if r is None:
+                reach[region] = [p_lo.copy(), p_hi.copy()]
+            else:
+                np.minimum(r[0], p_lo, out=r[0])
+                np.maximum(r[1], p_hi, out=r[1])
+        wr: Dict[int, list] = {}
+        for region, p_lo, p_hi in wranges:
+            r = wr.get(region)
+            if r is None:
+                wr[region] = [p_lo.copy(), p_hi.copy()]
+            else:
+                np.minimum(r[0], p_lo, out=r[0])
+                np.maximum(r[1], p_hi, out=r[1])
+        imax = np.iinfo(np.int64).max
+        imin = np.iinfo(np.int64).min
+        for ri, d in enumerate(self.dirs):
+            dlo, dhi = d.dirty_lo, d.dirty_hi
+            if ri in wr:
+                dlo = np.minimum(dlo, wr[ri][0])
+                dhi = np.maximum(dhi, wr[ri][1])
+            e = may & (dlo < dhi)
+            if not e.any():
+                continue
+            live = d.base >= 0
+            rlo = np.where(live, d.base, imax)
+            rhi = np.where(live, d.base + d.length, imin)
+            if ri in reach:
+                rlo = np.minimum(rlo, reach[ri][0])
+                rhi = np.maximum(rhi, reach[ri][1])
+                live = np.ones(self.W, bool)
+            E = np.nonzero(e)[0]
+            M = ((rlo[None, :] < dhi[E][:, None])
+                 & (rhi[None, :] > dlo[E][:, None]) & live[None, :])
+            M[np.arange(E.size), E] = False
+            if M.any():
+                ei, vi = np.nonzero(M)
+                resid[E[ei]] = True
+                resid[vi] = True
+        return resid
+
+    def _op_danger_split(self, d, ga, lo, hi, p_lo, p_hi, rows,
+                         may: np.ndarray, *, is_write: bool) -> np.ndarray:
+        """Per-op ``_danger`` screening for the batched path: workers
+        whose op could evict a still-in-cache page of its own range
+        before touching it (the mid-op refetch pattern) replay THIS op
+        per worker — ``read``/``write`` resolve it per page in tick order
+        — and the rest stay batched.  Exact because the split only runs
+        over workers already proven independent, so any interleaving of
+        their op executions is equivalent."""
+        if self.protocol == IDEAL_PROTO:
+            return rows
+        L = p_hi - p_lo
+        cand = may[rows] & (self.resident[rows] + L[rows] > self.cache_pages)
+        if not cand.any():
+            return rows
+        crows = rows[cand]
+        n_in = d.count_range(d.incache, p_lo[crows], p_hi[crows], rows=crows)
+        n_enter = L[crows] - n_in
+        danger = (n_enter < L[crows]) & (
+            self.resident[crows] + n_enter > self.cache_pages)
+        if not danger.any():
+            return rows
+        self.stats["danger_ops"] += int(danger.sum())
+        for w in crows[danger]:
+            if is_write:
+                self.write(int(w), ga, int(lo[w]), int(hi[w]))
+            else:
+                self.read(int(w), ga, int(lo[w]), int(hi[w]))
+        keep = np.ones(rows.size, bool)
+        keep[np.nonzero(cand)[0][danger]] = False
+        return rows[keep]
+
+    def _evict_rows_batch(self, rows: np.ndarray):
+        """Watermark eviction for ``rows`` after a batched op: each worker
+        over the watermark evicts its least-recently-touched pages
+        run-by-run from its tick-ordered queue — same victims, same
+        per-run charges as ``_evict_cells`` — but rows whose front runs
+        cover the same column span (the lockstep steady state of uniform
+        spill phases) apply their liveness test, segment-LRU selection
+        and plane updates as single 2D ops (``directory.run_live`` /
+        ``lru_take`` / ``evict_rows``).  Only called for workers whose
+        evictions provably cannot invalidate any other worker (window
+        disjointness), so ``_evict_now``'s sharer-invalidation step is
+        skipped as a proven no-op."""
+        if rows.size == 0 or self.cache_pages is None:
+            return
+        k = self.resident[rows] - self.cache_pages
+        over = k > 0
+        if not over.any():
+            return
+        rows = rows[over]
+        k = k[over].astype(np.int64)
+        charge = self.protocol != IDEAL_PROTO
+        while rows.size:
+            if rows.size < 4:
+                for w, kw in zip(rows, k):
+                    self._evict_cells(int(w), int(kw))
+                return
+            self.stats["evict_batch_rounds"] += 1
+            # one front run per needy worker, grouped by column span;
+            # pristine runs (never re-touched) are fully live on [off, n),
+            # so their groups skip the touch scan entirely
+            groups: Dict[Tuple[int, int, int, bool], list] = {}
+            bts = np.empty(rows.size, np.int64)
+            for i, w in enumerate(rows):
+                t0, region, col0, n, off, shift0, pris = self._lru_q[w][0]
+                d = self.dirs[region]
+                c0 = col0 + (int(d.shift[w]) - shift0)
+                bts[i] = t0
+                groups.setdefault((region, c0 + off, n - off, pris),
+                                  []).append(i)
+            keep_rows, keep_k = [], []
+            for (region, start, length, pris), idxs in groups.items():
+                idxs = np.asarray(idxs, np.int64)
+                R, kk = rows[idxs], k[idxs]
+                d = self.dirs[region]
+                if R.size < 4:
+                    for w, kw in zip(R, kk):
+                        self._evict_cells(int(w), int(kw))
+                    continue
+                if pris:
+                    live = None
+                    tot = np.full(R.size, length, np.int64)
+                else:
+                    live = d.run_live(R, start, length, bts[idxs])
+                    tot = live.sum(axis=1, dtype=np.int64)
+                part = kk < tot
+                for si in (np.nonzero(~part)[0], np.nonzero(part)[0]):
+                    if si.size == 0:
+                        continue
+                    is_part = bool(part[si[0]])
+                    whole = si.size == R.size
+                    Rs, ks = R[si], kk[si]
+                    tots = tot[si]
+                    fully = pris or bool((tots == length).all())
+                    # segment-LRU selection only where the run outlives
+                    # the demand; whole-run and prefix takes of fully-live
+                    # runs (the streaming steady state) skip masks
+                    span = length
+                    if not is_part:
+                        take = None if fully else live[si]
+                    elif pris and int(ks.min()) == int(ks.max()):
+                        span = int(ks[0])      # uniform prefix: short span
+                        take = None
+                    elif pris:
+                        take = np.arange(length) < ks[:, None]
+                    else:
+                        lv = live if whole else live[si]
+                        take = d.lru_take(lv, ks, tots)
+                    db = d.evict_rows(Rs, start, span, take,
+                                      set_wprot=charge)
+                    if charge and db.any():
+                        self.traffic.writeback_bytes += (int(db.sum())
+                                                         * self.page_bytes)
+                        hit = db > 0
+                        self.clock[Rs[hit]] += (
+                            self.cost.net_latency_s * db[hit]
+                            + db[hit] * self.page_bytes
+                            / self.cost.net_bw_Bps)
+                    if is_part:
+                        # advance each run past its last taken cell
+                        self.resident[Rs] -= ks
+                        if fully:          # columnar take: cutoff is k
+                            last = ks - 1
+                        else:
+                            last = take.shape[1] - 1 - np.argmax(
+                                take[:, ::-1], axis=1)
+                        for i, w in enumerate(Rs):
+                            self._lru_q[w][0][4] += int(last[i]) + 1
+                    else:
+                        self.resident[Rs] -= tots
+                        for w in Rs:
+                            self._lru_q[w].popleft()
+                        rem = ks - tots
+                        m = rem > 0
+                        if m.any():
+                            keep_rows.append(Rs[m])
+                            keep_k.append(rem[m])
+            if not keep_rows:
+                return
+            rows = np.concatenate(keep_rows)
+            k = np.concatenate(keep_k)
+            # group leftovers concatenate in group order — restore the
+            # ascending row order every plane primitive assumes
+            order = np.argsort(rows)
+            rows = rows[order]
+            k = k[order]
 
     def _fetch_range_all(self, region: int, p_lo: np.ndarray,
                          p_hi: np.ndarray, rows: np.ndarray):
         """Vectorized ``_fetch_range`` over ``rows`` of the worker axis:
-        identical per-worker traffic and clock charges, one gather/scatter
-        per plane instead of a Python loop."""
+        identical per-worker traffic and clock charges.  Strategy is
+        per-op: dense (R, Lmax) gather/scatter matrices in the
+        many-rows/narrow-intervals regime; otherwise rows group by their
+        shared (window-relative start, length) — block-partitioned phases
+        are uniform — and each group runs single 2D slice-plane ops."""
         d = self.dirs[region]
         d.ensure_rows(p_lo, p_hi, rows)
+        L = p_hi - p_lo
+        if use_dense(rows.size, int(L.max())):
+            self._fetch_dense(d, region, p_lo, p_hi, rows)
+            return
+        c0 = p_lo - d.base[rows]
+        uk, inv = np.unique(np.stack([c0, L], axis=1), axis=0,
+                            return_inverse=True)
+        for g in range(uk.shape[0]):
+            self._fetch_uniform(d, region, rows[inv == g],
+                                int(uk[g, 0]), int(uk[g, 1]))
+
+    def _fetch_uniform(self, d: RegionDirectory, region: int,
+                       rows: np.ndarray, c0: int, n: int):
+        """One uniform-span fetch group: all ``rows`` fetch columns
+        [c0, c0+n) of their windows, so every plane pass is a contiguous
+        2D slice op — no gather matrices, no per-row Python loop.  Charge
+        expressions match ``_fetch_range`` term for term."""
+        s = slice(c0, c0 + n)
+        rb = d.row_block(rows)              # slice views for lockstep rows
+        n_miss = n - d.valid[rb, s].sum(axis=1)
+        if d.touch is not None:
+            shifts = d.shift[rows]
+            t0 = np.array([self._q_append(int(w), region, c0, n,
+                                          int(shifts[i]))
+                           for i, w in enumerate(rows)], np.int64)
+            d.touch[rb, s] = t0[:, None]
+            n_enter = n - d.incache[rb, s].sum(axis=1)
+            d.incache[rb, s] = True
+            self.resident[rows] += n_enter
+        tot_miss = int(n_miss.sum())
+        if tot_miss:
+            if self.protocol != IDEAL_PROTO:
+                self.traffic.page_fetches += tot_miss
+                self.traffic.fetch_bytes += tot_miss * self.page_bytes
+                n_req = -(-n_miss // self.fetch_batch)
+                t = (self.cost.net_latency_s * (2 * n_req)
+                     + (n_miss * self.page_bytes) / self.cost.net_bw_Bps)
+                hit = n_miss > 0
+                self.clock[rows[hit]] += t[hit]
+            d.valid[rb, s] = True
+
+    def _fetch_dense(self, d: RegionDirectory, region: int,
+                     p_lo: np.ndarray, p_hi: np.ndarray, rows: np.ndarray):
         cols, mask = d.range_cols(p_lo, p_hi, rows)
         safe = np.where(mask, cols, 0)
         r2 = rows[:, None]
@@ -745,23 +1058,19 @@ class RegCScaleRuntime:
         L = p_hi - p_lo
         n_miss = L - vsub.sum(axis=1)
         if d.touch is not None:
-            # per-(worker, op) monotone tick blocks: relative order within
+            # one monotone tick per (worker, op) run: relative order within
             # each worker matches the per-worker path, which is all the
             # LRU victim selection compares (ticks never cross workers)
-            t0 = self._tick + np.concatenate(([0], np.cumsum(L[:-1])))
-            tick_vals = t0[:, None] + 1 + np.arange(cols.shape[1])[None, :]
+            t0 = np.array([self._q_append(int(w), region, int(cols[i, 0]),
+                                          int(L[i]), int(d.shift[w]))
+                           for i, w in enumerate(rows)], np.int64)
             ri, ci = np.nonzero(mask)
-            d.touch[rows[ri], cols[ri, ci]] = tick_vals[ri, ci]
-            for i, w in enumerate(rows):
-                self._lru_q[w].append([int(t0[i]) + 1, region,
-                                       int(cols[i, 0]), int(L[i]), 0,
-                                       int(d.shift[w])])
+            d.touch[rows[ri], cols[ri, ci]] = t0[ri]
             isub = d.incache[r2, safe] & mask
             ri, ci = np.nonzero(mask & ~isub)
             if ri.size:
                 d.incache[rows[ri], cols[ri, ci]] = True
             self.resident[rows] += L - isub.sum(axis=1)
-        self._tick += int(L.sum())
         tot_miss = int(n_miss.sum())
         if tot_miss:
             if self.protocol != IDEAL_PROTO:
@@ -775,79 +1084,138 @@ class RegCScaleRuntime:
             ri, ci = np.nonzero(mask & ~vsub)
             d.valid[rows[ri], cols[ri, ci]] = True
 
-    def _read_all(self, ga, lo: np.ndarray, hi: np.ndarray):
+    def _read_all(self, ga, lo: np.ndarray, hi: np.ndarray, rows=None,
+                  may=None):
         region, p_lo, p_hi = self._page_range_all(ga, lo, hi, prefetch=True)
-        if not use_dense(self.W, int((p_hi - p_lo).max())):
-            # wide per-worker intervals: contiguous per-row slice ops beat
-            # the dense gather matrices (see directory.use_dense); still
-            # op-major, so charges stay bit-identical
-            for w in range(self.W):
-                self.read(w, ga, int(lo[w]), int(hi[w]))
-            return
-        self._fetch_range_all(region, p_lo, p_hi, self._rows_all)
+        rows = self._rows_all if rows is None else rows
+        if may is not None:
+            rows = self._op_danger_split(self.dirs[region], ga, lo, hi,
+                                         p_lo, p_hi, rows, may,
+                                         is_write=False)
+        if rows.size:
+            self._fetch_range_all(region, p_lo[rows], p_hi[rows], rows)
+        if may is not None:
+            self._evict_rows_batch(rows)
 
-    def _write_all(self, ga, lo: np.ndarray, hi: np.ndarray):
-        pw = self.page_words
+    def _write_all(self, ga, lo: np.ndarray, hi: np.ndarray, rows=None,
+                   may=None):
         region, p_lo, p_hi = self._page_range_all(ga, lo, hi, prefetch=False)
-        if not use_dense(self.W, int((p_hi - p_lo).max())):
-            for w in range(self.W):
-                self.write(w, ga, int(lo[w]), int(hi[w]))
-            return
         d = self.dirs[region]
-        rows = self._rows_all
-        d.ensure_rows(p_lo, p_hi, rows)
-        n_words = hi - lo
+        rows = self._rows_all if rows is None else rows
+        if may is not None:
+            rows = self._op_danger_split(d, ga, lo, hi, p_lo, p_hi, rows,
+                                         may, is_write=True)
+        if rows.size:
+            d.ensure_rows(p_lo[rows], p_hi[rows], rows)
+            d.note_dirty(rows, p_lo[rows], p_hi[rows])
+            L = (p_hi - p_lo)[rows]
+            if use_dense(rows.size, int(L.max())):
+                self._write_dense(d, region, ga, lo, hi, p_lo, p_hi, rows)
+            else:
+                c0 = p_lo[rows] - d.base[rows]
+                uk, inv = np.unique(np.stack([c0, L], axis=1), axis=0,
+                                    return_inverse=True)
+                for g in range(uk.shape[0]):
+                    self._write_uniform(d, region, lo, hi, p_lo, p_hi,
+                                        rows[inv == g],
+                                        int(uk[g, 0]), int(uk[g, 1]))
+            d.maybe_dirty = True
+            for w in rows:
+                self._dirty_regions[w].add(region)
+        if may is not None:
+            self._evict_rows_batch(rows)
+
+    def _write_dense(self, d: RegionDirectory, region: int, ga,
+                     lo: np.ndarray, hi: np.ndarray, p_lo: np.ndarray,
+                     p_hi: np.ndarray, rows: np.ndarray):
+        pw = self.page_words
+        n_words = (hi - lo)[rows]
 
         # mechanism cost, in the per-worker path's charge order
         if self.model_mechanism and self.protocol == FINE_PROTO:
-            self.clock += n_words * self.instr_s_per_word
+            self.clock[rows] += n_words * self.instr_s_per_word
         if self._track_wprot:
-            cols, mask = d.range_cols(p_lo, p_hi, rows)
+            cols, mask = d.range_cols(p_lo[rows], p_hi[rows], rows)
             wsub = d.wprot[rows[:, None], np.where(mask, cols, 0)] & mask
-            self.clock += wsub.sum(axis=1) * self.fault_s
+            self.clock[rows] += wsub.sum(axis=1) * self.fault_s
             ri, ci = np.nonzero(mask)
             d.wprot[rows[ri], cols[ri, ci]] = False
 
         # write-allocate edge fetches (first page, then last page — the
         # per-worker path's order), only for the workers that need them
-        n_pg = p_hi - p_lo
+        n_pg = (p_hi - p_lo)[rows]
         if self.protocol != IDEAL_PROTO:
             single = n_pg == 1
-            first = np.where(single, n_words < pw, lo % pw != 0)
-            last = (~single) & (hi % pw != 0)
+            first = np.where(single, n_words < pw, lo[rows] % pw != 0)
+            last = (~single) & (hi[rows] % pw != 0)
             if first.any():
-                r = np.nonzero(first)[0]
+                r = rows[np.nonzero(first)[0]]
                 self._fetch_range_all(region, p_lo[r], p_lo[r] + 1, r)
             if last.any():
-                r = np.nonzero(last)[0]
+                r = rows[np.nonzero(last)[0]]
                 self._fetch_range_all(region, p_hi[r] - 1, p_hi[r], r)
 
-        cols, mask = d.range_cols(p_lo, p_hi, rows)
+        cols, mask = d.range_cols(p_lo[rows], p_hi[rows], rows)
         safe = np.where(mask, cols, 0)
         vsub = d.valid[rows[:, None], safe] & mask
         if d.touch is not None:
-            t0 = self._tick + np.concatenate(([0], np.cumsum(n_pg[:-1])))
-            tick_vals = t0[:, None] + 1 + np.arange(cols.shape[1])[None, :]
+            shifts = d.shift[rows]
+            t0 = np.array([self._q_append(int(w), region, int(cols[i, 0]),
+                                          int(n_pg[i]), int(shifts[i]))
+                           for i, w in enumerate(rows)], np.int64)
             ri, ci = np.nonzero(mask)
-            d.touch[rows[ri], cols[ri, ci]] = tick_vals[ri, ci]
-            for w in range(self.W):
-                self._lru_q[w].append([int(t0[w]) + 1, region,
-                                       int(cols[w, 0]), int(n_pg[w]), 0,
-                                       int(d.shift[w])])
+            d.touch[rows[ri], cols[ri, ci]] = t0[ri]
             isub = d.incache[rows[:, None], safe] & mask
             ri, ci = np.nonzero(mask & ~isub)
             if ri.size:
                 d.incache[rows[ri], cols[ri, ci]] = True
-            self.resident += n_pg - isub.sum(axis=1)
-        self._tick += int(n_pg.sum())
+            self.resident[rows] += n_pg - isub.sum(axis=1)
         ri, ci = np.nonzero(mask & ~vsub)
         if ri.size:
             d.valid[rows[ri], cols[ri, ci]] = True
         ri, ci = np.nonzero(mask)
         d.dirty[rows[ri], cols[ri, ci]] = True
-        d.maybe_dirty = True
-        for w in range(self.W):
-            self._dirty_regions[w].add(region)
+
+    def _write_uniform(self, d: RegionDirectory, region: int,
+                       lo: np.ndarray, hi: np.ndarray, p_lo: np.ndarray,
+                       p_hi: np.ndarray, rows: np.ndarray, c0: int, n: int):
+        """One uniform-span write group: all ``rows`` write columns
+        [c0, c0+n) of their windows — single 2D slice-plane ops, charge
+        expressions term-for-term those of the per-worker ``write``."""
+        pw = self.page_words
+        s = slice(c0, c0 + n)
+        rb = d.row_block(rows)              # slice views for lockstep rows
+        n_words = (hi - lo)[rows]
+        if self.model_mechanism and self.protocol == FINE_PROTO:
+            self.clock[rows] += n_words * self.instr_s_per_word
+        if self._track_wprot:
+            n_faults = d.wprot[rb, s].sum(axis=1)
+            self.clock[rows] += n_faults * self.fault_s
+            d.wprot[rb, s] = False
+        if self.protocol != IDEAL_PROTO:
+            if n == 1:
+                first = n_words < pw
+                last = np.zeros(rows.size, bool)
+            else:
+                first = lo[rows] % pw != 0
+                last = hi[rows] % pw != 0
+            if first.any():
+                r = rows[np.nonzero(first)[0]]
+                self._fetch_range_all(region, p_lo[r], p_lo[r] + 1, r)
+            if last.any():
+                r = rows[np.nonzero(last)[0]]
+                self._fetch_range_all(region, p_hi[r] - 1, p_hi[r], r)
+        if d.touch is not None:
+            shifts = d.shift[rows]
+            t0 = np.array([self._q_append(int(w), region, c0, n,
+                                          int(shifts[i]))
+                           for i, w in enumerate(rows)], np.int64)
+            d.touch[rb, s] = t0[:, None]
+            n_enter = n - d.incache[rb, s].sum(axis=1)
+            d.incache[rb, s] = True
+            self.resident[rows] += n_enter
+        d.valid[rb, s] = True
+        d.dirty[rb, s] = True
 
     def phase_all(self, reads=(), writes=(), *, flops=0.0, mem_bytes=0.0,
                   seconds=0.0, instr_words=0.0):
@@ -858,14 +1226,23 @@ class RegCScaleRuntime:
         ``mem_bytes``/``seconds``/``instr_words`` may be scalars or (W,)
         arrays.  Bit-exactly equivalent to
         ``for w in range(W): phase(w, ...)``: within a phase (no barriers,
-        no spans) workers interact only through eviction writebacks, so
-        when no worker can cross the eviction watermark (checked
-        conservatively up front) the per-worker ops are independent and
-        run op-major as single vectorized passes over the (W, window)
-        directory planes; otherwise the whole phase falls back to the
-        per-worker path, which resolves eviction and the ``_danger``
-        pattern in tick order.  Must be called outside spans — consistency
-        regions serialize through their locks and stay per-worker
+        no spans) workers interact only through eviction writebacks.  The
+        engine therefore never leaves the batched path wholesale:
+
+        * when no worker can cross the eviction watermark (per-worker
+          upper bound, ``_may_evict_mask``) ops run op-major as single
+          vectorized passes over the (W, window) directory planes;
+        * otherwise a window-disjointness analysis over the declared
+          ranges (``_residual_workers``) proves which workers' evictions
+          cannot observe each other's directory updates — those run
+          batched too, with watermark eviction applied per op as
+          vectorized segment-LRU plane ops (``_evict_rows_batch``) and
+          the per-op ``_danger`` refetch pattern screened per worker;
+        * only the residual *interacting* workers replay tick-ordered
+          through the per-worker ``phase`` path, in worker order.
+
+        Must be called outside spans — consistency regions serialize
+        through their locks and stay per-worker
         (``span``/``acquire``/``release``)."""
         assert not any(self.spans), "phase_all must run outside spans"
         W = self.W
@@ -873,43 +1250,57 @@ class RegCScaleRuntime:
                  for ga, lo, hi in reads]
         writes = [(ga, self._w_arr(lo), self._w_arr(hi))
                   for ga, lo, hi in writes]
-        if self.cache_pages is not None and (
-                self._assume_spill or not self._phase_fits(
-                    [self._page_range_all(ga, lo, hi, prefetch=True)
-                     for ga, lo, hi in reads]
-                    + [self._page_range_all(ga, lo, hi, prefetch=False)
-                       for ga, lo, hi in writes])):
-            self._assume_spill = True
-            fl = np.broadcast_to(np.asarray(flops, np.float64), (W,))
-            mb = np.broadcast_to(np.asarray(mem_bytes, np.float64), (W,))
-            sec = np.broadcast_to(np.asarray(seconds, np.float64), (W,))
-            iw = np.broadcast_to(np.asarray(instr_words, np.float64), (W,))
-            for w in range(W):
+        rranges = [self._page_range_all(ga, lo, hi, prefetch=True)
+                   for ga, lo, hi in reads]
+        wranges = [self._page_range_all(ga, lo, hi, prefetch=False)
+                   for ga, lo, hi in writes]
+        may = self._may_evict_mask(rranges + wranges)
+        resid = None
+        if may is not None and self.protocol != IDEAL_PROTO:
+            r = self._residual_workers(rranges, wranges, may)
+            if r.any():
+                resid = r
+        rows = None if resid is None else np.nonzero(~resid)[0]
+        self.stats["batched_phases"] += 1
+        if rows is None or rows.size:
+            for ga, lo, hi in reads:
+                self._read_all(ga, lo, hi, rows=rows, may=may)
+            for ga, lo, hi in writes:
+                self._write_all(ga, lo, hi, rows=rows, may=may)
+        fl = np.asarray(flops, np.float64)
+        mb = np.asarray(mem_bytes, np.float64)
+        sec = np.asarray(seconds, np.float64)
+        iw = np.asarray(instr_words, np.float64)
+        crows = self._rows_all if rows is None else rows
+        if crows.size:
+            if fl.any() or mb.any() or sec.any():
+                sharing = self.cost.workers_on_node(W)
+                bw = self.cost.node_bw(sharing) / max(1, sharing)
+                t = np.broadcast_to(
+                    sec + np.maximum(fl / self.cost.flops_per_worker,
+                                     mb / bw), (W,))
+                self.clock[crows] += t[crows]
+            if (self.model_mechanism and self.protocol == FINE_PROTO
+                    and iw.any()):
+                self.clock[crows] += np.broadcast_to(
+                    iw * self.instr_s_per_word, (W,))[crows]
+        if resid is not None:
+            # tick-ordered replay of the interacting workers, in worker
+            # order (the loop driver's order within each dependence class)
+            self.stats["residual_replays"] += int(resid.sum())
+            flb = np.broadcast_to(fl, (W,))
+            mbb = np.broadcast_to(mb, (W,))
+            secb = np.broadcast_to(sec, (W,))
+            iwb = np.broadcast_to(iw, (W,))
+            for w in np.nonzero(resid)[0]:
                 self.phase(
-                    w,
+                    int(w),
                     reads=[(ga, int(lo[w]), int(hi[w]))
                            for ga, lo, hi in reads],
                     writes=[(ga, int(lo[w]), int(hi[w]))
                             for ga, lo, hi in writes],
-                    flops=float(fl[w]), mem_bytes=float(mb[w]),
-                    seconds=float(sec[w]), instr_words=float(iw[w]))
-            return
-        for ga, lo, hi in reads:
-            self._read_all(ga, lo, hi)
-        for ga, lo, hi in writes:
-            self._write_all(ga, lo, hi)
-        fl = np.asarray(flops, np.float64)
-        mb = np.asarray(mem_bytes, np.float64)
-        sec = np.asarray(seconds, np.float64)
-        if fl.any() or mb.any() or sec.any():
-            sharing = self.cost.workers_on_node(W)
-            bw = self.cost.node_bw(sharing) / max(1, sharing)
-            self.clock += sec + np.maximum(
-                fl / self.cost.flops_per_worker, mb / bw)
-        if self.model_mechanism and self.protocol == FINE_PROTO:
-            iw = np.asarray(instr_words, np.float64)
-            if iw.any():
-                self.clock += iw * self.instr_s_per_word
+                    flops=float(flb[w]), mem_bytes=float(mbb[w]),
+                    seconds=float(secb[w]), instr_words=float(iwb[w]))
 
     # ------------------------------------------------------------------
     def reduce(self, w: int, name: str, value: float, op: str = "sum"):

@@ -124,6 +124,37 @@ def triad_bytes_per_iter(n: int) -> float:
     return 3.0 * 4 * n
 
 
+def stream_spill(rt, n: int, iters: int, *, sweeps: int = 2,
+                 rotate: bool = True, driver: str = "auto",
+                 on_iter: Optional[Callable] = None):
+    """Capacity-pressure STREAM variant: every barrier epoch runs
+    ``sweeps`` read+write passes, and with ``rotate`` each pass shifts the
+    block assignment by one (worker w takes block ``(w + pass) % W``), so
+    per-worker windows creep across the array and each worker's dirty
+    block lands inside its neighbours' reach.  Under a small cache this is
+    the adversarial spill regime for the batched eviction engine: rotation
+    makes the window-disjointness analysis mark workers as interacting
+    (tick-ordered residual replay), while ``rotate=False`` keeps blocks
+    disjoint (fully batched eviction).  Bit-exact across drivers either
+    way — that is the point."""
+    A, B = rt.alloc(n), rt.alloc(n)
+    W = rt.W
+    chunk = n // W
+    ids = np.arange(W, dtype=np.int64)
+    phase = _phase_driver(rt, driver)
+    for it in range(iters):
+        for s in range(sweeps):
+            r = (ids + it * sweeps + s) % W if rotate else ids
+            lo = r * chunk
+            hi = np.where(r == W - 1, n, lo + chunk)
+            phase(reads=((B, lo, hi),), writes=((A, lo, hi),),
+                  flops=2.0 * (hi - lo), mem_bytes=2.0 * 4 * (hi - lo))
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt
+
+
 # ---------------------------------------------------------------------------
 # Jacobi iterative solver (paper §V-B, Figs. 5-6; OmpSCR c_jacobi01)
 # ---------------------------------------------------------------------------

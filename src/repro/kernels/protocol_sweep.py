@@ -4,14 +4,19 @@ The directory's boolean page-state planes (valid/dirty/wprot, one row per
 worker — see ``core.directory.RegionDirectory``) pack 32 pages per lane as
 little-endian ``uint32`` bitmasks: bit ``j`` of word ``k`` in row ``w`` is
 directory column ``32*k + j`` of worker ``w``.  At 256 workers x millions
-of pages that turns the two whole-plane reductions the barrier flush needs
-into dense integer kernels that run on the accelerator:
+of pages that turns the whole-plane reductions the barrier flush and the
+batched eviction engine need into dense integer kernels that run on the
+accelerator:
 
 * ``popcount_rows``  — per-worker dirty-page counts (the barrier-flush
-  writeback charge), a SWAR popcount + row reduction over the packed plane;
+  writeback charge and the eviction engine's dirty-victim counts), a SWAR
+  popcount + row reduction over the packed plane;
 * ``coverage_multi`` — the shared-interval sweep's coverage cumsum over the
   2W sorted window bounds (pages under >= 2 worker windows are the only
-  candidates for sharer invalidation).
+  candidates for sharer invalidation);
+* ``take_first_k``   — per-row rank-select (each row's first k set bits in
+  little-endian column order): the batched eviction engine's segment-LRU
+  victim selection over packed run-liveness masks.
 
 Both are integer-exact, so protocol traffic is identical on every backend
 (``tests/test_directory.py`` oracles the packed kernels against the boolean
@@ -83,13 +88,36 @@ def unpack_mask_rows(bits: np.ndarray, n_cols: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _popcount_rows_np(bits: np.ndarray) -> np.ndarray:
-    v = bits.astype(np.uint32, copy=True)
+def _popcount_words(v: np.ndarray) -> np.ndarray:
+    """Per-word SWAR popcount, (R, n_words) uint32 -> uint32 counts."""
+    v = v.astype(np.uint32, copy=True)
     v -= (v >> 1) & np.uint32(0x55555555)
     v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
     v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
-    v = (v * np.uint32(0x01010101)) >> 24
-    return v.sum(axis=1, dtype=np.int64)
+    return (v * np.uint32(0x01010101)) >> 24
+
+
+def _popcount_rows_np(bits: np.ndarray) -> np.ndarray:
+    return _popcount_words(bits).sum(axis=1, dtype=np.int64)
+
+
+def _take_first_k_np(bits: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Per-row rank-select: keep only the first (lowest-column) k[i] set
+    bits of row i.  Word-level prefix popcounts bound how many bits each
+    word still needs; within a word, bit j survives iff its rank among the
+    word's set bits is below that need — 32 static shift steps over the
+    packed plane (the eviction plane's segment-LRU 'take' mask)."""
+    pc = _popcount_words(bits)
+    excl = np.cumsum(pc, axis=1, dtype=np.int64) - pc       # bits before word
+    need = np.clip(k[:, None] - excl, 0, 32).astype(np.uint32)
+    out = np.zeros_like(bits, np.uint32)
+    run = np.zeros_like(bits, np.uint32)                    # rank within word
+    for j in range(32):
+        bit = (bits >> np.uint32(j)) & np.uint32(1)
+        sel = (bit != 0) & (run < need)
+        out |= sel.astype(np.uint32) << np.uint32(j)
+        run += bit
+    return out
 
 
 if HAVE_PALLAS:
@@ -118,6 +146,43 @@ if HAVE_PALLAS:
             interpret=jax.default_backend() != "tpu",
         )(jnp.asarray(padded))
         return np.asarray(out[:W]).astype(np.int64)
+
+    def _take_first_k_kernel(bits_ref, k_ref, out_ref):
+        v = bits_ref[...]
+        pc = v - ((v >> 1) & jnp.uint32(0x55555555))
+        pc = ((pc & jnp.uint32(0x33333333))
+              + ((pc >> 2) & jnp.uint32(0x33333333)))
+        pc = (pc + (pc >> 4)) & jnp.uint32(0x0F0F0F0F)
+        pc = (pc * jnp.uint32(0x01010101)) >> 24
+        excl = jnp.cumsum(pc.astype(jnp.int32), axis=1) - pc.astype(jnp.int32)
+        need = jnp.clip(k_ref[...] - excl, 0, 32).astype(jnp.uint32)
+        out = jnp.zeros_like(v)
+        run = jnp.zeros_like(v)
+        for j in range(32):                      # static rank-select steps
+            bit = (v >> j) & jnp.uint32(1)
+            sel = (bit != 0) & (run < need)
+            out = out | (sel.astype(jnp.uint32) << j)
+            run = run + bit
+        out_ref[...] = out
+
+    def _take_first_k_pallas(bits: np.ndarray, k: np.ndarray) -> np.ndarray:
+        R, n_words = bits.shape
+        Rp = -(-R // ROWS_PER_BLOCK) * ROWS_PER_BLOCK
+        Cp = max(-(-n_words // _LANE) * _LANE, _LANE)
+        padded = np.zeros((Rp, Cp), np.uint32)
+        padded[:R, :n_words] = bits
+        kp = np.zeros((Rp, 1), np.int32)
+        kp[:R, 0] = np.minimum(k, np.iinfo(np.int32).max)
+        out = pl.pallas_call(
+            _take_first_k_kernel,
+            grid=(Rp // ROWS_PER_BLOCK,),
+            in_specs=[pl.BlockSpec((ROWS_PER_BLOCK, Cp), lambda i: (i, 0)),
+                      pl.BlockSpec((ROWS_PER_BLOCK, 1), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((ROWS_PER_BLOCK, Cp), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((Rp, Cp), jnp.uint32),
+            interpret=jax.default_backend() != "tpu",
+        )(jnp.asarray(padded), jnp.asarray(kp))
+        return np.asarray(out[:R, :n_words])
 
     def _coverage_kernel(delta_ref, multi_ref):
         cover = jnp.cumsum(delta_ref[...], axis=1)
@@ -150,6 +215,18 @@ def popcount_rows(bits: np.ndarray, *, backend: str = "numpy") -> np.ndarray:
     if resolve_backend(backend) == "pallas":
         return _popcount_rows_pallas(bits)
     return _popcount_rows_np(bits)
+
+
+def take_first_k(bits: np.ndarray, k: np.ndarray, *,
+                 backend: str = "numpy") -> np.ndarray:
+    """(R, n_words) uint32 + (R,) counts -> packed mask of each row's first
+    k[i] set bits in little-endian column order (the batched eviction
+    engine's segment-LRU victim selection)."""
+    if bits.shape[1] == 0:
+        return np.zeros_like(bits, np.uint32)
+    if resolve_backend(backend) == "pallas":
+        return _take_first_k_pallas(bits, k)
+    return _take_first_k_np(bits, np.asarray(k, np.int64))
 
 
 def coverage_multi(delta: np.ndarray, *, backend: str = "numpy") -> np.ndarray:

@@ -15,6 +15,12 @@ only ever evaluated at decoration time.
 """
 import pytest
 
+# number of property-style tests this stub skipped in the current run;
+# tests/conftest.py reports it in the terminal summary so the absent
+# hypothesis suites are visible instead of silently missing
+SKIPPED = 0
+DECORATED = 0
+
 
 class _Strategies:
     @staticmethod
@@ -34,9 +40,14 @@ st = _Strategies()
 
 def given(*_args, **_kwargs):
     def deco(fn):
+        global DECORATED
+        DECORATED += 1
+
         # zero-arg on purpose: the original signature holds strategy
         # parameters that pytest would otherwise resolve as fixtures
         def skipper():
+            global SKIPPED
+            SKIPPED += 1
             pytest.importorskip("hypothesis")
         skipper.__name__ = getattr(fn, "__name__", "test_skipped")
         skipper.__doc__ = fn.__doc__

@@ -128,6 +128,102 @@ def test_coverage_sweep_pallas_matches_numpy():
             np.cumsum(delta) >= 2)
 
 
+def test_take_first_k_matches_boolean_oracle():
+    """Packed rank-select (the eviction engine's segment-LRU selection)
+    vs the boolean-plane oracle: first k[i] set bits per row, little-
+    endian column order."""
+    from repro.kernels import protocol_sweep as ps
+    rng = np.random.default_rng(17)
+    for R, C in ((1, 1), (4, 31), (8, 64), (33, 517), (128, 90)):
+        live = rng.random((R, C)) < 0.4
+        k = rng.integers(0, C + 3, R).astype(np.int64)
+        bits = ps.pack_mask_rows(live)
+        got = ps.unpack_mask_rows(ps.take_first_k(bits, k), C)
+        want = live & (np.cumsum(live, axis=1) <= k[:, None])
+        np.testing.assert_array_equal(got, want, err_msg=f"{R}x{C}")
+
+
+def test_take_first_k_pallas_matches_numpy():
+    pytest.importorskip("jax")
+    from repro.kernels import protocol_sweep as ps
+    rng = np.random.default_rng(19)
+    live = rng.random((23, 333)) < 0.5
+    k = rng.integers(0, 200, 23).astype(np.int64)
+    bits = ps.pack_mask_rows(live)
+    np.testing.assert_array_equal(
+        ps.take_first_k(bits, k, backend="pallas"),
+        ps.take_first_k(bits, k, backend="numpy"))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_evict_rows_matches_per_cell_oracle(backend):
+    """The batched eviction primitive (dirty counts, wprot re-arm,
+    valid/incache clears at the take cells — and only there) against a
+    straight per-cell simulation, packed-vs-boolean parity on both
+    backends, including the take=None whole-span fast path."""
+    if backend == "pallas":
+        pytest.importorskip("jax")
+    rng = np.random.default_rng(23)
+    for trial in range(4):
+        d = RegionDirectory(8, 0, 0, 500, track_wprot=True,
+                            track_touch=True, backend=backend)
+        for w in range(8):
+            d.ensure(w, 0, 80)
+        n = 80
+        d.valid[:, :n] = rng.random((8, n)) < 0.6
+        d.dirty[:, :n] = rng.random((8, n)) < 0.3
+        d.incache[:, :n] = d.valid[:, :n] | (rng.random((8, n)) < 0.2)
+        rows = np.arange(1, 7)
+        start, length = 10, 50
+        take = (None if trial % 2 else
+                rng.random((rows.size, length)) < 0.5)
+        ref = {p: d.__getattribute__(p)[:, :n].copy()
+               for p in ("valid", "dirty", "wprot", "incache")}
+        tk = (np.ones((rows.size, length), bool) if take is None else take)
+        exp_db = np.zeros(rows.size, np.int64)
+        for i, w in enumerate(rows):
+            for j in range(length):
+                if not tk[i, j]:
+                    continue
+                c = start + j
+                if ref["dirty"][w, c]:
+                    exp_db[i] += 1
+                    ref["dirty"][w, c] = False
+                    ref["wprot"][w, c] = True
+                ref["valid"][w, c] = False
+                ref["incache"][w, c] = False
+        db = d.evict_rows(rows, start, length, take, set_wprot=True)
+        np.testing.assert_array_equal(db, exp_db)
+        for p in ("valid", "dirty", "wprot", "incache"):
+            np.testing.assert_array_equal(
+                d.__getattribute__(p)[:, :n], ref[p], err_msg=p)
+
+
+def test_run_live_and_lru_take_segment_semantics():
+    """run_live: a cell is live iff its touch tick still equals the run's
+    tick AND it still occupies a cache slot; lru_take picks the first k
+    live cells (columnar fast path when fully live)."""
+    d = RegionDirectory(3, 0, 0, 100, track_touch=True)
+    for w in range(3):
+        d.ensure(w, 0, 20)
+    d.touch[:, :10] = 7
+    d.incache[:, :10] = True
+    d.touch[1, 3] = 9              # re-touched by a later run -> stale
+    d.incache[2, 5] = False        # evicted -> not live
+    rows = np.arange(3)
+    live = d.run_live(rows, 0, 10, np.full(3, 7, np.int64))
+    assert live[0].all()
+    assert not live[1, 3] and live[1, :3].all() and live[1, 4:].all()
+    assert not live[2, 5]
+    take = d.lru_take(live, np.array([4, 4, 4]))
+    np.testing.assert_array_equal(take.sum(axis=1), [4, 4, 4])
+    # row 1 skips the stale cell: takes cols 0,1,2,4
+    assert not take[1, 3] and take[1, 4]
+    # fully-live fast path: columnar cutoff
+    full = d.lru_take(live[:1], np.array([3]), np.array([10]))
+    np.testing.assert_array_equal(full[0, :4], [True] * 3 + [False])
+
+
 def test_directory_backends_agree():
     """dirty_counts + shared_intervals identical on both backends (the
     packed-bitmask kernels are integer-exact reformulations)."""

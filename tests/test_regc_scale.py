@@ -306,9 +306,10 @@ def test_phase_all_matches_phase(W, proto, kind):
 @pytest.mark.parametrize("W", W_SWEEP)
 @pytest.mark.parametrize("cache_pages", [6, 16, 10 ** 6])
 def test_phase_all_matches_phase_spill(W, cache_pages):
-    """Small caches force the per-phase fallback (eviction possible);
-    the huge cache exercises the batched tick/incache bookkeeping —
-    both must reproduce the per-worker path exactly."""
+    """Small caches make eviction possible (batched multi-worker eviction
+    engine / residual replay); the huge cache exercises the batched
+    tick/incache bookkeeping — both must reproduce the per-worker path
+    exactly."""
     rts = {}
     for driver in ("loop", "batched"):
         rt = RegCScaleRuntime(W, page_words=64, protocol=FINE_PROTO,
@@ -317,6 +318,155 @@ def test_phase_all_matches_phase_spill(W, cache_pages):
         _drive(rt, _seeded_phases("spill", W, seed=W), driver)
         rts[driver] = rt
     _assert_drivers_equal(rts["loop"], rts["batched"], (W, cache_pages))
+
+
+# ---------------------------------------------------------------------------
+# spill-regime W-sweep {2..256}: the batched eviction engine (no
+# _assume_spill latch — eviction-capable phases stay on the vectorized
+# path, residual workers replay tick-ordered) must stay bit-equal to the
+# loop driver at every scale, on disjoint-block streaming (fully batched)
+# AND rotating-block (residual-replay) spill workloads.
+# ---------------------------------------------------------------------------
+
+W_SWEEP_SPILL = [2, 4, 16, 64, 256]
+
+
+@pytest.mark.parametrize("W", W_SWEEP_SPILL)
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
+def test_batched_eviction_w_sweep_streaming(W, proto):
+    """Disjoint-block streaming spill (working set >> cache): phases stay
+    fully batched — no residual replay — with vectorized eviction, and
+    traffic/clocks are bit-equal to the loop driver."""
+    from repro.dsm.apps import stream_triad
+    n = 64 * 8 * W                     # 8 pages/worker/array, cache 13
+    rts = {}
+    for driver in ("loop", "batched"):
+        rt = RegCScaleRuntime(W, page_words=64, protocol=proto, prefetch=1,
+                              model_mechanism=False, cache_pages=13)
+        stream_triad(rt, n, 3, driver=driver)
+        rts[driver] = rt
+    _assert_drivers_equal(rts["loop"], rts["batched"], (W, proto))
+    if W >= 4:                # tiny row sets take the per-worker shortcut
+        assert rts["batched"].stats["evict_batch_rounds"] > 0
+    assert rts["batched"].stats["residual_replays"] == 0, \
+        "disjoint blocks must not be classed as interacting"
+
+
+@pytest.mark.parametrize("W", W_SWEEP_SPILL)
+def test_batched_eviction_w_sweep_rotating(W):
+    """Rotating-block spill: each worker's dirty block lands inside its
+    neighbours' reach, so the window-disjointness analysis must route the
+    interacting workers through the tick-ordered residual replay — and
+    stay bit-equal to the loop driver."""
+    from repro.dsm.apps import stream_spill
+    rts = {}
+    for driver in ("loop", "batched"):
+        rt = RegCScaleRuntime(W, page_words=64, protocol=FINE_PROTO,
+                              prefetch=1, model_mechanism=False,
+                              cache_pages=11)
+        stream_spill(rt, 64 * 6 * W, 2, sweeps=2, driver=driver)
+        rts[driver] = rt
+    _assert_drivers_equal(rts["loop"], rts["batched"], W)
+    assert rts["batched"].stats["residual_replays"] > 0
+
+
+def test_batched_eviction_merged_round_row_order():
+    """Regression: mixed front-run lengths split round-1 eviction into
+    two lockstep groups whose leftovers concatenate group-major — a
+    PERMUTED row set ([0,2,4,6,1,3,5,7]) that spans the whole axis.  The
+    merged round-2 group must still align per-row charges with the
+    plane's row order (rows re-sorted; ``row_block`` proves unit-step
+    contiguity instead of inferring it from size/bounds), or eviction
+    writebacks land on the wrong workers' clocks — visible only BEFORE a
+    barrier joins the clocks."""
+    W, pw, blk = 8, 16, 16
+    n = pw * blk * W
+    rts = {}
+    for driver in ("loop", "batched"):
+        rt = RegCScaleRuntime(W, page_words=pw, protocol=FINE_PROTO,
+                              prefetch=0, model_mechanism=False,
+                              cache_pages=10)
+        A = rt.alloc(n)
+        ids = np.arange(W, dtype=np.int64)
+        base = ids * blk * pw
+        L1 = np.where(ids % 2 == 0, 2 * pw, 3 * pw)
+
+        def ph(reads=(), writes=(), rt=rt, driver=driver):
+            if driver == "batched":
+                rt.phase_all(reads=reads, writes=writes)
+            else:
+                for w in range(rt.W):
+                    rt.phase(w,
+                             reads=[(ga, int(lo[w]), int(hi[w]))
+                                    for ga, lo, hi in reads],
+                             writes=[(ga, int(lo[w]), int(hi[w]))
+                                     for ga, lo, hi in writes])
+
+        ph(reads=[(A, base, base + L1)])          # 2-page vs 3-page runs
+        ph(writes=[(A, base + 8 * pw, base + 16 * pw)])
+        for w in range(1, W, 2):                  # odd rows: dirty flushed
+            rt.acquire(w, 0)
+            rt.release(w, 0)
+        ph(reads=[(A, base + 3 * pw, base + 6 * pw)])   # merged round
+        rts[driver] = rt
+    # NO barrier: compare raw per-worker clocks
+    _assert_drivers_equal(rts["loop"], rts["batched"], "merged-round")
+
+
+# ---------------------------------------------------------------------------
+# no drift vs the committed PR 2 benchmark CSVs: removing the
+# _assume_spill latch must not change any modeled time or traffic —
+# eviction-free points AND spill points are re-derived here and compared
+# against the committed artifacts/bench rows field-for-field.
+# ---------------------------------------------------------------------------
+
+
+def _bench_rows(name):
+    import csv
+    from pathlib import Path
+    path = Path(__file__).resolve().parent.parent / "artifacts/bench" / name
+    if not path.exists():
+        pytest.skip(f"committed bench CSV {name} not present")
+    with open(path) as fh:
+        return list(csv.DictReader(fh))
+
+
+@pytest.mark.parametrize("p,figure,series", [
+    (4, "fig2_strong", "samhita"),
+    (64, "fig2_strong", "samhita_page"),
+    (8, "fig4_spill", "samhita_fits"),
+    (8, "fig4_spill", "samhita_spills"),
+])
+def test_no_drift_vs_committed_stream_csv(p, figure, series):
+    """Re-derive committed stream-triad points (iters as recorded in
+    BENCH_scale.json meta) on BOTH drivers, through the benchmark's own
+    runtime factory and section constants: modeled time and exact traffic
+    must match the committed CSVs to the digit."""
+    import json
+    from pathlib import Path
+    from benchmarks import stream_triad as st_bench
+    from benchmarks.common import make_rt
+    from repro.dsm.apps import stream_triad
+    root = Path(__file__).resolve().parent.parent
+    meta = json.loads((root / "BENCH_scale.json").read_text())["meta"]
+    iters = int(meta.get("iters", 4))
+    kw = {}
+    if figure == "fig4_spill":
+        iters = st_bench.spill_iters(iters)
+        kw["cache_pages"] = st_bench.SPILL_CACHE_PAGES
+    rows = [r for r in _bench_rows("stream_triad.csv")
+            if r["figure"] == figure and r["series"] == series
+            and int(r["p"]) == p]
+    assert rows, (figure, series, p)
+    row = rows[0]
+    n = int(row["n"])
+    series_key = series if series in ("samhita", "samhita_page") \
+        else "samhita"                 # fig4 tags resolve like _point()
+    for driver in ("loop", "batched"):
+        rt = make_rt(series_key, p, **kw)
+        stream_triad(rt, n, iters, driver=driver)
+        assert rt.traffic.total_bytes == int(row["net_bytes"]), driver
+        assert round(rt.time, 6) == float(row["t_model_s"]), driver
 
 
 @pytest.mark.parametrize("W", W_SWEEP)

@@ -1,0 +1,82 @@
+"""Cross-runtime trace-fuzz suite (see ``trace_fuzz``): ≥200 seeded
+random phase programs — skewed/shrinking/rotating intervals, multi-lock
+spans, forced spill — asserting the full exactness contract on every
+trace: reference vs scale traffic field-for-field, scale loop vs batched
+clocks bit-equal, and (jax present) numpy vs pallas backends identical.
+
+The aggregate path counters guard against the suite silently testing
+nothing: the batched eviction engine, the per-op danger screen, and the
+residual tick-ordered replay must all fire across the corpus.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import trace_fuzz
+from repro.core.regc import Traffic
+
+N_TRACES = 220
+
+
+def test_fuzz_traces_cross_runtime():
+    agg = {}
+    for seed in range(N_TRACES):
+        stats = trace_fuzz.crosscheck(seed)
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    # the corpus must exercise every engine path, not silently bypass it
+    assert agg["batched_phases"] > N_TRACES, agg
+    assert agg["evict_batch_rounds"] > 0, agg
+    assert agg["residual_replays"] > 0, agg
+    assert agg["danger_ops"] > 0, agg
+
+
+def test_fuzz_traces_backends_agree():
+    """numpy vs pallas directory backends on a fuzz subset: the packed
+    bitmask kernels are integer-exact, so traffic and clocks must be
+    identical (interpret mode on CPU makes this slow — subset only)."""
+    pytest.importorskip("jax")
+    for seed in (1, 3, 5, 7):
+        p = trace_fuzz.trace_params(seed)
+        prog = trace_fuzz.gen_program(p["rng"], p["W"], p["n_words"],
+                                      p["page_words"], n_phases=4)
+        runs = {}
+        for backend in ("numpy", "pallas"):
+            from repro.core.regc_scale import RegCScaleRuntime
+            rt = RegCScaleRuntime(p["W"], page_words=p["page_words"],
+                                  protocol=p["proto"], prefetch=1,
+                                  model_mechanism=False,
+                                  cache_pages=p["cache_pages"],
+                                  backend=backend)
+            trace_fuzz.run_program(
+                rt, prog, [rt.alloc(p["n_words"]), rt.alloc(p["n_words"])],
+                "batched")
+            runs[backend] = rt
+        for f in dataclasses.fields(Traffic):
+            assert (getattr(runs["numpy"].traffic, f.name)
+                    == getattr(runs["pallas"].traffic, f.name)), f.name
+        np.testing.assert_array_equal(runs["numpy"].clock,
+                                      runs["pallas"].clock)
+
+
+def test_fuzz_spill_app_drivers_bit_equal():
+    """The spill-heavy app variant (rotating blocks — residual replay
+    territory) stays bit-exact across drivers at several scales."""
+    from repro.core import FINE_PROTO
+    from repro.core.regc_scale import RegCScaleRuntime
+    from repro.dsm.apps import stream_spill
+    for W, cache in ((2, 5), (8, 9), (16, 17)):
+        runs = {}
+        for driver in ("loop", "batched"):
+            rt = RegCScaleRuntime(W, page_words=32, protocol=FINE_PROTO,
+                                  prefetch=1, model_mechanism=False,
+                                  cache_pages=cache)
+            stream_spill(rt, 32 * 16 * W, 3, driver=driver)
+            runs[driver] = rt
+        for f in dataclasses.fields(Traffic):
+            assert (getattr(runs["loop"].traffic, f.name)
+                    == getattr(runs["batched"].traffic, f.name)), (W, f.name)
+        np.testing.assert_array_equal(runs["loop"].clock,
+                                      runs["batched"].clock)
+        assert runs["batched"].stats["residual_replays"] > 0, (W, cache)

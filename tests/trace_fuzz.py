@@ -1,0 +1,232 @@
+"""Seeded trace-fuzz harness for the RegC runtimes.
+
+Generates deterministic random *phase-structured* SPMD programs — the
+shape the batched driver accepts: bulk phases declared as (W,) interval
+arrays, per-worker consistency-region spans between phases, barriers —
+and cross-validates every runtime/driver pairing on them:
+
+* ``RegCRuntime`` (the per-page reference) vs ``RegCScaleRuntime``:
+  traffic field-for-field identical, modeled clocks allclose;
+* scale ``loop`` driver vs ``batched`` ``phase_all`` driver: traffic
+  identical AND clocks bit-equal (``rtol=0, atol=0``);
+* ``numpy`` vs ``pallas`` directory backends (when jax is present).
+
+Interval styles are chosen per phase to hit the engine's hard regimes:
+block partitions (disjoint, fully batchable), halos (overlapping reach),
+shared low ranges (false sharing), skewed widths, windows that shrink
+phase over phase, and rotating blocks (each worker's dirty block lands in
+its neighbours' reach next pass — the residual tick-ordered replay path).
+Small ``cache_pages`` values force spill so the batched multi-worker
+eviction engine, the per-op ``_danger`` screen, and the residual replay
+are all exercised — ``crosscheck`` returns the batched runtime's path
+counters so the test suite can assert none of them silently idles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
+from repro.core.regc import Traffic
+from repro.core.regc_scale import RegCScaleRuntime
+
+PROTOS = [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]
+STYLES = ["blocks", "halo", "shared", "skewed", "shrink", "rotate"]
+
+
+def _intervals(rng, style: str, W: int, n_words: int, page_words: int,
+               phase_idx: int, n_phases: int) -> Tuple[np.ndarray, np.ndarray]:
+    """One (lo, hi) pair of (W,) word-interval arrays in the given style."""
+    ids = np.arange(W, dtype=np.int64)
+    chunk = max(n_words // W, 1)
+    if style == "blocks":
+        lo = ids * chunk
+        hi = lo + chunk
+        hi[-1] = n_words
+    elif style == "halo":
+        h = int(rng.integers(1, max(chunk, 2)))
+        lo = np.maximum(ids * chunk - h, 0)
+        hi = np.minimum((ids + 1) * chunk + h, n_words)
+    elif style == "shared":
+        lo = np.zeros(W, np.int64)
+        hi = np.full(W, int(rng.integers(1, n_words + 1)), np.int64)
+    elif style == "skewed":
+        # zipf-ish widths: most ops tiny, a few page-spanning
+        widths = np.minimum(rng.zipf(1.6, W).astype(np.int64) * page_words,
+                            n_words)
+        lo = rng.integers(0, n_words, W).astype(np.int64)
+        hi = np.minimum(lo + np.maximum(widths, 1), n_words)
+        lo = np.minimum(lo, hi - 1)
+    elif style == "shrink":
+        # windows tighten as the program advances
+        f = (phase_idx + 1) / (n_phases + 1)
+        shr = (chunk * f / 2).astype(np.int64) if hasattr(chunk, "astype") \
+            else int(chunk * f / 2)
+        lo = ids * chunk + shr
+        hi = np.maximum((ids + 1) * chunk - shr, lo + 1)
+        hi = np.minimum(hi, n_words)
+        lo = np.minimum(lo, hi - 1)
+    else:                              # rotate: blocks shifted per phase
+        r = (ids + phase_idx) % W
+        lo = r * chunk
+        hi = np.where(r == W - 1, n_words, lo + chunk)
+    return lo, hi
+
+
+def gen_program(rng, W: int, n_words: int, page_words: int,
+                n_phases: int = 7) -> List[tuple]:
+    """Deterministic random program: a list of events.
+
+    ``("phase", reads, writes, flops, mem_bytes)`` — bulk SPMD phase with
+    ``reads``/``writes`` lists of ``(region_idx, lo(W,), hi(W,))``;
+    ``("spans", [(w, lock, region_idx, lo, hi), ...])`` — per-worker
+    critical sections; ``("barrier",)``.
+    """
+    prog: List[tuple] = []
+    for ip in range(n_phases):
+        reads, writes = [], []
+        for _ in range(int(rng.integers(1, 3))):
+            style = str(rng.choice(STYLES))
+            lo, hi = _intervals(rng, style, W, n_words, page_words, ip,
+                                n_phases)
+            reads.append((int(rng.integers(0, 2)), lo, hi))
+        for _ in range(int(rng.integers(0, 3))):
+            style = str(rng.choice(STYLES))
+            lo, hi = _intervals(rng, style, W, n_words, page_words, ip,
+                                n_phases)
+            writes.append((int(rng.integers(0, 2)), lo, hi))
+        flops = (rng.integers(0, 40, W).astype(np.float64)
+                 if rng.random() < 0.7 else 0.0)
+        mem_bytes = float(rng.integers(0, 512)) if rng.random() < 0.4 else 0.0
+        prog.append(("phase", reads, writes, flops, mem_bytes))
+        if rng.random() < 0.4:         # contended spans between phases
+            spans = []
+            for w in range(W):
+                if rng.random() < 0.6:
+                    lo = int(rng.integers(0, n_words - 4))
+                    spans.append((w, int(rng.integers(0, 3)),
+                                  int(rng.integers(0, 2)), lo,
+                                  min(lo + int(rng.integers(1, 9)),
+                                      n_words)))
+            if spans:
+                prog.append(("spans", spans))
+        if rng.random() < 0.5:
+            prog.append(("barrier",))
+    prog.append(("barrier",))
+    return prog
+
+
+def apply_event(rt, ev, gas, driver: str):
+    """Execute one program event on any runtime: ``batched``
+    (phase_all), ``loop`` (per-worker phase), or ``ref`` (raw
+    read/write/compute — the reference runtime has no phase API)."""
+    W = rt.W
+    if ev[0] == "phase":
+        _, reads, writes, flops, mem_bytes = ev
+        r = [(gas[g], lo, hi) for g, lo, hi in reads]
+        wr = [(gas[g], lo, hi) for g, lo, hi in writes]
+        if driver == "batched":
+            rt.phase_all(reads=r, writes=wr, flops=flops,
+                         mem_bytes=mem_bytes)
+            return
+        fl = np.broadcast_to(np.asarray(flops, np.float64), (W,))
+        for w in range(W):
+            if driver == "loop":
+                rt.phase(w,
+                         reads=[(ga, int(lo[w]), int(hi[w]))
+                                for ga, lo, hi in r],
+                         writes=[(ga, int(lo[w]), int(hi[w]))
+                                 for ga, lo, hi in wr],
+                         flops=float(fl[w]), mem_bytes=mem_bytes)
+                continue
+            for ga, lo, hi in r:
+                rt.read(w, ga, int(lo[w]), int(hi[w]))
+            for ga, lo, hi in wr:
+                rt.write(w, ga, int(lo[w]), int(hi[w]))
+            if fl[w] or mem_bytes:
+                rt.compute(w, flops=float(fl[w]), mem_bytes=mem_bytes)
+    elif ev[0] == "spans":
+        for (w, lock, g, lo, hi) in ev[1]:
+            rt.acquire(w, lock)
+            rt.read(w, gas[g], lo, hi)
+            rt.write(w, gas[g], lo, hi)
+            rt.release(w, lock)
+    else:
+        rt.barrier()
+
+
+def run_program(rt, prog, gas, driver: str):
+    for ev in prog:
+        apply_event(rt, ev, gas, driver)
+    return rt
+
+
+def assert_traffic_equal(a, b, ctx=""):
+    for f in dataclasses.fields(Traffic):
+        av, bv = getattr(a.traffic, f.name), getattr(b.traffic, f.name)
+        assert av == bv, (ctx, f.name, a.traffic, b.traffic)
+
+
+def trace_params(seed: int) -> Dict:
+    rng = np.random.default_rng(seed)
+    W = int(rng.integers(2, 5))
+    page_words = int(rng.choice([16, 32, 64]))
+    n_words = page_words * int(rng.integers(10, 36))
+    # None / generous / forced-spill cache sizes
+    cache_pages = [None, 3, 5, 9][seed % 4]
+    return dict(rng=rng, W=W, page_words=page_words, n_words=n_words,
+                cache_pages=cache_pages, proto=PROTOS[seed % 3])
+
+
+def crosscheck(seed: int, *, check_ref: bool = True,
+               backends=("numpy",)) -> Dict[str, int]:
+    """Run one fuzz trace on every runtime/driver pairing and assert the
+    exactness contract.  Returns the batched runtime's path-counter stats
+    (summed over backends) so callers can assert coverage."""
+    p = trace_params(seed)
+    prog = gen_program(p["rng"], p["W"], p["n_words"], p["page_words"])
+    n_alloc = p["n_words"]
+
+    def make_scale(backend):
+        return RegCScaleRuntime(p["W"], page_words=p["page_words"],
+                                protocol=p["proto"], prefetch=1,
+                                model_mechanism=False,
+                                cache_pages=p["cache_pages"],
+                                backend=backend)
+
+    ref = None
+    if check_ref:
+        ref = RegCRuntime(p["W"], page_words=p["page_words"],
+                          protocol=p["proto"], track_values=False,
+                          prefetch=1, cache_pages=p["cache_pages"])
+        run_program(ref, prog, [ref.alloc(n_alloc), ref.alloc(n_alloc)],
+                    "ref")
+
+    stats: Dict[str, int] = {}
+    for backend in backends:
+        # loop vs batched run in LOCKSTEP with clocks compared bit-equal
+        # after EVERY event: barriers join clocks to their max, so an
+        # end-of-trace check alone can mask per-worker misattribution
+        # (a charge landing on the wrong worker with the right total)
+        runs = {"loop": make_scale(backend),
+                "batched": make_scale(backend)}
+        gas = {d: [rt.alloc(n_alloc), rt.alloc(n_alloc)]
+               for d, rt in runs.items()}
+        ctx = (seed, p["proto"], p["cache_pages"], backend)
+        for i, ev in enumerate(prog):
+            for d, rt in runs.items():
+                apply_event(rt, ev, gas[d], d)
+            np.testing.assert_allclose(
+                runs["batched"].clock, runs["loop"].clock, rtol=0, atol=0,
+                err_msg=f"{ctx} event {i} ({ev[0]})")
+        assert_traffic_equal(runs["loop"], runs["batched"], ctx)
+        if ref is not None:
+            assert_traffic_equal(ref, runs["batched"], ctx)
+            np.testing.assert_allclose(runs["batched"].clock, ref.clock,
+                                       rtol=1e-9, atol=1e-12,
+                                       err_msg=str(ctx))
+        for k, v in runs["batched"].stats.items():
+            stats[k] = stats.get(k, 0) + v
+    return stats
