@@ -38,6 +38,17 @@ def traffic_fields(rt) -> Dict[str, int]:
             for f in dataclasses.fields(type(rt.traffic))}
 
 
+def danger_fields(rt) -> Dict[str, int]:
+    """Danger-path counters for the spill sections: how many
+    danger-flagged ops the vectorized refetch schedule absorbed vs how
+    many fell back to the scalar page walk.  Recorded per row so the
+    committed results PROVE the vectorized path (not the fallback) ran
+    the spill regimes."""
+    stats = getattr(rt, "stats", {})
+    return {"danger_vec": stats.get("danger_vec_ops", 0),
+            "danger_scalar": stats.get("danger_scalar_ops", 0)}
+
+
 class SteadyState:
     """Capture per-iteration modeled time, skipping the cold first iter."""
 
@@ -129,7 +140,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                 "t_wall_s": r.get("t_wall_s"),
                 "t_model_s": r.get("t_model_s", r.get("t_iter_s")),
                 "total_bytes": r.get("net_bytes", 0),
-                **{k: v for k, v in r.items() if k.startswith("tr_")}})
+                **{k: v for k, v in r.items()
+                   if k.startswith("tr_") or k.startswith("danger_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

@@ -8,7 +8,10 @@ on any exact-traffic drift.
   ``threshold`` (relative), ignoring sections faster than ``min-wall``
   seconds (pure noise on a busy box); or
 * a point's exact protocol traffic changed — ``total_bytes`` or any
-  ``tr_*`` field both files carry.  Traffic is deterministic (the
+  ``tr_*`` field both files carry — or its deterministic ``danger_*``
+  path counters did (a spill regime silently flipping from the
+  vectorized refetch schedule to the scalar fallback keeps traffic
+  identical but is a perf regression).  Traffic is deterministic (the
   runtime's exactness invariant), so a mismatch is a correctness
   regression, not noise, and always fails — spill sections included.
 
@@ -87,9 +90,14 @@ def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
         n_compared += 1
         br, nr = b_rows[k], n_rows[k]
         # exact traffic: total_bytes plus every tr_* field both runs
-        # recorded.  Deterministic -> any mismatch is a gate failure.
+        # recorded, and the danger-path counters (which engine resolved
+        # the spill regimes — a silent flip to the scalar fallback keeps
+        # traffic identical but IS a regression).  Deterministic -> any
+        # mismatch is a gate failure.
         tfields = ["total_bytes"] + sorted(
-            set(f for f in br if f.startswith("tr_")) & set(nr))
+            set(f for f in br
+                if f.startswith("tr_") or f.startswith("danger_"))
+            & set(nr))
         bad = [f for f in tfields if br.get(f) != nr.get(f)]
         if bad:
             regressions.append(

@@ -10,8 +10,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import (SteadyState, make_rt, print_rows,
-                               traffic_fields, write_bench_json, write_csv)
+from benchmarks.common import (SteadyState, danger_fields, make_rt,
+                               print_rows, traffic_fields, write_bench_json,
+                               write_csv)
 from repro.dsm.apps import jacobi, jacobi_flops_per_iter
 
 N_BASE = 4096
@@ -46,7 +47,7 @@ def spill(iters: int, driver: str):
                      "net_bytes": rt.traffic.total_bytes,
                      "t_model_s": round(rt.time, 6),
                      "t_wall_s": round(t_wall, 4),
-                     **traffic_fields(rt)})
+                     **traffic_fields(rt), **danger_fields(rt)})
     return rows
 
 
@@ -105,6 +106,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=8)
     ap.add_argument("--weak", action="store_true")
+    ap.add_argument("--spill", action="store_true",
+                    help="run only the capacity-pressure (fig5_spill) "
+                         "points — the CI bench-smoke subset")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--driver", choices=["loop", "batched"],
                     default="batched",
@@ -113,11 +117,11 @@ def main(argv=None):
                     help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     rows = []
-    if args.all or not args.weak:
+    if args.all or not (args.weak or args.spill):
         rows += strong(args.iters, args.driver)
     if args.all or args.weak:
         rows += weak(args.iters, args.driver)
-    if args.all:
+    if args.all or args.spill:
         rows += spill(max(2, args.iters // 2), args.driver)
     write_csv("jacobi" if args.driver == "batched"
               else f"jacobi_{args.driver}", rows)

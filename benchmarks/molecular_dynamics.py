@@ -6,8 +6,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import (SteadyState, make_rt, print_rows,
-                               traffic_fields, write_bench_json, write_csv)
+from benchmarks.common import (SteadyState, danger_fields, make_rt,
+                               print_rows, traffic_fields, write_bench_json,
+                               write_csv)
 from repro.dsm.apps import molecular_dynamics
 
 N_PARTICLES = 8192
@@ -39,7 +40,7 @@ def spill(iters: int, driver: str, n: int):
                      "net_bytes": rt.traffic.total_bytes,
                      "t_model_s": round(rt.time, 6),
                      "t_wall_s": round(t_wall, 4),
-                     **traffic_fields(rt)})
+                     **traffic_fields(rt), **danger_fields(rt)})
     return rows
 
 
@@ -47,6 +48,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=6)
     ap.add_argument("--particles", type=int, default=N_PARTICLES)
+    ap.add_argument("--spill", action="store_true",
+                    help="run only the capacity-pressure (fig7_md_spill) "
+                         "points — the CI bench-smoke subset")
     ap.add_argument("--driver", choices=["loop", "batched"],
                     default="batched",
                     help="SPMD phase driver: per-worker loop or phase_all")
@@ -54,27 +58,32 @@ def main(argv=None):
                     help="also write machine-readable rows here")
     args = ap.parse_args(argv)
     n = args.particles
-    t_ref, _, _ = _run("pthreads", "reduction", 1, n, args.iters,
-                       args.driver)
     rows = []
-    for p in CORES:
-        for series, mode, tag in (
-                ("pthreads", "reduction", "pthreads"),
-                ("samhita", "lock", "samhita_lock"),
-                ("samhita", "reduction", "samhita_reduction"),
-                ("samhita_page", "lock", "samhita_page_lock"),
-                ("samhita_page", "reduction", "samhita_page_reduction")):
-            if series == "pthreads" and p > 8:
-                continue
-            t, rt, t_wall = _run(series, mode, p, n, args.iters, args.driver)
-            rows.append({"figure": "fig7_md", "series": tag, "p": p,
-                         "n_particles": n, "driver": args.driver,
-                         "t_iter_s": round(t, 6),
-                         "speedup": round(t_ref / t, 3),
-                         "net_bytes": rt.traffic.total_bytes,
-                         "t_model_s": round(rt.time, 6),
-                         "t_wall_s": round(t_wall, 4),
-                         **traffic_fields(rt)})
+    if not args.spill:
+        t_ref, _, _ = _run("pthreads", "reduction", 1, n, args.iters,
+                           args.driver)
+        for p in CORES:
+            for series, mode, tag in (
+                    ("pthreads", "reduction", "pthreads"),
+                    ("samhita", "lock", "samhita_lock"),
+                    ("samhita", "reduction", "samhita_reduction"),
+                    ("samhita_page", "lock", "samhita_page_lock"),
+                    ("samhita_page", "reduction", "samhita_page_reduction")):
+                if series == "pthreads" and p > 8:
+                    continue
+                t, rt, t_wall = _run(series, mode, p, n, args.iters,
+                                     args.driver)
+                rows.append({"figure": "fig7_md", "series": tag, "p": p,
+                             "n_particles": n, "driver": args.driver,
+                             "t_iter_s": round(t, 6),
+                             "speedup": round(t_ref / t, 3),
+                             "net_bytes": rt.traffic.total_bytes,
+                             "t_model_s": round(rt.time, 6),
+                             "t_wall_s": round(t_wall, 4),
+                             **traffic_fields(rt)})
+    # a --spill-only point set is partial: write_csv's clobber guard
+    # redirects it to <name>.partial.csv instead of shadowing the
+    # committed rows
     rows += spill(max(2, args.iters // 2), args.driver, n)
     write_csv("molecular_dynamics" if args.driver == "batched"
               else f"molecular_dynamics_{args.driver}", rows)

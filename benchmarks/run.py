@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 import traceback
 from pathlib import Path
@@ -26,6 +28,11 @@ def main(argv=None):
                     help="SPMD phase driver for the protocol sections: "
                          "per-worker loop, worker-axis-batched phase_all, "
                          "or both (one timed pass per driver)")
+    ap.add_argument("--sections", nargs="+", default=None, metavar="SUBSTR",
+                    help="run only sections whose name or tags contain any "
+                         "of these substrings; 'spill' focuses the protocol "
+                         "sections on their capacity-pressure figures (the "
+                         "CI bench-smoke subset)")
     ap.add_argument("--json", default="BENCH_scale.json", metavar="OUT",
                     help="write machine-readable results here "
                          "('' disables; default: %(default)s)")
@@ -33,6 +40,16 @@ def main(argv=None):
     iters = 4 if args.fast else 8
     drivers = (["loop", "batched"] if args.driver == "both"
                else [args.driver])
+    # substring section filter; the 'spill' tag additionally swaps the
+    # protocol sections' argv for their spill-only figure subsets, so a
+    # focused CI run stays seconds while still crossing the exact-traffic
+    # gate (partial runs land in *.partial.csv — the clobber guard)
+    focus_spill = bool(args.sections) and any(
+        "spill" in s for s in args.sections)
+
+    def keep(name, tags=()):
+        return args.sections is None or any(
+            s in name or any(s in t for t in tags) for s in args.sections)
 
     from benchmarks import (common, jacobi, molecular_dynamics,
                             regc_training, roofline, stream_triad)
@@ -41,31 +58,38 @@ def main(argv=None):
     for d in drivers:
         tag = f"[{d}]" if len(drivers) > 1 else ""
         drv = ["--driver", d]
+        st_args = ["--spill"] if focus_spill else ["--all"]
+        ja_args = ["--spill"] if focus_spill else ["--all"]
+        md_args = ["--spill"] if focus_spill else []
         sections += [
             (f"stream_triad (paper Figs. 2/3/4) {tag}",
-             f"stream_triad{tag}", False,
-             lambda drv=drv: stream_triad.main(
-                 ["--all", "--iters", str(iters)] + drv)),
+             f"stream_triad{tag}", False, ("spill",),
+             lambda drv=drv, a=st_args: stream_triad.main(
+                 a + ["--iters", str(iters)] + drv)),
             (f"Jacobi (paper Figs. 5/6) {tag}", f"jacobi{tag}", False,
-             lambda drv=drv: jacobi.main(
-                 ["--all", "--iters", str(iters)] + drv)),
+             ("spill",),
+             lambda drv=drv, a=ja_args: jacobi.main(
+                 a + ["--iters", str(iters)] + drv)),
             (f"Molecular dynamics (paper Fig. 7) {tag}",
-             f"molecular_dynamics{tag}", False,
-             lambda drv=drv: molecular_dynamics.main(
-                 ["--iters", str(max(4, iters // 2))] + drv)),
+             f"molecular_dynamics{tag}", False, ("spill",),
+             lambda drv=drv, a=md_args: molecular_dynamics.main(
+                 a + ["--iters", str(max(4, iters // 2))] + drv)),
         ]
     sections += [
         # jax-compile-bound (subprocess trainer), not a protocol section
         ("RegC training-layer sync policies (DESIGN.md 2.2)",
-         "regc_training", True, lambda: regc_training.main([])),
+         "regc_training", True, (), lambda: regc_training.main([])),
         ("Roofline summary (from dry-run artifacts)", "roofline", False,
-         lambda: roofline.main(["--mesh", "16x16"])),
+         (), lambda: roofline.main(["--mesh", "16x16"])),
     ]
 
     t0 = time.time()
     all_rows = []
     section_meta = {}
-    for title, name, slow, fn in sections:
+    failed = []
+    for title, name, slow, tags, fn in sections:
+        if not keep(name, tags):
+            continue
         if slow and args.fast:
             print(f"== {title} == (skipped: --fast)", flush=True)
             section_meta[name] = {"wall_s": 0.0, "status": "skipped (--fast)"}
@@ -80,6 +104,7 @@ def main(argv=None):
             status = f"error: {type(e).__name__}: {e}"
             print(f"section {name} failed: {status}", flush=True)
             traceback.print_exc()
+            failed.append(name)
         section_meta[name] = {"wall_s": round(time.time() - s0, 2),
                               "status": status}
         all_rows += rows
@@ -93,14 +118,33 @@ def main(argv=None):
                 prev = json.loads(Path(args.json).read_text())
             except Exception:
                 prev = None
+        out_json = args.json
+        if prev is not None:
+            # same clobber guard as write_csv, gated purely on coverage:
+            # any run missing points the existing file holds (a
+            # --sections filter, a failure-isolated section, a --fast run
+            # over a full-run baseline) must not replace the compare
+            # gate's ground truth (BENCH_REFRESH=1 overrides for
+            # deliberate removals)
+            def keys(rows):
+                return {(r.get("section"), r.get("protocol"), r.get("W"),
+                         r.get("driver", "loop")) for r in rows}
+            missing = (keys(prev.get("rows", []))
+                       - keys(common.bench_json_rows(all_rows)))
+            if missing and os.environ.get("BENCH_REFRESH") != "1":
+                out_json = str(Path(args.json).with_suffix(".partial.json"))
+                print(f"run: {args.json} covers {len(missing)} point(s) "
+                      f"this partial run lacks; writing {out_json} "
+                      "instead (BENCH_REFRESH=1 forces a refresh)")
         path = common.write_bench_json(
-            args.json, all_rows,
+            out_json, all_rows,
             meta={"fast": bool(args.fast), "iters": iters,
                   "driver": args.driver,
+                  "sections_filter": args.sections,
                   "total_wall_s": round(total, 2),
                   "sections": section_meta})
         print(f"wrote {path}")
-        if args.fast and prev is not None:
+        if args.fast and prev is not None and args.sections is None:
             # smoke-run the regression differ against the previous results
             # (report-only here; CI gates via `python -m benchmarks.compare`)
             from benchmarks import compare
@@ -111,6 +155,12 @@ def main(argv=None):
             # points are where batched eviction must stay traffic-exact
             print("== compare --sections spill ==")
             compare.report(prev, cur, sections=["spill"])
+    if failed:
+        # a failure-isolated section must still fail the invocation, or a
+        # green-looking run can mask a dead section (the CI regression gate
+        # would silently compare nothing for it)
+        print(f"FAILED section(s): {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
     return all_rows
 
 

@@ -10,9 +10,11 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import (SERIES, SteadyState, make_rt, print_rows,
-                               traffic_fields, write_bench_json, write_csv)
-from repro.dsm.apps import stream_spill, stream_triad, triad_bytes_per_iter
+from benchmarks.common import (SERIES, SteadyState, danger_fields, make_rt,
+                               print_rows, traffic_fields, write_bench_json,
+                               write_csv)
+from repro.dsm.apps import (stream_refetch, stream_spill, stream_triad,
+                            triad_bytes_per_iter)
 
 N_BASE = 16 << 20          # paper: n = 16M doubles-worth of fp32 words
 CORES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -88,14 +90,17 @@ def spill_heavy(iters: int, driver: str):
     """Rotating-block spill (``apps.stream_spill``): every pass shifts the
     block assignment, so each worker's dirty block lands inside its
     neighbours' reach — the batched driver's window-disjointness analysis
-    routes the interacting workers through tick-ordered residual replay.
-    Traffic stays bit-identical across drivers; the points record the
-    wall cost of the adversarial (non-disjoint) spill regime."""
+    routes the interacting workers through tick-ordered residual replay,
+    whose per-worker ops hit the danger screen and resolve through the
+    vectorized refetch schedule.  Plus the mid-op refetch torture
+    (``apps.stream_refetch``): disjoint blocks with half-overlapping
+    sliding windows, where EVERY op is danger-flagged and stays on the
+    batched path.  Traffic stays bit-identical across drivers; the rows
+    record the danger-path counters proving the vectorized schedule (not
+    the scalar fallback) absorbed the pattern."""
     rows = []
     for p in (16, 64, 256):
-        n = (1 << 17) * p              # 128 pages per worker: the rotating
-        # danger/residual regime is per-page Python in BOTH drivers, so
-        # the point stays small — it gates exactness, not throughput
+        n = (1 << 17) * p              # 128 pages per worker
         cache_pages = (3 * (n // 1024)) // (2 * p)   # ~¾ of the 2-array set
         ss = SteadyState()
         t0 = time.perf_counter()
@@ -108,7 +113,22 @@ def spill_heavy(iters: int, driver: str):
                      "net_bytes": rt.traffic.total_bytes,
                      "t_model_s": round(rt.time, 6),
                      "t_wall_s": round(time.perf_counter() - t0, 4),
-                     **traffic_fields(rt)})
+                     **traffic_fields(rt), **danger_fields(rt)})
+    for p in (16, 64, 256):
+        n = (1 << 17) * p   # 8-page sliding windows over 128-page blocks
+        cache_pages = 20    # ~1.2 of the 16-page read+write window pair
+        ss = SteadyState()
+        t0 = time.perf_counter()
+        rt = make_rt("samhita", p, cache_pages=cache_pages)
+        stream_refetch(rt, n, max(2, iters // 2), sweeps=2, width_pages=8,
+                       driver=driver, on_iter=ss)
+        rows.append({"figure": "fig4_refetch", "series": "samhita_refetch",
+                     "p": p, "n": n, "driver": driver,
+                     "t_iter_s": round(ss.per_iter(), 6),
+                     "net_bytes": rt.traffic.total_bytes,
+                     "t_model_s": round(rt.time, 6),
+                     "t_wall_s": round(time.perf_counter() - t0, 4),
+                     **traffic_fields(rt), **danger_fields(rt)})
     return rows
 
 

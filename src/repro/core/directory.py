@@ -317,6 +317,31 @@ class RegionDirectory:
         return live & (np.cumsum(live, axis=1, dtype=np.int32)
                        <= k[:, None])
 
+    def take_upto_row(self, live: np.ndarray,
+                      k: int) -> Tuple[np.ndarray, int]:
+        """Rank-select over ONE run's live mask (the refetch replay
+        engine's victim scan): the mask of the first k live cells and the
+        scan cut — the index just past the k-th live cell, up to which the
+        run is consumed.  The caller guarantees the run holds MORE than k
+        live cells (whole-run consumption never needs a mask).  On
+        'pallas' the mask packs to uint32 bitmasks and the
+        ``take_first_k`` rank-select kernel computes it (the cut falls
+        out of the take mask itself); integer-exact either way.  The
+        standalone ``kth_set_index`` rank-query kernel answers the cut
+        without unpacking — what a multi-row plane-op schedule would use
+        (ROADMAP rung); the one-row scan here has the mask in hand."""
+        if self.backend == "pallas":
+            from repro.kernels import protocol_sweep as _ps
+            take = _ps.unpack_mask_rows(
+                _ps.take_first_k(_ps.pack_mask_rows(live[None]),
+                                 np.asarray([k], np.int64),
+                                 backend=self.backend),
+                live.size)[0]
+            return take, int(np.flatnonzero(take)[-1]) + 1
+        cs = np.cumsum(live, dtype=np.int64)
+        take = live & (cs <= k)
+        return take, int(np.argmax(cs >= k)) + 1
+
     def evict_rows(self, rows: np.ndarray, start: int, length: int,
                    take: Optional[np.ndarray], *,
                    set_wprot: bool) -> np.ndarray:

@@ -360,15 +360,26 @@ class RegCRuntime:
             if self.protocol == IDEAL_PROTO:
                 continue
             if self.protocol == FINE_PROTO and self.track_values:
-                # diff against twin via the Pallas page_diff kernel
-                from repro.kernels.ops import diff_encode
-                import jax.numpy as jnp
                 curr = self._page_view(w, p)[None, :]
                 twin = span.twins[p][None, :]
-                mask, vals, count = diff_encode(
-                    jnp.asarray(curr), jnp.asarray(twin), interpret=True)
-                mask = np.asarray(mask[0], bool)
-                nwords = int(count[0])
+                try:
+                    # diff against twin via the Pallas page_diff kernel
+                    from repro.kernels.ops import diff_encode
+                    import jax.numpy as jnp
+                    mask, vals, count = diff_encode(
+                        jnp.asarray(curr), jnp.asarray(twin), interpret=True)
+                    mask = np.asarray(mask[0], bool)
+                    nwords = int(count[0])
+                except ImportError:
+                    try:
+                        import jax  # noqa: F401 — jax works: a real
+                        # defect in the kernel modules, not absence
+                    except ImportError:
+                        # jax absent: same diff in numpy
+                        mask = (curr[0] != twin[0])
+                        nwords = int(mask.sum())
+                    else:
+                        raise
                 idx = np.nonzero(mask)[0]
                 lo = int(idx[0]) if idx.size else lo
                 hi = int(idx[-1]) + 1 if idx.size else lo

@@ -24,7 +24,11 @@ Key representation choices:
   batched path under spill: a window-disjointness analysis over the
   declared ranges proves which workers' evictions cannot interact, evicts
   them with vectorized segment-LRU plane ops, and replays only the
-  residual interacting workers tick-ordered;
+  residual interacting workers tick-ordered.  Ops that can evict pages of
+  their own range before touching them (the mid-op refetch pattern,
+  flagged by ``_danger``) resolve through an analytic segmented
+  evict-then-refetch schedule (``_danger_replay``) instead of a per-page
+  Python walk, in BOTH drivers;
 * lock notices are flat, version-segmented numpy interval logs
   (``core.directory.IntervalLog``); acquire/barrier replay is one slice +
   segment-min/max coalesce per (lock, worker);
@@ -88,8 +92,16 @@ class RegCScaleRuntime:
                  n_mem_servers: int = 1, model_mechanism: bool = True,
                  instr_s_per_word: float = INSTR_S_PER_WORD,
                  fault_s: float = FAULT_S, fetch_batch: int = 1,
-                 backend: str = "numpy"):
+                 backend: str = "numpy", danger_mode: str = "vec"):
         assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
+        # 'vec' | 'scalar': how ops flagged by the per-op ``_danger``
+        # screen (mid-op refetch possible) replay.  'vec' evaluates the
+        # analytic segmented evict-then-refetch schedule (_danger_replay);
+        # 'scalar' forces the page-by-page reference walk — the oracle the
+        # trace-fuzz suite cross-validates against.  Both are
+        # traffic-exact; only wall time differs.
+        assert danger_mode in ("vec", "scalar"), danger_mode
+        self.danger_mode = danger_mode
         # 'numpy' | 'pallas': backend for the whole-plane directory
         # reductions (kernels.protocol_sweep).  Integer-exact either way;
         # degrades to numpy with a warning when jax is unavailable.
@@ -144,7 +156,8 @@ class RegCScaleRuntime:
         # suite asserts the batched-eviction and residual paths are
         # actually exercised rather than silently bypassed)
         self.stats = {"batched_phases": 0, "evict_batch_rounds": 0,
-                      "danger_ops": 0, "residual_replays": 0}
+                      "danger_ops": 0, "residual_replays": 0,
+                      "danger_vec_ops": 0, "danger_scalar_ops": 0}
 
     # ------------------------------------------------------------------
     def alloc(self, n_elems: int) -> GasArray:
@@ -345,6 +358,187 @@ class RegCScaleRuntime:
             self._evict_cells(w, int(self.resident[w]) - self.cache_pages)
         return n_miss
 
+    def _danger_replay(self, w: int, d: RegionDirectory, region: int,
+                       p_lo: int, p_hi: int,
+                       fetch_flag: Optional[np.ndarray], *,
+                       is_write: bool) -> int:
+        """Vectorized mid-op refetch replay: the exact effects of the
+        reference's page-by-page touch/fetch/evict interleave for one
+        danger-flagged op, computed analytically as a segmented
+        evict-then-refetch schedule instead of a Python loop over pages.
+
+        The key structure (see DIRECTORY.md §refetch schedule): within an
+        op the touch front sweeps the op's columns left to right while
+        the eviction front consumes the worker's LRU victim stream in
+        tick order, and the two interact only at the op's *in-cache
+        segments* — maximal column runs of the op range that are cache
+        slots of one pre-op touch run (victim order within a run is
+        column order, so both fronts traverse a segment the same way).
+        When the touch front reaches a segment none of whose cells have
+        been evicted yet, touching makes the whole segment stale before
+        any eviction can reach it (touching is free — no enters, so the
+        eviction front cannot advance).  When at least one cell has been
+        evicted, the eviction front is ahead of the touch front inside
+        the segment and every touch refetches an evicted cell — an enter
+        that (past the watermark) evicts exactly one more victim, keeping
+        the front ahead: the WHOLE segment evicts-then-refetches.  The
+        schedule therefore resolves per segment, not per page: cold cells
+        and refetched segments contribute enters in bulk, victims are
+        consumed from the LRU queue run-by-run (rank-select over each
+        run's live mask — ``directory.take_upto_row``, packed
+        ``take_first_k``/``kth_set_index`` kernels on 'pallas'), and once
+        the pre-op stream is exhausted the op consumes its own oldest
+        touched columns (a prefix, since op ticks ascend with columns).
+
+        ``fetch_flag`` marks which pages charge a fetch when invalid at
+        touch time (None = all; writes pass the partial-page mask).
+        Returns the fetch-miss count — the caller charges the op's fetch
+        messages once, like the batch path.  Traffic is identical to the
+        scalar walk cell for cell; clock charges group per victim run
+        (allclose vs the reference, bit-equal across drivers since both
+        run this same code)."""
+        C = int(self.cache_pages)
+        base = int(d.base[w])
+        c0 = int(p_lo) - base
+        n = int(p_hi) - int(p_lo)
+        s = slice(c0, c0 + n)
+        incache0 = d.incache[w, s].copy()
+        valid0 = d.valid[w, s].copy()
+        dirty0 = d.dirty[w, s].copy()
+        touch0 = d.touch[w, s].copy()
+        R0 = int(self.resident[w])
+        slack = C - R0
+        q = self._lru_q[w]
+        pb = self.page_bytes
+
+        # maximal op segments of constant (in-cache, owning run): cold
+        # cells key to -1, in-cache cells to their touch tick
+        key = np.where(incache0, touch0, np.int64(-1))
+        cuts = np.flatnonzero(np.diff(key)) + 1
+        seg_lo = np.concatenate(([0], cuts))
+        seg_hi = np.concatenate((cuts, [n]))
+
+        evicted_pre = np.zeros(n, bool)   # evicted before their touch
+        touch_front = 0
+        qi = 0                            # victim stream cursor: run index
+        roff = int(q[0][4]) if q else 0   # ... and scan offset within it
+
+        def consume(k: int) -> int:
+            """Consume k victims from the pre-op stream in tick order,
+            applying eviction effects; returns the shortfall once the
+            stream is exhausted (consumed from the op's own cells)."""
+            nonlocal qi, roff
+            while k > 0 and qi < len(q):
+                run = q[qi]
+                t0r, rg, col0, nr = run[0], run[1], run[2], run[3]
+                if roff >= nr:
+                    qi += 1
+                    roff = int(q[qi][4]) if qi < len(q) else 0
+                    continue
+                dr = self.dirs[rg]
+                cc0 = col0 + (int(dr.shift[w]) - run[5])
+                a, b = cc0 + roff, cc0 + nr
+                in_op = dr is d and a < c0 + n and b > c0
+                if run[6] and not in_op:
+                    # pristine, outside the op: a contiguous live prefix
+                    take = min(k, nr - roff)
+                    self._evict_now(w, dr, np.arange(a, a + take))
+                    k -= take
+                    roff += take
+                    continue
+                live = (np.ones(b - a, bool) if run[6]
+                        else (dr.touch[w, a:b] == t0r) & dr.incache[w, a:b])
+                if in_op:
+                    # cells of the op range already touched are the
+                    # newest copies — never pre-op victims
+                    opj = np.arange(a - c0, b - c0)
+                    stale = (opj >= 0) & (opj < n) & (opj < touch_front)
+                    live &= ~stale
+                tot = int(live.sum())
+                if tot <= k:
+                    vc = np.flatnonzero(live) + a
+                    if vc.size:
+                        self._evict_now(w, dr, vc)
+                        if in_op:
+                            ej = vc - c0
+                            ej = ej[(ej >= 0) & (ej < n)]
+                            evicted_pre[ej] = True
+                    k -= tot
+                    roff = nr
+                    continue
+                take_mask, cut = dr.take_upto_row(live, k)
+                vc = np.flatnonzero(take_mask) + a
+                self._evict_now(w, dr, vc)
+                if in_op:
+                    ej = vc - c0
+                    ej = ej[(ej >= 0) & (ej < n)]
+                    evicted_pre[ej] = True
+                roff += cut
+                k = 0
+            return k
+
+        enters = 0
+        ev_done = 0
+        own_done = 0
+        for j0, j1 in zip(seg_lo, seg_hi):
+            j0, j1 = int(j0), int(j1)
+            if incache0[j0] and not evicted_pre[j0]:
+                touch_front = j1          # stale touches: no enters
+                continue
+            # cold cells, or an in-cache segment whose prefix was already
+            # evicted (the refetch cascade claims the whole segment)
+            enters += j1 - j0
+            target = enters - slack
+            if target > ev_done:
+                own_done += consume(target - ev_done)
+                ev_done = target
+            touch_front = j1
+
+        # fetch misses: every cell invalid at its touch (never valid, or
+        # evicted mid-op) whose page charges a fetch
+        miss = ~valid0 | evicted_pre
+        if fetch_flag is not None:
+            miss &= fetch_flag
+        n_miss = int(miss.sum())
+        if n_miss and self.protocol != IDEAL_PROTO:
+            self.traffic.page_fetches += n_miss
+            self.traffic.fetch_bytes += n_miss * pb
+
+        # final plane state of the op range, then the op's own oldest
+        # columns consumed once the stream ran dry (always a prefix — op
+        # ticks ascend with columns) evict through the shared `_evict_now`
+        # effect sequence, reading their post-touch dirty state (write ops
+        # just marked them dirty) straight off the planes
+        d.valid[w, s] = True
+        d.incache[w, s] = True
+        if is_write:
+            d.dirty[w, s] = True
+            d.maybe_dirty = True
+            self._dirty_regions[w].add(region)
+        else:
+            d.dirty[w, s] = dirty0 & ~evicted_pre
+        assert own_done < n, (own_done, n)
+        if own_done:
+            self._evict_now(w, d, np.arange(c0, c0 + own_done))
+
+        # queue: drop fully-consumed front runs, advance the partial one,
+        # append the op's own touch run (its consumed prefix starts dead)
+        for _ in range(min(qi, len(q))):
+            q.popleft()
+        if q:
+            if roff >= q[0][3]:       # cursor drained the run exactly
+                q.popleft()
+            else:
+                q[0][4] = roff
+        tick = self._q_append(w, region, c0, n, int(d.shift[w]))
+        d.touch[w, s] = tick
+        if own_done:
+            q[-1][4] = own_done
+        self.resident[w] += enters     # _evict_now debited every victim
+        assert int(self.resident[w]) == min(R0 + enters, C), (
+            self.resident[w], R0, enters, C)
+        return n_miss
+
     def _maybe_evict(self, w: int):
         """Watermark-triggered batched eviction: no per-op work unless the
         occupancy counter crossed ``cache_pages``; then the oldest pages
@@ -371,9 +565,15 @@ class RegCScaleRuntime:
             n = p_hi - p_lo
             n_enter = n - int(d.incache[w, s].sum())
             if self._danger(w, n_enter, n):
-                n_miss = 0
-                for p in range(p_lo, p_hi):
-                    n_miss += self._touch_page_exact(w, d, p, fetch=True)
+                if self.danger_mode == "vec" and self.cache_pages >= 1:
+                    self.stats["danger_vec_ops"] += 1
+                    n_miss = self._danger_replay(w, d, region, p_lo, p_hi,
+                                                 None, is_write=False)
+                else:
+                    self.stats["danger_scalar_ops"] += 1
+                    n_miss = 0
+                    for p in range(p_lo, p_hi):
+                        n_miss += self._touch_page_exact(w, d, p, fetch=True)
                 if n_miss:
                     self._net(w, n_miss * self.page_bytes,
                               2 * -(-n_miss // self.fetch_batch))
@@ -407,8 +607,26 @@ class RegCScaleRuntime:
             n = p_hi - p_lo
             n_enter0 = n - int(d.incache[w, s].sum())
             if self._danger(w, n_enter0, n):
+                if (self.danger_mode == "vec" and self.cache_pages >= 1
+                        and not in_span):
+                    # spans stay on the scalar walk: critical sections
+                    # touch few pages and need per-page span.touched
+                    # interval merging
+                    self.stats["danger_vec_ops"] += 1
+                    pages = np.arange(p_lo, p_hi)
+                    bw_ = (pages - ga.page_lo) * self.page_words
+                    wlo_v = np.maximum(lo - bw_, 0)
+                    whi_v = np.minimum(hi - bw_, self.page_words)
+                    n_miss = self._danger_replay(
+                        w, d, region, p_lo, p_hi,
+                        (whi_v - wlo_v) < self.page_words, is_write=True)
+                    if n_miss:
+                        self._net(w, n_miss * self.page_bytes,
+                                  2 * -(-n_miss // self.fetch_batch))
+                    return
                 # exact per-page replica of the reference's write-allocate +
                 # LRU sequence (see _danger)
+                self.stats["danger_scalar_ops"] += 1
                 span = self.spans[w][-1] if in_span else None
                 base = int(d.base[w])
                 n_miss = 0
@@ -855,10 +1073,11 @@ class RegCScaleRuntime:
         """Per-op ``_danger`` screening for the batched path: workers
         whose op could evict a still-in-cache page of its own range
         before touching it (the mid-op refetch pattern) replay THIS op
-        per worker — ``read``/``write`` resolve it per page in tick order
-        — and the rest stay batched.  Exact because the split only runs
-        over workers already proven independent, so any interleaving of
-        their op executions is equivalent."""
+        per worker — ``read``/``write`` resolve it through the analytic
+        refetch schedule (``_danger_replay``) — and the rest stay
+        batched.  Exact because the split only runs over workers already
+        proven independent, so any interleaving of their op executions
+        is equivalent."""
         if self.protocol == IDEAL_PROTO:
             return rows
         L = p_hi - p_lo

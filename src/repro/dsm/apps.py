@@ -155,6 +155,46 @@ def stream_spill(rt, n: int, iters: int, *, sweeps: int = 2,
     return rt
 
 
+def stream_refetch(rt, n: int, iters: int, *, sweeps: int = 2,
+                   width_pages: int = 8, driver: str = "auto",
+                   on_iter: Optional[Callable] = None):
+    """Mid-op refetch torture (the ``_danger`` adversary): each worker
+    owns a disjoint block and every pass slides a read+write window
+    across it by HALF the window width, under a cache that holds barely
+    more than one window pair.  Every op's range therefore half-overlaps
+    pages still in cache (its own previous window) while the cold half
+    pushes occupancy over the watermark — the exact mid-op
+    evict-then-refetch interleave the reference resolves page by page.
+    Blocks stay disjoint, so the batched driver keeps every worker on
+    the vectorized path and the per-op danger screen (not the residual
+    tick-ordered replay) must absorb the pattern: ``stats`` should show
+    ``danger_vec_ops`` rising with W while ``residual_replays`` stays 0.
+    Bit-exact across drivers, like every app here."""
+    A, B = rt.alloc(n), rt.alloc(n)
+    W = rt.W
+    pw = rt.page_words
+    chunk = n // W
+    Lw = width_pages * pw                   # window width in words
+    assert chunk >= 2 * Lw, "blocks must fit a sliding window"
+    step = Lw // 2
+    n_offs = (chunk - Lw) // step + 1       # window positions per block
+    ids = np.arange(W, dtype=np.int64)
+    phase = _phase_driver(rt, driver)
+    k = 0
+    for it in range(iters):
+        for s in range(sweeps):
+            off = (k * step) % (n_offs * step)
+            k += 1
+            lo = ids * chunk + off
+            hi = lo + Lw
+            phase(reads=((B, lo, hi),), writes=((A, lo, hi),),
+                  flops=2.0 * (hi - lo), mem_bytes=2.0 * 4 * (hi - lo))
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt
+
+
 # ---------------------------------------------------------------------------
 # Jacobi iterative solver (paper §V-B, Figs. 5-6; OmpSCR c_jacobi01)
 # ---------------------------------------------------------------------------

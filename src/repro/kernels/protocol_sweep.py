@@ -16,7 +16,10 @@ accelerator:
   candidates for sharer invalidation);
 * ``take_first_k``   — per-row rank-select (each row's first k set bits in
   little-endian column order): the batched eviction engine's segment-LRU
-  victim selection over packed run-liveness masks.
+  victim selection over packed run-liveness masks;
+* ``kth_set_index``  — per-row rank query (column of the k-th set bit):
+  the mid-op refetch replay engine's scan cut — how far a victim run's
+  live mask must be consumed to satisfy an eviction demand.
 
 Both are integer-exact, so protocol traffic is identical on every backend
 (``tests/test_directory.py`` oracles the packed kernels against the boolean
@@ -120,6 +123,32 @@ def _take_first_k_np(bits: np.ndarray, k: np.ndarray) -> np.ndarray:
     return out
 
 
+def _kth_set_index_np(bits: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Per-row rank query: little-endian column index of the k[i]-th
+    (1-based) set bit of row i, or -1 when the row has fewer than k[i]
+    set bits (or k[i] <= 0).  Word-level prefix popcounts locate the
+    word; 32 static shift steps locate the bit within it."""
+    R, n_words = bits.shape
+    pc = _popcount_words(bits).astype(np.int64)
+    cum = np.cumsum(pc, axis=1)
+    total = cum[:, -1]
+    kk = np.asarray(k, np.int64)
+    # first word whose cumulative popcount reaches k (k > total handled
+    # by the final mask; argmax of an all-False row is 0, also masked)
+    wi = np.argmax(cum >= kk[:, None], axis=1)
+    rows = np.arange(R)
+    need = (kk - (cum[rows, wi] - pc[rows, wi])).astype(np.int64)
+    word = bits[rows, wi]
+    run = np.zeros(R, np.int64)
+    idx = np.full(R, -1, np.int64)
+    for j in range(32):
+        bit = ((word >> np.uint32(j)) & np.uint32(1)).astype(np.int64)
+        run += bit
+        hit = (idx < 0) & (bit == 1) & (run == need)
+        idx = np.where(hit, 32 * wi + j, idx)
+    return np.where((kk >= 1) & (total >= kk), idx, -1)
+
+
 if HAVE_PALLAS:
 
     def _popcount_kernel(bits_ref, out_ref):
@@ -184,6 +213,50 @@ if HAVE_PALLAS:
         )(jnp.asarray(padded), jnp.asarray(kp))
         return np.asarray(out[:R, :n_words])
 
+    def _kth_set_index_kernel(bits_ref, k_ref, out_ref):
+        v = bits_ref[...]
+        pc = v - ((v >> 1) & jnp.uint32(0x55555555))
+        pc = ((pc & jnp.uint32(0x33333333))
+              + ((pc >> 2) & jnp.uint32(0x33333333)))
+        pc = (pc + (pc >> 4)) & jnp.uint32(0x0F0F0F0F)
+        pc = ((pc * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+        cum = jnp.cumsum(pc, axis=1)
+        total = cum[:, -1:]
+        k = k_ref[...]
+        reach = cum >= k
+        wi = jnp.argmax(reach, axis=1, keepdims=True)
+        excl = jnp.take_along_axis(cum - pc, wi, axis=1)
+        need = k - excl
+        word = jnp.take_along_axis(v, wi, axis=1)
+        run = jnp.zeros_like(need)
+        idx = jnp.full_like(need, -1)
+        for j in range(32):                  # static rank steps
+            bit = ((word >> j) & jnp.uint32(1)).astype(jnp.int32)
+            run = run + bit
+            hit = (idx < 0) & (bit == 1) & (run == need)
+            idx = jnp.where(hit, 32 * wi + j, idx)
+        ok = (k >= 1) & (total >= k)
+        out_ref[...] = jnp.where(ok, idx, -1)
+
+    def _kth_set_index_pallas(bits: np.ndarray, k: np.ndarray) -> np.ndarray:
+        R, n_words = bits.shape
+        Rp = -(-R // ROWS_PER_BLOCK) * ROWS_PER_BLOCK
+        Cp = max(-(-n_words // _LANE) * _LANE, _LANE)
+        padded = np.zeros((Rp, Cp), np.uint32)
+        padded[:R, :n_words] = bits
+        kp = np.zeros((Rp, 1), np.int32)
+        kp[:R, 0] = np.minimum(k, np.iinfo(np.int32).max)
+        out = pl.pallas_call(
+            _kth_set_index_kernel,
+            grid=(Rp // ROWS_PER_BLOCK,),
+            in_specs=[pl.BlockSpec((ROWS_PER_BLOCK, Cp), lambda i: (i, 0)),
+                      pl.BlockSpec((ROWS_PER_BLOCK, 1), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((ROWS_PER_BLOCK, 1), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+            interpret=jax.default_backend() != "tpu",
+        )(jnp.asarray(padded), jnp.asarray(kp))
+        return np.asarray(out[:R, 0]).astype(np.int64)
+
     def _coverage_kernel(delta_ref, multi_ref):
         cover = jnp.cumsum(delta_ref[...], axis=1)
         multi_ref[...] = (cover >= 2).astype(jnp.int8)
@@ -227,6 +300,18 @@ def take_first_k(bits: np.ndarray, k: np.ndarray, *,
     if resolve_backend(backend) == "pallas":
         return _take_first_k_pallas(bits, k)
     return _take_first_k_np(bits, np.asarray(k, np.int64))
+
+
+def kth_set_index(bits: np.ndarray, k: np.ndarray, *,
+                  backend: str = "numpy") -> np.ndarray:
+    """(R, n_words) uint32 + (R,) ranks -> (R,) little-endian column index
+    of each row's k[i]-th (1-based) set bit, -1 when out of range (the
+    refetch replay engine's victim-scan cut)."""
+    if bits.shape[1] == 0:
+        return np.full(bits.shape[0], -1, np.int64)
+    if resolve_backend(backend) == "pallas":
+        return _kth_set_index_pallas(bits, np.asarray(k, np.int64))
+    return _kth_set_index_np(bits, np.asarray(k, np.int64))
 
 
 def coverage_multi(delta: np.ndarray, *, backend: str = "numpy") -> np.ndarray:

@@ -155,6 +155,59 @@ def test_take_first_k_pallas_matches_numpy():
         ps.take_first_k(bits, k, backend="numpy"))
 
 
+def test_kth_set_index_matches_boolean_oracle():
+    """Packed rank query (the refetch replay engine's victim-scan cut)
+    vs the boolean oracle: column of each row's k-th set bit, -1 when
+    the row holds fewer than k (or k <= 0)."""
+    from repro.kernels import protocol_sweep as ps
+    rng = np.random.default_rng(23)
+    for R, C in ((1, 1), (4, 31), (8, 64), (33, 517), (128, 90)):
+        live = rng.random((R, C)) < 0.4
+        k = rng.integers(-1, C + 3, R).astype(np.int64)
+        got = ps.kth_set_index(ps.pack_mask_rows(live), k)
+        for r in range(R):
+            idx = np.flatnonzero(live[r])
+            want = idx[k[r] - 1] if 1 <= k[r] <= idx.size else -1
+            assert got[r] == want, (R, C, r, k[r])
+
+
+def test_kth_set_index_pallas_matches_numpy():
+    pytest.importorskip("jax")
+    from repro.kernels import protocol_sweep as ps
+    rng = np.random.default_rng(29)
+    live = rng.random((23, 333)) < 0.5
+    k = rng.integers(0, 200, 23).astype(np.int64)
+    bits = ps.pack_mask_rows(live)
+    np.testing.assert_array_equal(
+        ps.kth_set_index(bits, k, backend="pallas"),
+        ps.kth_set_index(bits, k, backend="numpy"))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_take_upto_row_rank_select(backend):
+    """The replay engine's one-run victim scan: first k live cells plus
+    the scan cut, packed kernels on 'pallas' vs the cumsum path — both
+    must agree with the boolean oracle (caller guarantees count > k)."""
+    if backend == "pallas":
+        pytest.importorskip("jax")
+    from repro.core.directory import RegionDirectory
+    d = RegionDirectory(1, 0, 0, 64, backend=backend)
+    rng = np.random.default_rng(31)
+    for C in (5, 33, 64, 257):
+        live = rng.random(C) < 0.5
+        tot = int(live.sum())
+        if tot < 2:
+            live[:2] = True
+            tot = int(live.sum())
+        k = int(rng.integers(1, tot))          # strictly fewer than live
+        take, cut = d.take_upto_row(live, k)
+        idx = np.flatnonzero(live)
+        want = np.zeros(C, bool)
+        want[idx[:k]] = True
+        np.testing.assert_array_equal(take, want, err_msg=f"{backend} {C}")
+        assert cut == idx[k - 1] + 1, (backend, C, k)
+
+
 @pytest.mark.parametrize("backend", ["numpy", "pallas"])
 def test_evict_rows_matches_per_cell_oracle(backend):
     """The batched eviction primitive (dirty counts, wprot re-arm,

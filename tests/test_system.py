@@ -5,10 +5,12 @@ feature flags as the full config, tiny widths, one forward/train step and one
 decode step on CPU asserting output shapes + finiteness.  Full configs are
 exercised only via the dry-run (ShapeDtypeStruct, no allocation).
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip(
+    "jax", reason="jax-dependent suite; the no-jax CI leg covers the numpy fallbacks")
+import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_reduced, shapes_for
 from repro.models import model as M

@@ -32,6 +32,53 @@ def test_fuzz_traces_cross_runtime():
     assert agg["danger_ops"] > 0, agg
 
 
+N_DANGER_TRACES = 80
+
+
+def test_fuzz_danger_traces_cross_runtime():
+    """Danger-dense family (rotating/sliding windows sized to force
+    mid-op eviction): reference vs loop vs batched in LOCKSTEP, plus the
+    vectorized refetch replay cross-validated against the forced scalar
+    page walk on every trace.  The corpus must be absorbed by the
+    vectorized schedule — the scalar fallback firing would mean the
+    engine silently degraded."""
+    agg = {}
+    for seed in range(N_DANGER_TRACES):
+        stats = trace_fuzz.crosscheck(seed, family="danger")
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    assert agg["danger_vec_ops"] > N_DANGER_TRACES, agg
+    assert agg["danger_scalar_ops"] == 0, agg
+    assert agg["evict_batch_rounds"] > 0, agg
+    assert agg["residual_replays"] > 0, agg
+
+
+def test_stream_refetch_app_drivers_bit_equal():
+    """The mid-op refetch torture app (disjoint sliding windows): every
+    op danger-flagged, zero residual replays — the batched driver must
+    absorb it all through the vectorized schedule, bit-equal to loop."""
+    from repro.core import FINE_PROTO
+    from repro.core.regc_scale import RegCScaleRuntime
+    from repro.dsm.apps import stream_refetch
+    for W, cache in ((2, 9), (8, 20), (16, 13)):
+        runs = {}
+        for driver in ("loop", "batched"):
+            rt = RegCScaleRuntime(W, page_words=64, protocol=FINE_PROTO,
+                                  prefetch=1, model_mechanism=False,
+                                  cache_pages=cache)
+            stream_refetch(rt, 64 * 64 * W, 3, driver=driver)
+            runs[driver] = rt
+        for f in dataclasses.fields(Traffic):
+            assert (getattr(runs["loop"].traffic, f.name)
+                    == getattr(runs["batched"].traffic, f.name)), (W, f.name)
+        np.testing.assert_array_equal(runs["loop"].clock,
+                                      runs["batched"].clock)
+        assert runs["batched"].stats["danger_vec_ops"] > 0, (W, cache)
+        assert runs["batched"].stats["danger_scalar_ops"] == 0, (W, cache)
+        assert runs["batched"].stats["residual_replays"] == 0, \
+            "disjoint sliding windows must stay on the batched path"
+
+
 def test_fuzz_traces_backends_agree():
     """numpy vs pallas directory backends on a fuzz subset: the packed
     bitmask kernels are integer-exact, so traffic and clocks must be

@@ -8,6 +8,10 @@ from pathlib import Path
 
 import pytest
 
+pytest.importorskip(
+    "jax", reason="jax-dependent suite (subprocess scripts import jax); "
+    "the no-jax CI leg covers the numpy fallbacks")
+
 
 def _run(script: str) -> str:
     env = dict(os.environ)

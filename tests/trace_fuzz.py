@@ -118,6 +118,44 @@ def gen_program(rng, W: int, n_words: int, page_words: int,
     return prog
 
 
+def gen_danger_program(rng, W: int, n_words: int, page_words: int,
+                       cache_pages: int, n_phases: int = 8) -> List[tuple]:
+    """Danger-dense program family: every phase's per-worker window
+    half-overlaps the previous phase's (sliding or rotating-sliding) and
+    is sized against ``cache_pages`` so occupancy crosses the watermark
+    mid-op — the reference's evict-then-refetch interleave that the
+    vectorized refetch replay must reproduce exactly.  Disjoint-block
+    phases keep workers on the batched path (the per-op danger screen);
+    rotating phases add the residual tick-ordered replay on top."""
+    chunk = max(n_words // W, page_words * 2)
+    width = min(max(cache_pages * page_words, 2 * page_words), chunk)
+    ids = np.arange(W, dtype=np.int64)
+    prog: List[tuple] = []
+    pos = 0
+    for ip in range(n_phases):
+        step = (width // 2 if rng.random() < 0.7
+                else int(rng.integers(1, width)))
+        span = max(chunk - width, 1)
+        pos = (pos + step) % span
+        if rng.random() < 0.5:                 # disjoint sliding blocks
+            lo = ids * chunk + pos
+        else:                                  # rotating sliding blocks
+            r = (ids + ip) % W
+            lo = r * chunk + pos
+        hi = np.minimum(lo + width, n_words)
+        lo = np.minimum(lo, hi - 1)
+        reads = [(int(rng.integers(0, 2)), lo, hi)]
+        writes = ([(int(rng.integers(0, 2)), lo.copy(), hi.copy())]
+                  if rng.random() < 0.8 else [])
+        flops = (rng.integers(0, 40, W).astype(np.float64)
+                 if rng.random() < 0.5 else 0.0)
+        prog.append(("phase", reads, writes, flops, 0.0))
+        if rng.random() < 0.35:
+            prog.append(("barrier",))
+    prog.append(("barrier",))
+    return prog
+
+
 def apply_event(rt, ev, gas, driver: str):
     """Execute one program event on any runtime: ``batched``
     (phase_all), ``loop`` (per-worker phase), or ``ref`` (raw
@@ -180,21 +218,47 @@ def trace_params(seed: int) -> Dict:
                 cache_pages=cache_pages, proto=PROTOS[seed % 3])
 
 
+def danger_trace_params(seed: int) -> Dict:
+    """Like ``trace_params`` but the cache is always present and sized
+    against the window width so mid-op eviction is the common case."""
+    rng = np.random.default_rng(10_000 + seed)
+    W = int(rng.integers(2, 5))
+    page_words = int(rng.choice([8, 16, 32]))
+    n_words = page_words * int(rng.integers(16, 48)) * W
+    cache_pages = int(rng.integers(2, 10))
+    return dict(rng=rng, W=W, page_words=page_words, n_words=n_words,
+                cache_pages=cache_pages, proto=PROTOS[seed % 2])
+
+
 def crosscheck(seed: int, *, check_ref: bool = True,
-               backends=("numpy",)) -> Dict[str, int]:
+               backends=("numpy",),
+               family: str = "mixed") -> Dict[str, int]:
     """Run one fuzz trace on every runtime/driver pairing and assert the
     exactness contract.  Returns the batched runtime's path-counter stats
-    (summed over backends) so callers can assert coverage."""
-    p = trace_params(seed)
-    prog = gen_program(p["rng"], p["W"], p["n_words"], p["page_words"])
+    (summed over backends) so callers can assert coverage.
+
+    ``family``: 'mixed' is the general corpus; 'danger' draws from the
+    danger-dense rotating/sliding-window generator and additionally
+    cross-validates the vectorized refetch replay against the scalar
+    page-walk oracle (``danger_mode='scalar'``) — traffic exact, clocks
+    allclose (the schedule groups per-victim-run clock charges the
+    scalar walk applies per page)."""
+    assert family in ("mixed", "danger"), family
+    if family == "danger":
+        p = danger_trace_params(seed)
+        prog = gen_danger_program(p["rng"], p["W"], p["n_words"],
+                                  p["page_words"], p["cache_pages"])
+    else:
+        p = trace_params(seed)
+        prog = gen_program(p["rng"], p["W"], p["n_words"], p["page_words"])
     n_alloc = p["n_words"]
 
-    def make_scale(backend):
+    def make_scale(backend, danger_mode="vec"):
         return RegCScaleRuntime(p["W"], page_words=p["page_words"],
                                 protocol=p["proto"], prefetch=1,
                                 model_mechanism=False,
                                 cache_pages=p["cache_pages"],
-                                backend=backend)
+                                backend=backend, danger_mode=danger_mode)
 
     ref = None
     if check_ref:
@@ -227,6 +291,16 @@ def crosscheck(seed: int, *, check_ref: bool = True,
             np.testing.assert_allclose(runs["batched"].clock, ref.clock,
                                        rtol=1e-9, atol=1e-12,
                                        err_msg=str(ctx))
+        if family == "danger":
+            # scalar page-walk oracle: same trace, per-page replay forced
+            sca = make_scale(backend, danger_mode="scalar")
+            run_program(sca, prog,
+                        [sca.alloc(n_alloc), sca.alloc(n_alloc)], "batched")
+            assert_traffic_equal(sca, runs["batched"], ctx + ("scalar",))
+            np.testing.assert_allclose(runs["batched"].clock, sca.clock,
+                                       rtol=1e-9, atol=1e-12,
+                                       err_msg=f"{ctx} vec-vs-scalar")
+            assert sca.stats["danger_vec_ops"] == 0
         for k, v in runs["batched"].stats.items():
             stats[k] = stats.get(k, 0) + v
     return stats
