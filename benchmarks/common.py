@@ -46,7 +46,19 @@ def danger_fields(rt) -> Dict[str, int]:
     the spill regimes."""
     stats = getattr(rt, "stats", {})
     return {"danger_vec": stats.get("danger_vec_ops", 0),
-            "danger_scalar": stats.get("danger_scalar_ops", 0)}
+            "danger_scalar": stats.get("danger_scalar_ops", 0),
+            "danger_shared": stats.get("danger_shared_ops", 0)}
+
+
+def span_fields(rt) -> Dict[str, int]:
+    """Span-engine path counters for the lock sections: how many span
+    bodies the analytic batched group pass absorbed vs how many fell
+    back to the per-worker serial body.  Recorded per row (and gated by
+    ``benchmarks.compare`` like the danger counters) so the committed
+    results PROVE the pipelined path ran the contended regimes."""
+    stats = getattr(rt, "stats", {})
+    return {"span_vec": stats.get("span_workers_vec", 0),
+            "span_serial": stats.get("span_serial_workers", 0)}
 
 
 class SteadyState:
@@ -141,7 +153,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                 "t_model_s": r.get("t_model_s", r.get("t_iter_s")),
                 "total_bytes": r.get("net_bytes", 0),
                 **{k: v for k, v in r.items()
-                   if k.startswith("tr_") or k.startswith("danger_")}})
+                   if k.startswith("tr_") or k.startswith("danger_")
+                   or k.startswith("span_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

@@ -8,9 +8,9 @@ on any exact-traffic drift.
   ``threshold`` (relative), ignoring sections faster than ``min-wall``
   seconds (pure noise on a busy box); or
 * a point's exact protocol traffic changed — ``total_bytes`` or any
-  ``tr_*`` field both files carry — or its deterministic ``danger_*``
-  path counters did (a spill regime silently flipping from the
-  vectorized refetch schedule to the scalar fallback keeps traffic
+  ``tr_*`` field both files carry — or its deterministic ``danger_*`` /
+  ``span_*`` path counters did (a spill or lock regime silently flipping
+  from the vectorized schedule to a scalar fallback keeps traffic
   identical but is a perf regression).  Traffic is deterministic (the
   runtime's exactness invariant), so a mismatch is a correctness
   regression, not noise, and always fails — spill sections included.
@@ -96,7 +96,8 @@ def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
         # mismatch is a gate failure.
         tfields = ["total_bytes"] + sorted(
             set(f for f in br
-                if f.startswith("tr_") or f.startswith("danger_"))
+                if f.startswith("tr_") or f.startswith("danger_")
+                or f.startswith("span_"))
             & set(nr))
         bad = [f for f in tfields if br.get(f) != nr.get(f)]
         if bad:

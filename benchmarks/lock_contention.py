@@ -1,0 +1,80 @@
+"""Lock contention — the span-engine bench (fig6_lock_contention).
+
+The paper's programmability claim is that consistency regions
+(lock-delimited spans) cost what they touch, not what the machine does to
+serialize them; this section stresses exactly the part of our runtime
+that makes that true at scale: the ``span_all`` pipelined span driver.
+``apps.lock_contention`` runs, per iteration, a bulk ordinary phase (so
+every span pass starts with real flush work to hoist) and two adversarial
+span passes — W/n_locks-deep grant chains on ``n_locks`` disjoint striped
+locks, then a W-deep chain on ONE hot lock.
+
+Both samhita protocol series run at W = 16/64/256 on the selected driver;
+rows carry the exact ``tr_*`` traffic fields (gated field-for-field by
+``benchmarks.compare``) plus the span-engine path counters ``span_vec`` /
+``span_serial`` proving the analytic group path — not the serial fallback
+— absorbed the spans (also gated: a silent flip to the fallback keeps
+traffic identical but is a perf regression).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import (SteadyState, make_rt, print_rows,
+                               span_fields, traffic_fields,
+                               write_bench_json, write_csv)
+from repro.dsm.apps import lock_contention
+
+N_BASE = 1 << 20
+CORES = (16, 64, 256)
+N_LOCKS = 8
+
+
+def contention(iters: int, driver: str, cores=CORES):
+    rows = []
+    for p in cores:
+        for series in ("samhita", "samhita_page"):
+            ss = SteadyState()
+            t0 = time.perf_counter()
+            rt = make_rt(series, p)
+            lock_contention(rt, N_BASE, iters, n_locks=N_LOCKS, sweeps=2,
+                            driver=driver, on_iter=ss)
+            t_wall = time.perf_counter() - t0
+            rows.append({"figure": "fig6_lock_contention", "series": series,
+                         "p": p, "n": N_BASE, "driver": driver,
+                         "t_iter_s": round(ss.per_iter(), 6),
+                         "net_bytes": rt.traffic.total_bytes,
+                         "t_model_s": round(rt.time, 6),
+                         "t_wall_s": round(t_wall, 4),
+                         **traffic_fields(rt), **span_fields(rt)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched",
+                    help="SPMD phase + span driver: per-worker loop or "
+                         "phase_all/span_all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick local subset (W <= 64).  Missing the "
+                         "committed W=256 keys routes the output to "
+                         "*.partial.csv, so the committed artifacts stay "
+                         "untouched")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
+    args = ap.parse_args(argv)
+    rows = contention(args.iters, args.driver,
+                      cores=CORES[:2] if args.smoke else CORES)
+    write_csv("lock_contention" if args.driver == "batched"
+              else f"lock_contention_{args.driver}", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -51,8 +51,9 @@ def main(argv=None):
         return args.sections is None or any(
             s in name or any(s in t for t in tags) for s in args.sections)
 
-    from benchmarks import (common, jacobi, molecular_dynamics,
-                            regc_training, roofline, stream_triad)
+    from benchmarks import (common, jacobi, lock_contention,
+                            molecular_dynamics, regc_training, roofline,
+                            stream_triad)
 
     sections = []
     for d in drivers:
@@ -74,6 +75,15 @@ def main(argv=None):
              f"molecular_dynamics{tag}", False, ("spill",),
              lambda drv=drv, a=md_args: molecular_dynamics.main(
                  a + ["--iters", str(max(4, iters // 2))] + drv)),
+            # a lock-focused run regenerates the exact committed point
+            # set, so its CSVs would clobber the committed artifacts
+            # (identical keys defeat write_csv's partial routing); the
+            # CI bench_lock job redirects them with BENCH_OUT instead,
+            # keeping ALL points under the compare gate
+            (f"Lock contention (span engine) {tag}",
+             f"lock_contention{tag}", False, ("lock",),
+             lambda drv=drv: lock_contention.main(
+                 ["--iters", str(iters)] + drv)),
         ]
     sections += [
         # jax-compile-bound (subprocess trainer), not a protocol section

@@ -72,7 +72,8 @@ class RegionDirectory:
     __slots__ = ("W", "region", "page_lo", "page_hi", "base", "length",
                  "cap", "valid", "dirty", "wprot", "touch", "incache",
                  "shift", "maybe_dirty", "_cov_stale", "_sorted_bases",
-                 "_sorted_ends", "backend", "dirty_lo", "dirty_hi")
+                 "_sorted_ends", "backend", "dirty_lo", "dirty_hi",
+                 "span_lo", "span_hi")
 
     def __init__(self, n_workers: int, region: int, page_lo: int,
                  page_hi: int, *, track_wprot: bool = False,
@@ -96,6 +97,14 @@ class RegionDirectory:
         # cumulative left-extension shift per row: lets LRU-queue entries
         # recorded before a window grew leftwards map to current columns
         self.shift = np.zeros(n_workers, np.int64)
+        # span-touch planes (consistency regions): per-cell word-interval
+        # accumulator [span_lo, span_hi) of the worker's OPEN span — the
+        # vectorized replacement for the per-page ``_Span.touched`` dict.
+        # Untouched cells hold (I64_MAX, I64_MIN); lazily allocated on the
+        # first span write (``ensure_span``) since most regions never see
+        # a consistency region.
+        self.span_lo = None
+        self.span_hi = None
         # conservative per-row bounding interval of possibly-dirty pages
         # (absolute page numbers; empty when lo >= hi).  Widened on ordinary
         # writes, reset on flush; eviction clears cells without narrowing
@@ -127,7 +136,18 @@ class RegionDirectory:
         if self.touch is not None:
             self.touch = np.pad(self.touch, ((0, 0), (0, pad)))
             self.incache = np.pad(self.incache, ((0, 0), (0, pad)))
+        if self.span_lo is not None:
+            self.span_lo = np.pad(self.span_lo, ((0, 0), (0, pad)),
+                                  constant_values=_I64_MAX)
+            self.span_hi = np.pad(self.span_hi, ((0, 0), (0, pad)),
+                                  constant_values=_I64_MIN)
         self.cap = new_cap
+
+    def ensure_span(self):
+        """Allocate the span-touch planes on first use."""
+        if self.span_lo is None:
+            self.span_lo = np.full((self.W, self.cap), _I64_MAX, np.int64)
+            self.span_hi = np.full((self.W, self.cap), _I64_MIN, np.int64)
 
     def ensure(self, w: int, lo: int, hi: int):
         """Grow row w's window to cover absolute pages [lo, hi)."""
@@ -147,7 +167,9 @@ class RegionDirectory:
                 self._grow_cap(n + pad)
             for arr, init in ((self.valid, False), (self.dirty, False),
                               (self.wprot, True), (self.touch, 0),
-                              (self.incache, False)):
+                              (self.incache, False),
+                              (self.span_lo, _I64_MAX),
+                              (self.span_hi, _I64_MIN)):
                 if arr is None:
                     continue
                 row = arr[w]
@@ -262,6 +284,55 @@ class RegionDirectory:
         else:
             self.dirty_lo[rows] = _I64_MAX
             self.dirty_hi[rows] = _I64_MIN
+
+    # ------------------------------------------------------------------
+    # span-touch planes (consistency regions)
+    # ------------------------------------------------------------------
+
+    def span_note(self, w: int, p_lo: int, p_hi: int,
+                  wlo, whi):
+        """Accumulate one span write's per-page word intervals into row
+        w's span planes: cell p gets (min, max)-merged with [wlo[p-p_lo],
+        whi[p-p_lo]) — the vectorized replacement for the reference's
+        per-page ``span.touched`` dict merge.  ``wlo``/``whi`` are scalars
+        (single-page ops, the accumulator steady state) or aligned
+        arrays; the window must already cover [p_lo, p_hi)."""
+        self.ensure_span()
+        if p_hi - p_lo == 1:
+            c = int(p_lo) - int(self.base[w])
+            row_lo, row_hi = self.span_lo[w], self.span_hi[w]
+            lo_s = int(wlo) if np.ndim(wlo) == 0 else int(wlo[0])
+            hi_s = int(whi) if np.ndim(whi) == 0 else int(whi[0])
+            if lo_s < row_lo[c]:
+                row_lo[c] = lo_s
+            if hi_s > row_hi[c]:
+                row_hi[c] = hi_s
+            return
+        s = self.sl(w, p_lo, p_hi)
+        np.minimum(self.span_lo[w, s], wlo, out=self.span_lo[w, s])
+        np.maximum(self.span_hi[w, s], whi, out=self.span_hi[w, s])
+
+    def span_harvest(self, w: int, p_lo: int, p_hi: int):
+        """Collect and reset row w's span-touched cells inside absolute
+        pages [p_lo, p_hi): returns (pages, los, his) with pages ascending
+        — the release-publish payload, replacing
+        ``sorted(span.touched.items())``.  Touched cells are reset to the
+        untouched sentinel so the planes are clean for the next span."""
+        if self.span_lo is None:
+            z = np.zeros(0, np.int64)
+            return z, z, z
+        b = int(self.base[w])
+        s = self.sl(w, p_lo, p_hi)
+        seg_hi = self.span_hi[w, s]
+        cols = np.nonzero(seg_hi != _I64_MIN)[0] + s.start
+        if cols.size == 0:
+            z = np.zeros(0, np.int64)
+            return z, z, z
+        los = self.span_lo[w, cols].copy()
+        his = self.span_hi[w, cols].copy()
+        self.span_lo[w, cols] = _I64_MAX
+        self.span_hi[w, cols] = _I64_MIN
+        return cols + b, los, his
 
     # ------------------------------------------------------------------
     # batched eviction primitives (segment LRU over touch-run spans)
@@ -499,6 +570,48 @@ class IntervalLog:
         self._hi[n:n + k] = his
         self._n = n + k
         self.voff.append(self._n)
+
+    def append_versions(self, pages, los, his, counts):
+        """Append SEVERAL release versions in one reserve+copy: version i
+        of the batch owns the next ``counts[i]`` entries of the flat
+        (pages, los, his) arrays.  One numpy copy + one ``voff`` extend
+        replaces per-release ``append_version`` calls — the span_all
+        pipelined-release path (every worker of a uniform lock group
+        publishes the same interval set, tiled by the caller)."""
+        k = len(pages)
+        assert int(np.sum(counts)) == k, (counts, k)
+        self._reserve(k)
+        n = self._n
+        self._p[n:n + k] = pages
+        self._lo[n:n + k] = los
+        self._hi[n:n + k] = his
+        self._n = n + k
+        self.voff.extend((n + np.cumsum(counts, dtype=np.int64)).tolist())
+
+    def payload_matches(self, v_from: int, v_to: int, pages, los,
+                        his) -> bool:
+        """True iff every version in [v_from, v_to) carries exactly this
+        payload (same pages/los/his, in order) — the span_all uniform
+        group's backlog check.  The caller must already know each
+        version's entry count equals ``len(pages)``."""
+        a, b = self.voff[v_from], self.voff[v_to]
+        k = v_to - v_from
+        n = len(pages)
+        if b - a != k * n:
+            return False
+        return (bool((self._p[a:b].reshape(k, n) == pages).all())
+                and bool((self._lo[a:b].reshape(k, n) == los).all())
+                and bool((self._hi[a:b].reshape(k, n) == his).all()))
+
+    def page_bounds(self, v_from: int, v_to: int):
+        """Bounding (lo, hi) page interval of every notice in versions
+        [v_from, v_to), or None when the slice is empty — the span_all
+        flush-hoist screen's conservative pending-page footprint."""
+        a, b = self.voff[v_from], self.voff[v_to]
+        if a == b:
+            return None
+        seg = self._p[a:b]
+        return int(seg.min()), int(seg.max()) + 1
 
     def pending(self, v_from: int, v_to: int):
         """Coalesced (pages, lo_min, hi_max) over versions [v_from, v_to)."""

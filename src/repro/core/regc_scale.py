@@ -32,8 +32,12 @@ Key representation choices:
 * lock notices are flat, version-segmented numpy interval logs
   (``core.directory.IntervalLog``); acquire/barrier replay is one slice +
   segment-min/max coalesce per (lock, worker);
-* span-touched pages stay in small dicts (critical sections touch few
-  pages — that is the paper's whole point).
+* consistency-region spans are plane-tracked (``span_lo``/``span_hi``
+  word-interval planes; release harvests and publishes one batched log
+  append), and whole span PASSES batch through ``span_all``: grants stay
+  serialized — they are the lock — while each worker's release-flush and
+  the next holder's acquire-replay pipeline as plane ops
+  (``_span_group_vec``); only nested spans keep the per-page dict.
 
 Beyond the reference runtime, this engine also models the paper's two
 store-tracking *mechanisms* (§IV):
@@ -66,11 +70,20 @@ FAULT_S = 4.0e-6
 
 
 class _Span:
-    __slots__ = ("lock", "touched")
+    __slots__ = ("lock", "touched", "plane", "bounds")
 
-    def __init__(self, lock):
+    def __init__(self, lock, plane: bool = False):
         self.lock = lock
-        self.touched: Dict[int, Tuple[int, int]] = {}
+        self.plane = plane
+        # A depth-1 (outermost) span tracks its touches in the directory's
+        # span planes (vectorized interval merge, no per-page dict);
+        # ``bounds`` records the touched page bounding interval per region
+        # for the release harvest.  Nested (inner) spans keep the
+        # reference's per-page dict — at most one plane-tracked span is
+        # open per worker, so the planes never mix two spans' touches.
+        self.touched: Optional[Dict[int, Tuple[int, int]]] = (
+            None if plane else {})
+        self.bounds: Optional[Dict[int, list]] = {} if plane else None
 
 
 class _Lock:
@@ -152,12 +165,19 @@ class RegCScaleRuntime:
         self._reduction_results: Dict[str, float] = {}
         self._tick = 0
         self._rows_all = np.arange(n_workers)
+        # when a dict, _danger_replay records its eviction schedule into
+        # it (the shared-schedule leader run — see _danger_shared)
+        self._danger_rec: Optional[dict] = None
         # phase_all path counters (which engine paths ran; the trace-fuzz
         # suite asserts the batched-eviction and residual paths are
         # actually exercised rather than silently bypassed)
         self.stats = {"batched_phases": 0, "evict_batch_rounds": 0,
                       "danger_ops": 0, "residual_replays": 0,
-                      "danger_vec_ops": 0, "danger_scalar_ops": 0}
+                      "danger_vec_ops": 0, "danger_scalar_ops": 0,
+                      "danger_shared_ops": 0,
+                      "span_all_calls": 0, "span_serial_calls": 0,
+                      "span_groups_vec": 0, "span_workers_vec": 0,
+                      "span_serial_workers": 0}
 
     # ------------------------------------------------------------------
     def alloc(self, n_elems: int) -> GasArray:
@@ -422,6 +442,7 @@ class RegCScaleRuntime:
         touch_front = 0
         qi = 0                            # victim stream cursor: run index
         roff = int(q[0][4]) if q else 0   # ... and scan offset within it
+        rec = self._danger_rec            # shared-schedule leader run
 
         def consume(k: int) -> int:
             """Consume k victims from the pre-op stream in tick order,
@@ -442,6 +463,9 @@ class RegCScaleRuntime:
                 if run[6] and not in_op:
                     # pristine, outside the op: a contiguous live prefix
                     take = min(k, nr - roff)
+                    if rec is not None:
+                        rec["events"].append((qi, np.arange(roff,
+                                                            roff + take)))
                     self._evict_now(w, dr, np.arange(a, a + take))
                     k -= take
                     roff += take
@@ -458,6 +482,8 @@ class RegCScaleRuntime:
                 if tot <= k:
                     vc = np.flatnonzero(live) + a
                     if vc.size:
+                        if rec is not None:
+                            rec["events"].append((qi, vc - cc0))
                         self._evict_now(w, dr, vc)
                         if in_op:
                             ej = vc - c0
@@ -468,6 +494,8 @@ class RegCScaleRuntime:
                     continue
                 take_mask, cut = dr.take_upto_row(live, k)
                 vc = np.flatnonzero(take_mask) + a
+                if rec is not None:
+                    rec["events"].append((qi, vc - cc0))
                 self._evict_now(w, dr, vc)
                 if in_op:
                     ej = vc - c0
@@ -518,6 +546,9 @@ class RegCScaleRuntime:
         else:
             d.dirty[w, s] = dirty0 & ~evicted_pre
         assert own_done < n, (own_done, n)
+        if rec is not None:
+            rec.update(qi=qi, roff=roff, evicted_pre=evicted_pre,
+                       enters=enters, own_done=own_done, n_miss=n_miss)
         if own_done:
             self._evict_now(w, d, np.arange(c0, c0 + own_done))
 
@@ -538,6 +569,244 @@ class RegCScaleRuntime:
         assert int(self.resident[w]) == min(R0 + enters, C), (
             self.resident[w], R0, enters, C)
         return n_miss
+
+    _DANGER_SHARE_CELLS = 1 << 18
+
+    def _danger_shared(self, rows: np.ndarray, d: RegionDirectory,
+                       region: int, ga, lo: np.ndarray, hi: np.ndarray,
+                       p_lo: np.ndarray, p_hi: np.ndarray, *,
+                       is_write: bool) -> bool:
+        """Dedupe lockstep-uniform danger workers into ONE shared
+        evict-then-refetch schedule (the rotating-spill steady state:
+        every flagged worker's cache state is the same picture shifted to
+        its own window).
+
+        Soundness is checked, not assumed: the workers must be
+        *isomorphic* — same op geometry, same pre-op valid/incache/dirty
+        (and wprot) patterns over the op range, same touch-run boundary
+        structure, and structurally identical LRU queues (same run
+        lengths/offsets/pristine flags, uniform run-to-op offsets in the
+        op's region, identical live and dirty patterns over every run the
+        schedule could consume — walked until the guaranteed victim
+        supply covers the op's maximal demand).  When the check fails the
+        caller falls back to per-worker replays; when it passes, the
+        leader runs the ordinary ``_danger_replay`` once with its
+        eviction schedule recorded, and every other row applies the
+        recorded schedule as batched plane ops with the per-worker charge
+        sequence replicated term for term — bit-equal to having replayed
+        each worker.  ``stats['danger_shared_ops']`` counts the absorbed
+        ops."""
+        R = int(rows.size)
+        w0 = int(rows[0])
+        pw = self.page_words
+        L = p_hi[rows] - p_lo[rows]
+        n = int(L[0])
+        if not (L == n).all() or n == 0:
+            return False
+        if is_write:
+            # uniform page phase => uniform partial-page fetch mask
+            if (not (lo[rows] % pw == int(lo[w0]) % pw).all()
+                    or not (hi[rows] % pw == int(hi[w0]) % pw).all()
+                    or not (hi[rows] - lo[rows]
+                            == int(hi[w0]) - int(lo[w0])).all()):
+                return False
+        if not (self.resident[rows] == self.resident[w0]).all():
+            return False
+        qs = [self._lru_q[int(w)] for w in rows]
+        qlen = len(qs[0])
+        if any(len(q) != qlen for q in qs[1:]) or qlen == 0:
+            return False
+        if not (self._q_degraded[rows] == self._q_degraded[w0]).all():
+            return False
+        d.ensure_rows(p_lo[rows], p_hi[rows], rows)
+        c0 = (p_lo[rows] - d.base[rows]).astype(np.int64)
+        ri = rows[:, None]
+        colmat = c0[:, None] + np.arange(n)[None, :]
+        inc0 = d.incache[ri, colmat]
+        val0 = d.valid[ri, colmat]
+        dir0 = d.dirty[ri, colmat]
+        if ((inc0 != inc0[0]).any() or (val0 != val0[0]).any()
+                or (dir0 != dir0[0]).any()):
+            return False
+        if n > 1:
+            t0 = d.touch[ri, colmat]
+            if ((np.diff(t0, axis=1) != 0)
+                    != (np.diff(t0[0]) != 0)[None, :]).any():
+                return False
+        wp_faults = 0
+        if self._track_wprot:
+            wp0 = d.wprot[ri, colmat]
+            if (wp0 != wp0[0]).any():
+                return False
+            wp_faults = int(wp0[0].sum())
+
+        # --- queue walk: verify every run the schedule could consume.
+        # The op demands at most n victims; a run's GUARANTEED supply is
+        # its live cells outside the op range (in-op cells may go stale
+        # first), so once the cumulative guaranteed supply reaches n the
+        # schedule provably never looks further.
+        need = n
+        cum = 0
+        cells = n * R
+        run_info = []               # per run: (region, members' cc0)
+        for j in range(qlen):
+            metas = [q[j] for q in qs]
+            m0 = metas[0]
+            rg, nr, off, pris = m0[1], m0[3], m0[4], m0[6]
+            for mm in metas[1:]:
+                if (mm[1] != rg or mm[3] != nr or mm[4] != off
+                        or mm[6] != pris):
+                    return False
+            dr = self.dirs[rg]
+            cc0 = np.array(
+                [metas[i][2] + (int(dr.shift[rows[i]]) - metas[i][5])
+                 for i in range(R)], np.int64)
+            if rg == region and not ((cc0 - c0) == (cc0[0] - c0[0])).all():
+                return False
+            run_info.append((rg, cc0))
+            ln = nr - off
+            if ln <= 0:
+                continue
+            cells += ln * R
+            if cells > self._DANGER_SHARE_CELLS:
+                return False
+            cm = cc0[:, None] + np.arange(off, nr)[None, :]
+            dm = dr.dirty[ri, cm]
+            if (dm != dm[0]).any():
+                return False
+            if rg == region:
+                cols0 = cc0[0] + np.arange(off, nr)
+                outside = (cols0 < c0[0]) | (cols0 >= c0[0] + n)
+            else:
+                outside = None
+            if pris:
+                cum += int(outside.sum()) if outside is not None else ln
+            else:
+                tks = np.array([metas[i][0] for i in range(R)], np.int64)
+                lv = (dr.touch[ri, cm] == tks[:, None]) & dr.incache[ri, cm]
+                if (lv != lv[0]).any():
+                    return False
+                cum += int((lv[0] & outside).sum() if outside is not None
+                           else lv[0].sum())
+            if cum >= need:
+                break
+
+        # --- leader runs the ordinary replay, recording the schedule
+        self._danger_rec = rec = {"events": []}
+        try:
+            if is_write:
+                self.write(w0, ga, int(lo[w0]), int(hi[w0]))
+            else:
+                self.read(w0, ga, int(lo[w0]), int(hi[w0]))
+        finally:
+            self._danger_rec = None
+        self._danger_apply(rows, d, region, lo, hi, p_lo, p_hi, rec,
+                           run_info, c0, colmat, dir0[0],
+                           wp_faults, is_write=is_write)
+        # members resolve vectorized too (the leader's read/write call
+        # counted itself): danger_vec semantics — and the committed
+        # per-row bench counters — are unchanged by sharing
+        self.stats["danger_vec_ops"] += R - 1
+        self.stats["danger_shared_ops"] += R
+        return True
+
+    def _danger_apply(self, rows: np.ndarray, d: RegionDirectory,
+                      region: int, lo, hi, p_lo, p_hi, rec: dict,
+                      run_info, c0: np.ndarray, colmat: np.ndarray,
+                      dirty0: np.ndarray, wp_faults: int, *,
+                      is_write: bool):
+        """Apply the leader's recorded schedule to the other isomorphic
+        rows as batched plane ops, replicating the per-worker charge
+        sequence term for term (see _danger_shared)."""
+        m = rows[1:]
+        R = int(m.size)
+        mi = m[:, None]
+        cm_op = colmat[1:]
+        n = int(p_hi[rows[0]] - p_lo[rows[0]])
+        pb = self.page_bytes
+        lat = self.cost.net_latency_s
+        bwd = self.cost.net_bw_Bps
+
+        if is_write:
+            # write()'s pre-danger charges: instrumented stores, then
+            # write faults (wprot cleared over the range)
+            if self.model_mechanism and self.protocol == FINE_PROTO:
+                self.clock[m] += ((int(hi[rows[0]]) - int(lo[rows[0]]))
+                                  * self.instr_s_per_word)
+            if self._track_wprot:
+                self.clock[m] += wp_faults * self.fault_s
+                d.wprot[mi, cm_op] = False
+            d.note_dirty(m, p_lo[m], p_hi[m])
+
+        def evict_cols(dr, cols):
+            dm = dr.dirty[mi, cols]
+            db = int(dm[0].sum())
+            assert (dm.sum(axis=1) == db).all(), "isomorphism violated"
+            if db:
+                r_i, c_i = np.nonzero(dm)
+                dr.dirty[m[r_i], cols[r_i, c_i]] = False
+                self.traffic.writeback_bytes += db * pb * R
+                self.clock[m] += (lat * db + db * pb / bwd)
+                if dr.wprot is not None:
+                    dr.wprot[m[r_i], cols[r_i, c_i]] = True
+                # sharer invalidation is a proven no-op here: shared
+                # danger rows come from the independent set, whose dirty
+                # victims no other worker's reach intersects
+            dr.valid[mi, cols] = False
+            dr.incache[mi, cols] = False
+            self.resident[m] -= cols.shape[1]
+
+        for qi_ev, rel in rec["events"]:
+            rg, cc0 = run_info[qi_ev]
+            evict_cols(self.dirs[rg], cc0[1:][:, None] + rel[None, :])
+
+        # fetch-miss traffic + the op's final plane state
+        n_miss = rec["n_miss"]
+        if n_miss:
+            self.traffic.page_fetches += n_miss * R
+            self.traffic.fetch_bytes += n_miss * pb * R
+        d.valid[mi, cm_op] = True
+        d.incache[mi, cm_op] = True
+        if is_write:
+            d.dirty[mi, cm_op] = True
+            d.maybe_dirty = True
+            for w in m:
+                self._dirty_regions[w].add(region)
+        else:
+            d.dirty[mi, cm_op] = (dirty0 & ~rec["evicted_pre"])[None, :]
+        own_done = rec["own_done"]
+        if own_done:
+            evict_cols(d, cm_op[:, :own_done])
+
+        # queue cleanup + the op's own touch run, per row (deques are
+        # per-row Python state; O(consumed runs) each)
+        qi, roff = rec["qi"], rec["roff"]
+        ticks = np.empty(R, np.int64)
+        for i, w in enumerate(m):
+            q = self._lru_q[w]
+            for _ in range(min(qi, len(q))):
+                q.popleft()
+            if q:
+                if roff >= q[0][3]:
+                    q.popleft()
+                else:
+                    q[0][4] = roff
+            ticks[i] = self._q_append(int(w), region, int(c0[1 + i]), n,
+                                      int(d.shift[w]))
+            if own_done:
+                q[-1][4] = own_done
+        d.touch[mi, cm_op] = ticks[:, None]
+        enters = rec["enters"]
+        self.resident[m] += enters
+        C = int(self.cache_pages)
+        assert (self.resident[m] == min(int(self.resident[rows[0]]), C)
+                ).all(), "isomorphism violated (resident)"
+
+        # the op's fetch messages, once per worker (read/write charge
+        # these after _danger_replay returns)
+        if n_miss:
+            self.clock[m] += self.cost.xfer_s(
+                n_miss * pb, 2 * -(-n_miss // self.fetch_batch))
 
     def _maybe_evict(self, w: int):
         """Watermark-triggered batched eviction: no per-op work unless the
@@ -609,9 +878,10 @@ class RegCScaleRuntime:
             if self._danger(w, n_enter0, n):
                 if (self.danger_mode == "vec" and self.cache_pages >= 1
                         and not in_span):
-                    # spans stay on the scalar walk: critical sections
-                    # touch few pages and need per-page span.touched
-                    # interval merging
+                    # danger-flagged in-span writes keep the exact
+                    # per-page LRU walk (critical sections touch few
+                    # pages; their intervals still land in the span
+                    # planes in one note after the walk)
                     self.stats["danger_vec_ops"] += 1
                     pages = np.arange(p_lo, p_hi)
                     bw_ = (pages - ga.page_lo) * self.page_words
@@ -635,14 +905,21 @@ class RegCScaleRuntime:
                     n_miss += self._touch_page_exact(
                         w, d, p, fetch=(whi - wlo) < self.page_words)
                     if in_span:
-                        old = span.touched.get(p)
-                        span.touched[p] = ((min(wlo, old[0]),
-                                            max(whi, old[1]))
-                                           if old else (wlo, whi))
+                        if not span.plane:
+                            old = span.touched.get(p)
+                            span.touched[p] = ((min(wlo, old[0]),
+                                                max(whi, old[1]))
+                                               if old else (wlo, whi))
                     else:
                         d.dirty[w, p - base] = True
                         d.maybe_dirty = True
                         self._dirty_regions[w].add(region)
+                if in_span and span.plane:
+                    # interval merge is order-insensitive and eviction
+                    # never reads the span planes, so one note after the
+                    # exact per-page walk is equivalent
+                    self._span_note(w, span, d, region, ga, lo, hi,
+                                    p_lo, p_hi)
                 if n_miss:
                     self._net(w, n_miss * self.page_bytes,
                               2 * -(-n_miss // self.fetch_batch))
@@ -674,11 +951,14 @@ class RegCScaleRuntime:
 
         if in_span:
             span = self.spans[w][-1]
-            for p in range(p_lo, p_hi):
-                wlo, whi = ga.word_range_in_page(p, lo, hi)
-                old = span.touched.get(p)
-                span.touched[p] = ((min(wlo, old[0]), max(whi, old[1]))
-                                   if old else (wlo, whi))
+            if span.plane:
+                self._span_note(w, span, d, region, ga, lo, hi, p_lo, p_hi)
+            else:
+                for p in range(p_lo, p_hi):
+                    wlo, whi = ga.word_range_in_page(p, lo, hi)
+                    old = span.touched.get(p)
+                    span.touched[p] = ((min(wlo, old[0]), max(whi, old[1]))
+                                       if old else (wlo, whi))
         else:
             d.dirty[w, s] = True
             d.maybe_dirty = True
@@ -752,10 +1032,10 @@ class RegCScaleRuntime:
             self._invalidate_sharers(w, region, d.base[w] + cols)
         regions.clear()
 
-    def _flush_all_workers(self):
-        """Barrier-time flush of every worker's ordinary-dirty pages, in
-        one batched pass per region that reproduces the sequential
-        flush-order semantics analytically (see DIRECTORY.md):
+    def _flush_all_workers(self, mask: Optional[np.ndarray] = None):
+        """Batched flush of every (masked) worker's ordinary-dirty pages,
+        in one pass per region that reproduces the sequential flush-order
+        semantics analytically (see DIRECTORY.md):
 
         for a page with dirty-worker set D (flushed in worker order) and
         initial valid set V, the sequential per-worker flushes produce
@@ -763,18 +1043,32 @@ class RegCScaleRuntime:
         valid only at d0 when ``|D|==1``.  Pages covered by a single worker
         window contribute nothing (their only possible sharer is their own
         writer), so the gather runs only over multiply-covered pages.
+
+        ``mask`` restricts the flush to a (W,) bool subset of workers —
+        span_all's hoisted flush phase; unmasked workers' dirty state and
+        bounds are left untouched.  ``None`` flushes everyone (barrier).
+        Charge expressions equal the single-worker ``_flush_worker`` term
+        for term, so hoisting a worker's flush out of its acquire keeps
+        clocks bit-equal to the per-worker span loop.
         """
+        mrows = None if mask is None else np.nonzero(mask)[0]
         for d in self.dirs:
             if not d.maybe_dirty:
                 continue
             nD_w = d.dirty_counts()        # bitmask popcount on 'pallas'
+            if mask is not None:
+                rest = int(nD_w[~mask].sum())
+                nD_w = np.where(mask, nD_w, 0)
             total = int(nD_w.sum())
-            d.maybe_dirty = False
-            d.clear_dirty_bounds()
+            d.maybe_dirty = False if mask is None else rest > 0
+            d.clear_dirty_bounds(mrows)
             if total == 0:
                 continue
             if self.protocol == IDEAL_PROTO:
-                d.dirty[:] = False
+                if mask is None:
+                    d.dirty[:] = False
+                else:
+                    d.dirty[mrows] = False
                 continue
             active = np.nonzero(nD_w)[0]
             # per-(worker, region) writeback charge, as in the sequential
@@ -785,7 +1079,10 @@ class RegCScaleRuntime:
                                    + (nD_w[active] * self.page_bytes)
                                    / self.cost.net_bw_Bps)
             if d.wprot is not None:
-                np.logical_or(d.wprot, d.dirty, out=d.wprot)  # re-arm own
+                if mask is None:
+                    np.logical_or(d.wprot, d.dirty, out=d.wprot)  # re-arm own
+                else:
+                    d.wprot[active] |= d.dirty[active]
             # sharer invalidation: only pages under >= 2 worker windows can
             # have sharers, so per-cell work is confined to the (small)
             # halo/global intervals instead of every dirty page
@@ -810,9 +1107,16 @@ class RegCScaleRuntime:
                     w_idx = np.concatenate(w_list)   # ascending worker ==
                     cols = np.concatenate(col_list)  # sequential flush order
                     self._invalidate_shared_dirty(d, w_idx, cols)
-            d.dirty[:] = False
-        for regions in self._dirty_regions:
-            regions.clear()
+            if mask is None:
+                d.dirty[:] = False
+            else:
+                d.dirty[active] = False
+        if mask is None:
+            for regions in self._dirty_regions:
+                regions.clear()
+        else:
+            for w in mrows:
+                self._dirty_regions[w].clear()
 
     def _invalidate_shared_dirty(self, d: RegionDirectory,
                                  w_idx: np.ndarray, cols: np.ndarray):
@@ -859,6 +1163,28 @@ class RegCScaleRuntime:
     # spans + notice replay
     # ------------------------------------------------------------------
 
+    def _span_note(self, w: int, span: _Span, d: RegionDirectory,
+                   region: int, ga, lo: int, hi: int, p_lo: int, p_hi: int):
+        """Record one in-span write's per-page word intervals in the span
+        planes (plane-tracked spans only): the vectorized replacement for
+        the per-page ``span.touched`` dict merge."""
+        b = span.bounds.get(region)
+        if b is None:
+            span.bounds[region] = [p_lo, p_hi]
+        else:
+            if p_lo < b[0]:
+                b[0] = p_lo
+            if p_hi > b[1]:
+                b[1] = p_hi
+        d.ensure_span()
+        if p_hi - p_lo == 1:
+            wlo, whi = ga.word_range_in_page(p_lo, lo, hi)
+            d.span_note(w, p_lo, p_hi, wlo, whi)
+            return
+        bw_ = (np.arange(p_lo, p_hi) - ga.page_lo) * self.page_words
+        d.span_note(w, p_lo, p_hi, np.maximum(lo - bw_, 0),
+                    np.minimum(hi - bw_, self.page_words))
+
     def _replay_invalidate(self, w: int, pages: np.ndarray, rearm: bool):
         """Page-protocol notice replay: invalidate w's valid copies of
         ``pages`` (grouped per region), returning the number invalidated."""
@@ -902,30 +1228,61 @@ class RegCScaleRuntime:
                 self.traffic.invalidations += n_inv
                 self.traffic.control_msgs += int(u.size)
         lk.seen[w] = lk.version
-        self.spans[w].append(_Span(lock_id))
+        self.spans[w].append(_Span(lock_id, plane=not self.spans[w]))
+
+    def _span_harvest(self, w: int, span: _Span):
+        """The release-publish payload of ``span`` — (pages, los, his)
+        ascending by page — from the span planes (plane-tracked spans;
+        cells reset for the next span) or the per-page dict (nested
+        spans).  Region order is page order, so multi-region harvests
+        concatenate already sorted."""
+        if span.plane:
+            parts = [self.dirs[region].span_harvest(w, lo_b, hi_b)
+                     for region, (lo_b, hi_b) in sorted(span.bounds.items())]
+            if not parts:
+                z = np.zeros(0, np.int64)
+                return z, z, z
+            if len(parts) == 1:
+                return parts[0]
+            return tuple(np.concatenate([p[i] for p in parts])
+                         for i in range(3))
+        items = sorted(span.touched.items())
+        return (np.array([p for p, _ in items], np.int64),
+                np.array([iv[0] for _, iv in items], np.int64),
+                np.array([iv[1] for _, iv in items], np.int64))
+
+    def _span_publish(self, w: int, lk: _Lock, pages: np.ndarray,
+                      los: np.ndarray, his: np.ndarray):
+        """Release-time publish: traffic + ONE batched clock charge for
+        the span's coalesced page intervals (the reference charges one
+        message per page; the batch groups them — allclose, and bit-equal
+        across drivers since every release runs this same code), then one
+        log append for the whole version."""
+        n = int(pages.size)
+        if n:
+            if self.protocol == FINE_PROTO:
+                tot = (int((his - los).sum()) * _WORD
+                       + n * (self.page_words // 8))
+                self.traffic.diff_bytes += tot
+            else:
+                tot = n * self.page_bytes
+                self.traffic.writeback_bytes += tot
+            self.clock[w] += (self.cost.net_latency_s * n
+                              + tot / self.cost.net_bw_Bps)
+        lk.log.append_version(pages, los, his)
+        lk.version += 1
+        lk.seen[w] = lk.version
 
     def release(self, w: int, lock_id: int):
         span = self.spans[w].pop()
         assert span.lock == lock_id, "unbalanced lock release"
         lk = self.locks[lock_id]
-        pages, los, his = [], [], []
-        for p, (lo, hi) in sorted(span.touched.items()):
-            if self.protocol == IDEAL_PROTO:
-                continue
-            if self.protocol == FINE_PROTO:
-                nbytes = (hi - lo) * _WORD + self.page_words // 8
-                self.traffic.diff_bytes += nbytes
-            else:
-                nbytes = self.page_bytes
-                self.traffic.writeback_bytes += nbytes
-            self._net(w, nbytes, 1)
-            pages.append(p)
-            los.append(lo)
-            his.append(hi)
         if self.protocol != IDEAL_PROTO:
-            lk.log.append_version(pages, los, his)
-            lk.version += 1
-            lk.seen[w] = lk.version
+            self._span_publish(w, lk, *self._span_harvest(w, span))
+        elif span.plane:
+            # IDEAL publishes nothing, but the planes must reset
+            for region, (lo_b, hi_b) in span.bounds.items():
+                self.dirs[region].span_harvest(w, lo_b, hi_b)
         self._net(w, 64, 1)
         self.traffic.control_msgs += 1
         lk.last_release_time = self.clock[w]
@@ -1091,12 +1448,20 @@ class RegCScaleRuntime:
             self.resident[crows] + n_enter > self.cache_pages)
         if not danger.any():
             return rows
-        self.stats["danger_ops"] += int(danger.sum())
-        for w in crows[danger]:
-            if is_write:
-                self.write(int(w), ga, int(lo[w]), int(hi[w]))
-            else:
-                self.read(int(w), ga, int(lo[w]), int(hi[w]))
+        drows = crows[danger]
+        self.stats["danger_ops"] += int(drows.size)
+        # lockstep-uniform danger workers (the rotating steady state)
+        # share one schedule: the leader replays once, recording, and the
+        # rest apply the recorded schedule as batched plane ops
+        if not (drows.size >= 2 and self.danger_mode == "vec"
+                and self.cache_pages >= 1
+                and self._danger_shared(drows, d, d.region, ga, lo, hi,
+                                        p_lo, p_hi, is_write=is_write)):
+            for w in drows:
+                if is_write:
+                    self.write(int(w), ga, int(lo[w]), int(hi[w]))
+                else:
+                    self.read(int(w), ga, int(lo[w]), int(hi[w]))
         keep = np.ones(rows.size, bool)
         keep[np.nonzero(cand)[0][danger]] = False
         return rows[keep]
@@ -1520,6 +1885,432 @@ class RegCScaleRuntime:
                             for ga, lo, hi in writes],
                     flops=float(flb[w]), mem_bytes=float(mbb[w]),
                     seconds=float(secb[w]), instr_words=float(iwb[w]))
+
+    # ------------------------------------------------------------------
+    # worker-axis batched span driver (span_all)
+    # ------------------------------------------------------------------
+
+    def _span_one(self, w: int, lock_id: int, reads, writes):
+        """One worker's whole consistency region through the per-worker
+        path — the serialized reference body every batched span_all path
+        is proven bit-equal against (and the fallback when spill or
+        flush/span page interactions make batching unsound)."""
+        self.acquire(w, lock_id)
+        for ga, lo, hi in reads:
+            self.read(w, ga, int(lo[w]), int(hi[w]))
+        for ga, lo, hi in writes:
+            self.write(w, ga, int(lo[w]), int(hi[w]))
+        self.release(w, lock_id)
+
+    def _span_flush_safe(self, rows: np.ndarray, locks: np.ndarray,
+                         ranges) -> bool:
+        """May every masked worker's acquire-time ordinary flush hoist to
+        one batched pass BEFORE any span body runs?  Sound iff no flushed
+        dirty page (or its sharer invalidation) can be observed by any
+        span body or notice replay of this pass: the masked workers'
+        conservative dirty bounds must be disjoint from every *span
+        interaction interval* — the declared (prefetch-extended)
+        read/write page ranges plus the pending-notice page bounds of
+        every involved lock.  All intervals are absolute page numbers, so
+        region resolution is unnecessary."""
+        spans_iv = []
+        for region, p_lo, p_hi in ranges:
+            spans_iv.append((int(p_lo[rows].min()), int(p_hi[rows].max())))
+        for lk_id in np.unique(locks[rows]):
+            lk = self.locks.get(int(lk_id))
+            if lk is None:
+                continue
+            grp = rows[locks[rows] == lk_id]
+            v_min = int(lk.seen[grp].min())
+            if v_min >= lk.version:
+                continue
+            pb_iv = lk.log.page_bounds(v_min, lk.version)
+            if pb_iv is not None:
+                spans_iv.append(pb_iv)
+        if not spans_iv:
+            return True
+        for d in self.dirs:
+            dlo, dhi = d.dirty_lo[rows], d.dirty_hi[rows]
+            m = dlo < dhi
+            if not m.any():
+                continue
+            lo, hi = int(dlo[m].min()), int(dhi[m].max())
+            for rlo, rhi in spans_iv:
+                if rlo < hi and rhi > lo:
+                    return False
+        return True
+
+    def _span_group_vec(self, grp: np.ndarray, lock_id: int, reads, writes,
+                        rranges, wranges) -> bool:
+        """Analytic batched pass for one uniform same-lock span group —
+        the pipelined fast path of ``span_all``.
+
+        Grants stay serialized (the release-time chain below is the only
+        true serialization point), but everything *around* the grant
+        pipelines across the group as plane ops: the pending-notice set of
+        the i-th holder is exactly the earlier holders' releases of THIS
+        pass (precondition: every member has replayed the lock's log —
+        ``seen == version`` — the post-barrier steady state), and every
+        release publishes the same declared write intervals, so replay
+        invalidations, fetch misses, write faults and release payloads
+        resolve as (G, pages) matrix ops, one batched log append
+        (``IntervalLog.append_versions``), and a G-step scalar clock chain
+        whose per-worker charge sequence replicates the per-worker path
+        term for term (bit-equal clocks).
+
+        Unsynced members are allowed in ONE analytically tractable shape
+        — the repeated uniform pass (e.g. the second sweep of the same
+        accumulation before any barrier): when every log version a member
+        has not replayed carries exactly THIS pass's payload, its
+        coalesced pending is that payload no matter how far behind it is.
+        Any other backlog, differing per-worker intervals, ops across
+        several regions, or an empty interval returns False (caller falls
+        back to the per-worker serial body).  Eviction inside spans never
+        reaches here — span_all screens it into the full-serial
+        fallback."""
+        lk = self.locks.setdefault(lock_id, _Lock(self.W))
+        w0 = int(grp[0])
+        region0 = -1
+        ops = []          # (ga, lo, hi, p_lo, p_hi, is_write) — uniform
+        for (ga, lo, hi), (region, p_lo, p_hi), is_w in (
+                [(o, r, False) for o, r in zip(reads, rranges)]
+                + [(o, r, True) for o, r in zip(writes, wranges)]):
+            if region0 < 0:
+                region0 = region
+            elif region != region0:
+                return False
+            if (not (lo[grp] == lo[w0]).all()
+                    or not (hi[grp] == hi[w0]).all()):
+                return False
+            if int(hi[w0]) <= int(lo[w0]):
+                return False
+            ops.append((ga, int(lo[w0]), int(hi[w0]),
+                        int(p_lo[w0]), int(p_hi[w0]), is_w))
+
+        G = int(grp.size)
+        IDEAL = self.protocol == IDEAL_PROTO
+        FINE = self.protocol == FINE_PROTO
+        pw = self.page_words
+        pb = self.page_bytes
+        track = self.cache_pages is not None
+        imax = np.iinfo(np.int64).max
+        imin = np.iinfo(np.int64).min
+
+        d = self.dirs[region0] if region0 >= 0 else None
+        if d is not None:
+            u_lo = min(op[3] for op in ops)
+            u_hi = max(op[4] for op in ops)
+            P = u_hi - u_lo
+            full = np.full(G, u_lo, np.int64)
+            d.ensure_rows(full, np.full(G, u_hi, np.int64), grp)
+            colm = (u_lo - d.base[grp])[:, None] + np.arange(P)[None, :]
+            gi = grp[:, None]
+            V = (d.valid[gi, colm]).copy()
+            IC = (d.incache[gi, colm]).copy() if track else None
+            WP = (d.wprot[gi, colm]).copy() if self._track_wprot else None
+
+            # the uniform release payload: per declared-write page, the
+            # (min, max)-coalesced word interval — what each member
+            # publishes and what each later holder replays
+            pend_mask = np.zeros(P, bool)
+            wlo_acc = np.full(P, imax, np.int64)
+            whi_acc = np.full(P, imin, np.int64)
+            for ga, lo, hi, p_lo, p_hi, is_w in ops:
+                if not is_w:
+                    continue
+                sl = slice(p_lo - u_lo, p_hi - u_lo)
+                bw_ = (np.arange(p_lo, p_hi) - ga.page_lo) * pw
+                pend_mask[sl] = True
+                np.minimum(wlo_acc[sl], np.maximum(lo - bw_, 0),
+                           out=wlo_acc[sl])
+                np.maximum(whi_acc[sl], np.minimum(hi - bw_, pw),
+                           out=whi_acc[sl])
+            rel_idx = np.nonzero(pend_mask)[0]
+            rel_pages = rel_idx + u_lo
+            rel_los = wlo_acc[rel_idx]
+            rel_his = whi_acc[rel_idx]
+        else:
+            P = 0
+            rel_pages = rel_los = rel_his = np.zeros(0, np.int64)
+            pend_mask = None
+        npend = int(rel_pages.size)
+        pub_bytes = 0
+        if npend:
+            if FINE:
+                pub_bytes = (int((rel_his - rel_los).sum()) * _WORD
+                             + npend * (pw // 8))
+            else:
+                pub_bytes = npend * pb
+
+        # ---- pending sets: member i replays the earlier i releases of
+        # THIS pass, plus any backlog — tolerated only when the backlog
+        # repeats this very payload (then the coalesced pending IS the
+        # payload, however far behind a member is)
+        v0 = lk.version
+        seen = lk.seen[grp]
+        has_pend = np.ones(G, bool)
+        has_pend[0] = int(seen[0]) < v0
+        v_min = int(seen.min())
+        if v_min < v0:
+            voff = lk.log.voff
+            sizes = np.diff(np.asarray(voff[v_min:v0 + 1], np.int64))
+            if npend == 0 or not (sizes == npend).all():
+                return False
+            if not lk.log.payload_matches(v_min, v0, rel_pages, rel_los,
+                                          rel_his):
+                return False
+
+        # ---- replay effects --------------------------------------------
+        inval = None
+        if npend and not IDEAL and not FINE:
+            hits = V & pend_mask[None, :] & has_pend[:, None]
+            inval = hits.sum(axis=1)
+            n_inv = int(inval.sum())
+            if n_inv:
+                if WP is not None and self.model_mechanism:
+                    WP |= hits
+                V &= ~(has_pend[:, None] & pend_mask[None, :])
+            self.traffic.invalidations += n_inv
+            self.traffic.control_msgs += npend * int(has_pend.sum())
+
+        # ---- op effects, op-major (rows are mutually independent) ------
+        op_miss = []       # per read op: (G,) fetch-miss counts
+        op_faults = []     # per write op: (G,) wprot fault counts
+        op_edges = []      # per write op: (first(G,)|None, last(G,)|None)
+        for ga, lo, hi, p_lo, p_hi, is_w in ops:
+            sl = slice(p_lo - u_lo, p_hi - u_lo)
+            n = p_hi - p_lo
+            if not is_w:
+                miss = ((~V[:, sl]).sum(axis=1) if not IDEAL
+                        else np.zeros(G, np.int64))
+                op_miss.append(miss)
+                V[:, sl] = True
+                if track:
+                    self._span_track_touch(d, grp, gi, colm, IC, region0,
+                                           p_lo, n, sl)
+                tot = int(miss.sum())
+                if tot:
+                    self.traffic.page_fetches += tot
+                    self.traffic.fetch_bytes += tot * pb
+                continue
+            if self._track_wprot:
+                op_faults.append(WP[:, sl].sum(axis=1))
+                WP[:, sl] = False
+            else:
+                op_faults.append(None)
+            first = last = None
+            if not IDEAL:
+                n_words = hi - lo
+                if n == 1:
+                    f_part, l_part = n_words < pw, False
+                else:
+                    f_part = lo % pw != 0
+                    l_part = hi % pw != 0
+                if f_part:
+                    c = p_lo - u_lo
+                    first = (~V[:, c]).astype(np.int64)
+                    V[:, c] = True
+                    if track:
+                        self._span_track_touch(d, grp, gi, colm, IC,
+                                               region0, p_lo, 1,
+                                               slice(c, c + 1))
+                    tot = int(first.sum())
+                    if tot:
+                        self.traffic.page_fetches += tot
+                        self.traffic.fetch_bytes += tot * pb
+                if l_part:
+                    c = p_hi - 1 - u_lo
+                    last = (~V[:, c]).astype(np.int64)
+                    V[:, c] = True
+                    if track:
+                        self._span_track_touch(d, grp, gi, colm, IC,
+                                               region0, p_hi - 1, 1,
+                                               slice(c, c + 1))
+                    tot = int(last.sum())
+                    if tot:
+                        self.traffic.page_fetches += tot
+                        self.traffic.fetch_bytes += tot * pb
+            op_edges.append((first, last))
+            if track:
+                self._span_track_touch(d, grp, gi, colm, IC, region0,
+                                       p_lo, n, sl)
+            V[:, sl] = True
+
+        # ---- commit planes --------------------------------------------
+        if d is not None:
+            d.valid[gi, colm] = V
+            if IC is not None:
+                d.incache[gi, colm] = IC
+            if WP is not None:
+                d.wprot[gi, colm] = WP
+
+        # ---- publish: one batched log append, G versions --------------
+        if not IDEAL:
+            if FINE and npend:
+                self.traffic.diff_bytes += (pub_bytes                # replays
+                                            * int(has_pend.sum()))
+            if npend:
+                if FINE:
+                    self.traffic.diff_bytes += pub_bytes * G    # releases
+                else:
+                    self.traffic.writeback_bytes += pub_bytes * G
+            lk.log.append_versions(
+                np.tile(rel_pages, G), np.tile(rel_los, G),
+                np.tile(rel_his, G), np.full(G, npend, np.int64))
+            lk.version = v0 + G
+            lk.seen[grp] = v0 + np.arange(1, G + 1)
+        self.traffic.control_msgs += 3 * G          # acquire 2 + release 1
+
+        # ---- the grant chain: the only serialized part ----------------
+        # per-worker charge sequence replicates the per-worker path term
+        # for term (same scalar expressions, same order), so clocks stay
+        # bit-equal to the span loop
+        xfer = self.cost.xfer_s
+        lat = self.cost.net_latency_s
+        bw = self.cost.net_bw_Bps
+        fb = self.fetch_batch
+        ctrl2 = xfer(64, 2)
+        ctrl1 = xfer(64, 1)
+        t_rel = lk.last_release_time
+        for i in range(G):
+            w = int(grp[i])
+            c = float(self.clock[w])
+            if not IDEAL:
+                c += ctrl2
+            c = max(c, t_rel)
+            if has_pend[i] and npend and not IDEAL and FINE:
+                c += lat * npend + pub_bytes / bw
+            ri = wi = 0
+            for ga, lo, hi, p_lo, p_hi, is_w in ops:
+                if not is_w:
+                    m = int(op_miss[ri][i])
+                    ri += 1
+                    if m and not IDEAL:
+                        c += xfer(m * pb, 2 * -(-m // fb))
+                    continue
+                if self.model_mechanism and FINE:
+                    c += (hi - lo) * self.instr_s_per_word
+                if op_faults[wi] is not None:
+                    c += int(op_faults[wi][i]) * self.fault_s
+                first, last = op_edges[wi]
+                wi += 1
+                if first is not None and first[i]:
+                    c += xfer(pb, 2)
+                if last is not None and last[i]:
+                    c += xfer(pb, 2)
+            if not IDEAL and npend:
+                c += lat * npend + pub_bytes / bw
+            if not IDEAL:
+                c += ctrl1
+            self.clock[w] = c
+            t_rel = c
+        lk.last_release_time = t_rel
+        self.stats["span_groups_vec"] += 1
+        self.stats["span_workers_vec"] += G
+        return True
+
+    def _span_track_touch(self, d: RegionDirectory, grp, gi, colm, IC,
+                          region: int, p_lo: int, n: int, sl: slice):
+        """LRU/touch bookkeeping of one uniform group op (cache runs
+        only): one touch run per worker in the per-worker path's order,
+        cache-slot entries counted off the gathered occupancy matrix.
+        ``sl`` addresses [p_lo, p_lo+n) in the group's U-window columns.
+        Eviction is impossible here (span_all screens it out), so the
+        watermark never trips."""
+        ticks = np.empty(grp.size, np.int64)
+        for i, w in enumerate(grp):
+            ticks[i] = self._q_append(int(w), region,
+                                      int(p_lo - d.base[w]), n,
+                                      int(d.shift[w]))
+        d.touch[gi, colm[:, sl]] = ticks[:, None]
+        enters = (~IC[:, sl]).sum(axis=1)
+        IC[:, sl] = True
+        self.resident[grp] += enters
+
+    def span_all(self, w_mask=None, lock_ids=0, reads=(), writes=()):
+        """One consistency-region pass for many workers in a single call.
+
+        Equivalent — traffic field-for-field, clocks bit-equal — to the
+        per-worker span loop::
+
+            for w in <masked workers, ascending>:
+                with rt.span(w, lock_ids[w]):
+                    for ga, lo, hi in reads:  rt.read(w, ga, lo[w], hi[w])
+                    for ga, lo, hi in writes: rt.write(w, ga, lo[w], hi[w])
+
+        ``w_mask`` is a (W,) bool mask (None = all workers); ``lock_ids``
+        scalar or (W,); ``reads``/``writes`` as in ``phase_all``.
+
+        Lock grants are the only true serialization point, and they stay
+        serialized (the release-time chain).  Everything around them
+        pipelines:
+
+        * every masked worker's acquire-time ordinary flush hoists into
+          ONE batched sequential-flush pass (``_flush_all_workers`` over
+          the mask) when the flushed dirty bounds provably cannot touch
+          any span page or pending notice (``_span_flush_safe``);
+        * workers sharing a lock form a *grant group*; uniform groups
+          (same declared intervals, members synced to the lock's log)
+          resolve analytically as plane ops (``_span_group_vec``) — the
+          i-th holder's replay set is exactly the earlier holders'
+          releases of this pass;
+        * distinct locks' groups are mutually independent (span bodies
+          touch only their own directory rows once eviction is excluded),
+          so groups run one after another without interleaving cost.
+
+        Falls back — exactly, never approximately — to the per-worker
+        body for non-uniform groups, and to the fully serial worker-order
+        loop when a span could evict (capacity pressure inside spans) or
+        when flushed pages and span/notice pages may interact."""
+        assert not any(self.spans), "span_all must run outside spans"
+        W = self.W
+        if w_mask is None:
+            rows = self._rows_all
+        else:
+            w_mask = np.asarray(w_mask)
+            rows = (np.nonzero(w_mask)[0] if w_mask.dtype == bool
+                    else np.unique(np.asarray(w_mask, np.int64)))
+        locks = self._w_arr(lock_ids)
+        reads = [(ga, self._w_arr(lo), self._w_arr(hi))
+                 for ga, lo, hi in reads]
+        writes = [(ga, self._w_arr(lo), self._w_arr(hi))
+                  for ga, lo, hi in writes]
+        self.stats["span_all_calls"] += 1
+        if rows.size == 0:
+            return
+        rranges = [self._page_range_all(ga, lo, hi, prefetch=True)
+                   for ga, lo, hi in reads]
+        wranges = [self._page_range_all(ga, lo, hi, prefetch=False)
+                   for ga, lo, hi in writes]
+        serial = False
+        if self.cache_pages is not None:
+            # any possible in-span eviction (even the bookkeeping-only
+            # IDEAL kind) serializes the whole pass: an eviction can
+            # write back into another worker's reach and the LRU queue
+            # walk is inherently tick-ordered
+            ub = self.resident.copy()
+            for region, p_lo, p_hi in rranges + wranges:
+                ub += p_hi - p_lo
+            serial = bool((ub[rows] > self.cache_pages).any())
+        if not serial and self.protocol != IDEAL_PROTO:
+            serial = not self._span_flush_safe(rows, locks,
+                                               rranges + wranges)
+        if serial:
+            self.stats["span_serial_calls"] += 1
+            self.stats["span_serial_workers"] += int(rows.size)
+            for w in rows:
+                self._span_one(int(w), int(locks[w]), reads, writes)
+            return
+        mask = np.zeros(W, bool)
+        mask[rows] = True
+        self._flush_all_workers(mask)
+        for lk_id in np.unique(locks[rows]):
+            grp = rows[locks[rows] == int(lk_id)]
+            if not self._span_group_vec(grp, int(lk_id), reads, writes,
+                                        rranges, wranges):
+                self.stats["span_serial_workers"] += int(grp.size)
+                for w in grp:
+                    self._span_one(int(w), int(lk_id), reads, writes)
 
     # ------------------------------------------------------------------
     def reduce(self, w: int, name: str, value: float, op: str = "sum"):

@@ -76,6 +76,42 @@ def _phase_driver(rt, driver: str = "auto"):
     return loop
 
 
+def _span_driver(rt, driver: str = "auto"):
+    """Return ``span_phase(lock_ids, reads=..., writes=..., w_mask=None)``
+    executing one whole consistency-region pass: every masked worker
+    acquires its lock, runs the declared interval ops inside the span,
+    and releases.  ``batched`` drives ``rt.span_all`` (grant order
+    serialized, flush+notice pipelined); ``loop`` — and any runtime
+    without span_all, e.g. the reference — runs the per-worker span loop
+    in worker order.  The two are bit-exact against each other (the
+    span_all contract, lockstep-checked by the trace-fuzz suite)."""
+    assert driver in ("auto", "batched", "loop"), driver
+    batched = getattr(rt, "span_all", None)
+    if driver == "auto":
+        driver = "batched" if batched is not None else "loop"
+    if driver == "batched":
+        assert batched is not None, "runtime has no span_all (use loop)"
+
+        def span_batched(lock_ids, reads=(), writes=(), w_mask=None):
+            batched(w_mask, lock_ids, reads=reads, writes=writes)
+        return span_batched
+
+    W = rt.W
+
+    def span_loop(lock_ids, reads=(), writes=(), w_mask=None):
+        locks = np.broadcast_to(np.asarray(lock_ids, np.int64), (W,))
+        for w in range(W):
+            if w_mask is not None and not w_mask[w]:
+                continue
+            rt.acquire(w, int(locks[w]))
+            for ga, lo, hi in reads:
+                rt.read(w, ga, int(lo[w]), int(hi[w]))
+            for ga, lo, hi in writes:
+                rt.write(w, ga, int(lo[w]), int(hi[w]))
+            rt.release(w, int(locks[w]))
+    return span_loop
+
+
 def _reduce_all(rt, name: str, value: float = 1.0):
     """Per-worker reduction contribution, batched when the runtime offers
     ``reduce_all`` (identical combine either way)."""
@@ -224,6 +260,7 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
     zero = np.zeros(W, np.int64)
     one = np.ones(W, np.int64)
     phase = _phase_driver(rt, driver)
+    span_phase = _span_driver(rt, driver)
 
     for it in range(iters):
         # phase 1: copy own block u -> uold
@@ -239,10 +276,8 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
               writes=((u, lo_b, hi_b),),
               flops=50.0 * pts, mem_bytes=4.0 * 4 * pts)
         if mode == "lock":
-            for w in range(W):
-                with rt.span(w, RES_LOCK):
-                    rt.read(w, res, 0, 1)
-                    rt.write(w, res, 0, 1)
+            span_phase(RES_LOCK, reads=((res, zero, one),),
+                       writes=((res, zero, one),))
         else:
             _reduce_all(rt, "residual")
         rt.barrier()
@@ -288,8 +323,10 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
     lo_w, hi_w = p0 * ndim, p1 * ndim        # own word blocks
     inter = (p1 - p0) * n_particles
     zero = np.zeros(W, np.int64)
+    two = np.full(W, 2, np.int64)
     all_w = np.full(W, nw, np.int64)
     phase = _phase_driver(rt, driver)
+    span_phase = _span_driver(rt, driver)
 
     for it in range(iters):
         # phase A: forces + energies.  ~18 flops + sqrt + pow per pair
@@ -303,10 +340,8 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
               mem_bytes=4.0 * (nw + 2.0 * (hi_w - lo_w)),
               instr_words=3.0 * inter)
         if mode == "lock":
-            for w in range(W):
-                with rt.span(w, ENERGY_LOCK):
-                    rt.read(w, energy, 0, 2)
-                    rt.write(w, energy, 0, 2)
+            span_phase(ENERGY_LOCK, reads=((energy, zero, two),),
+                       writes=((energy, zero, two),))
         else:
             _reduce_all(rt, "potential")
             _reduce_all(rt, "kinetic")
@@ -326,3 +361,59 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
 
 def md_flops_per_iter(n_particles: int) -> float:
     return 60.0 * n_particles * n_particles
+
+
+# ---------------------------------------------------------------------------
+# Lock contention (span-engine adversary: hot lock + disjoint lock striping)
+# ---------------------------------------------------------------------------
+
+
+def lock_contention(rt, n: int, iters: int, *, n_locks: int = 8,
+                    sweeps: int = 1, driver: str = "auto",
+                    on_iter: Optional[Callable] = None):
+    """Adversarial consistency-region workload for the span engine.
+
+    Each iteration runs one bulk ordinary phase (read+write of the
+    worker's own block — so every span pass starts with real flush work
+    to pipeline), then ``sweeps`` x two span passes:
+
+    * **striped** — worker w serializes on lock ``w % n_locks``,
+      accumulating into that lock's private page: ``n_locks`` independent
+      grant chains of W/n_locks holders each, the regime where distinct
+      locks' flush+notice work can fully pipeline;
+    * **hot** — every worker serializes through ONE global lock updating
+      one shared accumulator pair: the worst-case grant chain, where
+      only the per-holder work around the grant can batch.
+
+    Both passes are uniform per lock group, so the batched driver's
+    analytic group path (``span_all``/``_span_group_vec``) must absorb
+    them entirely; ``stats['span_groups_vec']`` counts it.  Bit-exact
+    across drivers, like every app here."""
+    assert n_locks >= 1
+    W = rt.W
+    pw = rt.page_words
+    A = rt.alloc(n)
+    acc = rt.alloc(n_locks * pw)       # one private page per striped lock
+    hot = rt.alloc(2)                  # the global accumulator pair
+    ids = np.arange(W, dtype=np.int64)
+    lo, hi = _blocks(n, W)
+    stripe = (ids % n_locks).astype(np.int64)
+    s_lo = stripe * pw
+    s_hi = s_lo + 2
+    zero = np.zeros(W, np.int64)
+    two = np.full(W, 2, np.int64)
+    hot_lock = n_locks                 # distinct from every striped lock
+    phase = _phase_driver(rt, driver)
+    span_phase = _span_driver(rt, driver)
+    for it in range(iters):
+        phase(reads=((A, lo, hi),), writes=((A, lo, hi),),
+              flops=4.0 * (hi - lo), mem_bytes=2.0 * 4 * (hi - lo))
+        for _ in range(sweeps):
+            span_phase(stripe, reads=((acc, s_lo, s_hi),),
+                       writes=((acc, s_lo, s_hi),))
+            span_phase(hot_lock, reads=((hot, zero, two),),
+                       writes=((hot, zero, two),))
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt

@@ -90,6 +90,57 @@ def test_interval_log_segment_minmax():
     assert log.pending(3, 3)[0].size == 0
 
 
+def test_span_planes_note_harvest_roundtrip():
+    d = RegionDirectory(3, 0, 0, 100)
+    d.ensure(1, 10, 20)
+    # scalar single-page merges + a vector note, like in-span writes
+    d.span_note(1, 12, 13, 5, 9)
+    d.span_note(1, 12, 13, 2, 7)             # (min, max)-merge: (2, 9)
+    d.span_note(1, 14, 17, np.array([0, 3, 1]), np.array([8, 6, 4]))
+    pages, los, his = d.span_harvest(1, 10, 20)
+    assert pages.tolist() == [12, 14, 15, 16]
+    assert los.tolist() == [2, 0, 3, 1]
+    assert his.tolist() == [9, 8, 6, 4]
+    # harvest resets: a second harvest over the same bounds is empty
+    assert d.span_harvest(1, 10, 20)[0].size == 0
+    # other rows untouched
+    assert d.span_harvest(0, 10, 20)[0].size == 0
+
+
+def test_span_planes_survive_window_growth():
+    d = RegionDirectory(2, 0, 0, 100)
+    d.ensure(0, 10, 14)
+    d.span_note(0, 11, 12, 1, 3)
+    d.ensure(0, 4, 30)               # left extension + cap growth
+    d.span_note(0, 25, 26, 0, 2)
+    pages, los, his = d.span_harvest(0, 4, 30)
+    assert pages.tolist() == [11, 25]
+    assert los.tolist() == [1, 0] and his.tolist() == [3, 2]
+
+
+def test_interval_log_append_versions_batched():
+    a, b = IntervalLog(), IntervalLog()
+    payload = (np.array([3, 7], np.int64), np.array([1, 0], np.int64),
+               np.array([4, 8], np.int64))
+    for _ in range(3):
+        a.append_version(*payload)
+    a.append_version([], [], [])
+    b.append_versions(np.tile(payload[0], 3), np.tile(payload[1], 3),
+                      np.tile(payload[2], 3), np.array([2, 2, 2], np.int64))
+    b.append_versions(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                      np.zeros(0, np.int64), np.array([0], np.int64))
+    assert a.voff == b.voff
+    for v0 in range(4):
+        for v1 in range(v0, 5):
+            ua, la, ha = a.pending(v0, v1)
+            ub, lb, hb = b.pending(v0, v1)
+            np.testing.assert_array_equal(ua, ub)
+            np.testing.assert_array_equal(la, lb)
+            np.testing.assert_array_equal(ha, hb)
+    assert a.page_bounds(0, 3) == (3, 8) == b.page_bounds(0, 3)
+    assert a.page_bounds(3, 4) is None
+
+
 # ---------------------------------------------------------------------------
 # bitmask protocol-sweep kernels: packed uint32 planes vs boolean oracle
 # ---------------------------------------------------------------------------

@@ -494,7 +494,76 @@ def test_phase_all_rejects_open_spans():
     rt.acquire(0, 0)
     with pytest.raises(AssertionError):
         rt.phase_all(reads=[(ga, 0, 64)])
+    with pytest.raises(AssertionError):
+        rt.span_all(None, 1, reads=[(ga, 0, 64)])
     rt.release(0, 0)
+
+
+@pytest.mark.parametrize("W", W_SWEEP)
+@pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO])
+def test_span_all_matches_span_loop(W, proto):
+    """span_all vs the per-worker span loop on hot + striped + masked
+    lock passes interleaved with dirty-producing bulk phases: traffic
+    field-for-field identical, clocks bit-equal — checked after EVERY
+    event (barriers would mask per-worker misattribution)."""
+    pw = 64
+    n = pw * 8 * W
+    ids = np.arange(W, dtype=np.int64)
+    lo_b, hi_b = ids * pw * 8, (ids + 1) * pw * 8
+    stripe = (ids % max(2, W // 4)).astype(np.int64)
+    s_lo, s_hi = stripe * pw, stripe * pw + 3
+    zero, two = np.zeros(W, np.int64), np.full(W, 2, np.int64)
+    odd = (ids % 2 == 1)
+    if not odd.any():
+        odd[0] = True
+    rts, gas = {}, {}
+    for driver in ("loop", "batched"):
+        rt = RegCScaleRuntime(W, page_words=pw, protocol=proto, prefetch=1,
+                              model_mechanism=True)
+        rts[driver] = rt
+        gas[driver] = (rt.alloc(n), rt.alloc(pw * W), rt.alloc(2))
+
+    def span_pass(driver, locks, ga_i, lo, hi, mask=None):
+        rt = rts[driver]
+        acc = gas[driver][ga_i]
+        if driver == "batched":
+            rt.span_all(mask, locks, reads=[(acc, lo, hi)],
+                        writes=[(acc, lo, hi)])
+            return
+        locks = np.broadcast_to(np.asarray(locks, np.int64), (W,))
+        for w in range(W):
+            if mask is not None and not mask[w]:
+                continue
+            rt.acquire(w, int(locks[w]))
+            rt.read(w, acc, int(lo[w]), int(hi[w]))
+            rt.write(w, acc, int(lo[w]), int(hi[w]))
+            rt.release(w, int(locks[w]))
+
+    for it in range(3):
+        for driver, rt in rts.items():
+            A = gas[driver][0]
+            rt.phase_all(reads=[(A, lo_b, hi_b)], writes=[(A, lo_b, hi_b)]) \
+                if driver == "batched" else [
+                rt.phase(w, reads=[(A, int(lo_b[w]), int(hi_b[w]))],
+                         writes=[(A, int(lo_b[w]), int(hi_b[w]))])
+                for w in range(W)]
+        for ev in (("hot",), ("striped",), ("masked",)):
+            for driver in ("loop", "batched"):
+                if ev[0] == "hot":
+                    span_pass(driver, 90, 2, zero, two)
+                elif ev[0] == "striped":
+                    span_pass(driver, stripe, 1, s_lo, s_hi)
+                else:
+                    span_pass(driver, 91, 2, zero, two, mask=odd)
+            np.testing.assert_allclose(
+                rts["batched"].clock, rts["loop"].clock, rtol=0, atol=0,
+                err_msg=f"{(W, proto, it)} {ev[0]}")
+        for rt in rts.values():
+            rt.barrier()
+    _assert_drivers_equal(rts["loop"], rts["batched"], (W, proto))
+    assert rts["batched"].stats["span_groups_vec"] > 0
+    assert rts["batched"].stats["span_serial_workers"] == 0, \
+        "uniform groups must resolve on the analytic span path"
 
 
 def test_scale_fine_beats_page_on_small_span_updates():

@@ -51,6 +51,63 @@ def test_fuzz_danger_traces_cross_runtime():
     assert agg["danger_scalar_ops"] == 0, agg
     assert agg["evict_batch_rounds"] > 0, agg
     assert agg["residual_replays"] > 0, agg
+    # lockstep-uniform danger workers must share schedules somewhere in
+    # the corpus (the rotating steady state), without absorbing the
+    # whole corpus (isomorphism must actually be checked, not assumed)
+    assert agg["danger_shared_ops"] > 0, agg
+    assert agg["danger_shared_ops"] < agg["danger_vec_ops"], agg
+
+
+N_SPAN_TRACES = 120
+
+
+def test_fuzz_span_traces_cross_runtime():
+    """Span-dense family (hot/striped/nested locks, masked subsets,
+    spill forced inside spans): reference vs loop vs span_all in
+    LOCKSTEP on every trace.  The corpus must drive every span-engine
+    path: the analytic uniform-group pass (``span_groups_vec``), the
+    per-worker Tier-B body, and the full-serial fallbacks — none may
+    silently absorb the others' share."""
+    agg = {}
+    for seed in range(N_SPAN_TRACES):
+        stats = trace_fuzz.crosscheck(seed, family="span")
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    assert agg["span_all_calls"] > N_SPAN_TRACES, agg
+    assert agg["span_groups_vec"] > N_SPAN_TRACES, agg
+    assert agg["span_workers_vec"] > agg["span_groups_vec"], agg
+    assert agg["span_serial_workers"] > 0, agg
+    assert agg["span_serial_calls"] > 0, agg
+
+
+def test_lock_contention_app_drivers_bit_equal():
+    """The span-engine adversary app (hot lock + disjoint striping):
+    the batched driver must absorb every span pass through the analytic
+    group path — bit-equal to the per-worker loop, with zero serialized
+    span workers."""
+    from repro.core import FINE_PROTO, PAGE_PROTO
+    from repro.core.regc_scale import RegCScaleRuntime
+    from repro.dsm.apps import lock_contention
+    for W, proto in ((4, FINE_PROTO), (16, PAGE_PROTO), (16, FINE_PROTO)):
+        runs = {}
+        for driver in ("loop", "batched"):
+            rt = RegCScaleRuntime(W, page_words=64, protocol=proto,
+                                  prefetch=1, model_mechanism=True)
+            # sweeps=2: the second sweep re-acquires with unreplayed
+            # backlog — the repeated-payload relaxation must absorb it
+            lock_contention(rt, 64 * 16 * W, 3, n_locks=4, sweeps=2,
+                            driver=driver)
+            runs[driver] = rt
+        for f in dataclasses.fields(Traffic):
+            assert (getattr(runs["loop"].traffic, f.name)
+                    == getattr(runs["batched"].traffic, f.name)), (W, f.name)
+        np.testing.assert_array_equal(runs["loop"].clock,
+                                      runs["batched"].clock)
+        st = runs["batched"].stats
+        assert st["span_groups_vec"] > 0, (W, proto)
+        assert st["span_serial_workers"] == 0, \
+            "uniform lock groups must stay on the analytic span path"
+        assert st["span_serial_calls"] == 0, (W, proto)
 
 
 def test_stream_refetch_app_drivers_bit_equal():
@@ -77,6 +134,9 @@ def test_stream_refetch_app_drivers_bit_equal():
         assert runs["batched"].stats["danger_scalar_ops"] == 0, (W, cache)
         assert runs["batched"].stats["residual_replays"] == 0, \
             "disjoint sliding windows must stay on the batched path"
+        st = runs["batched"].stats
+        assert st["danger_shared_ops"] == st["danger_ops"], \
+            "lockstep-uniform windows must share one schedule"
 
 
 def test_fuzz_traces_backends_agree():

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
 from repro.core.regc import Traffic
 from repro.core.regc_scale import RegCScaleRuntime
+from repro.dsm.apps import _span_driver
 
 PROTOS = [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]
 STYLES = ["blocks", "halo", "shared", "skewed", "shrink", "rotate"]
@@ -156,6 +157,86 @@ def gen_danger_program(rng, W: int, n_words: int, page_words: int,
     return prog
 
 
+def gen_span_program(rng, W: int, n_words: int, page_words: int,
+                     cache_pages, n_phases: int = 7) -> List[tuple]:
+    """Span-dense program family for the consistency-region engine:
+    bulk ordinary phases (so every span pass starts with real flush
+    work to hoist), batched span passes over hot / striped / mixed lock
+    topologies with uniform, per-worker-jittered, or cache-busting-wide
+    intervals (the last forces spill INSIDE spans — the full-serial
+    fallback), masked subsets, spans aimed at the bulk-dirty region
+    (flush-unsafe — serial again), plus nested per-worker spans (the
+    dict-tracked scalar walk).  Together the corpus must drive every
+    span_all path: the analytic uniform-group pass, the per-worker
+    Tier-B body, and the serial fallbacks."""
+    prog: List[tuple] = []
+    ids = np.arange(W, dtype=np.int64)
+    for ip in range(n_phases):
+        if rng.random() < 0.8:
+            reads, writes = [], []
+            lo, hi = _intervals(rng, str(rng.choice(STYLES)), W, n_words,
+                                page_words, ip, n_phases)
+            writes.append((0, lo, hi))
+            if rng.random() < 0.5:
+                lo2, hi2 = _intervals(rng, str(rng.choice(STYLES)), W,
+                                      n_words, page_words, ip, n_phases)
+                reads.append((0, lo2, hi2))
+            flops = (rng.integers(0, 20, W).astype(np.float64)
+                     if rng.random() < 0.5 else 0.0)
+            prog.append(("phase", reads, writes, flops, 0.0))
+        for _ in range(int(rng.integers(1, 3))):
+            topo = rng.random()
+            if topo < 0.4:
+                locks = np.zeros(W, np.int64)             # hot single lock
+            elif topo < 0.8:
+                k = int(rng.integers(2, min(W, 4) + 1))
+                locks = ids % k                           # striped
+            else:
+                locks = rng.integers(0, 3, W).astype(np.int64)
+            g = 1 if rng.random() < 0.7 else 0    # 0 = bulk region: unsafe
+            shape = rng.random()
+            if shape < 0.55:                      # uniform per lock group
+                u = np.unique(locks)
+                base = {int(l): int(rng.integers(0, n_words - 8)) for l in u}
+                wid = {int(l): int(rng.integers(1, 8)) for l in u}
+                lo = np.array([base[int(l)] for l in locks], np.int64)
+                hi = np.minimum(
+                    lo + np.array([wid[int(l)] for l in locks], np.int64),
+                    n_words)
+            elif shape < 0.85:                    # per-worker jitter
+                lo = rng.integers(0, n_words - 8, W).astype(np.int64)
+                hi = np.minimum(lo + rng.integers(1, 9, W), n_words)
+            else:                                 # wide: spill inside spans
+                wide = page_words * 2 * max(cache_pages or 4, 2)
+                lo = np.zeros(W, np.int64)
+                hi = np.full(W, min(n_words, wide), np.int64)
+            mask = None
+            if rng.random() < 0.3:
+                m = rng.random(W) < 0.7
+                if not m.any():
+                    m[int(rng.integers(0, W))] = True
+                mask = m
+            reads_s = [(g, lo, hi)] if rng.random() < 0.8 else []
+            writes_s = ([(g, lo.copy(), hi.copy())]
+                        if rng.random() < 0.9 else [])
+            prog.append(("span_phase", mask, locks, reads_s, writes_s))
+        if rng.random() < 0.4:
+            evs = []
+            for w in range(W):
+                if rng.random() < 0.4:
+                    lo = int(rng.integers(0, n_words - 4))
+                    evs.append((w, (int(rng.integers(0, 3)),
+                                    3 + int(rng.integers(0, 2))),
+                                int(rng.integers(0, 2)), lo,
+                                min(lo + int(rng.integers(1, 9)), n_words)))
+            if evs:
+                prog.append(("spans_nested", evs))
+        if rng.random() < 0.5:
+            prog.append(("barrier",))
+    prog.append(("barrier",))
+    return prog
+
+
 def apply_event(rt, ev, gas, driver: str):
     """Execute one program event on any runtime: ``batched``
     (phase_all), ``loop`` (per-worker phase), or ``ref`` (raw
@@ -191,6 +272,29 @@ def apply_event(rt, ev, gas, driver: str):
             rt.read(w, gas[g], lo, hi)
             rt.write(w, gas[g], lo, hi)
             rt.release(w, lock)
+    elif ev[0] == "span_phase":
+        _, mask, locks, reads, writes = ev
+        r = [(gas[g], lo, hi) for g, lo, hi in reads]
+        wr = [(gas[g], lo, hi) for g, lo, hi in writes]
+        if driver == "batched":
+            rt.span_all(mask, locks, reads=r, writes=wr)
+        else:
+            # the apps' own per-worker span body — the fuzz oracle and
+            # the loop driver must be the same code, not a copy
+            _span_driver(rt, "loop")(locks, reads=r, writes=wr,
+                                     w_mask=mask)
+    elif ev[0] == "spans_nested":
+        # nested spans: inner is dict-tracked, outer plane-tracked; the
+        # write between the releases lands on the OUTER (plane) span
+        for (w, locks, g, lo, hi) in ev[1]:
+            for lk in locks:
+                rt.acquire(w, int(lk))
+            rt.read(w, gas[g], lo, hi)
+            rt.write(w, gas[g], lo, hi)
+            rt.release(w, int(locks[-1]))
+            rt.write(w, gas[g], lo, hi)
+            for lk in reversed(locks[:-1]):
+                rt.release(w, int(lk))
     else:
         rt.barrier()
 
@@ -230,6 +334,20 @@ def danger_trace_params(seed: int) -> Dict:
                 cache_pages=cache_pages, proto=PROTOS[seed % 2])
 
 
+def span_trace_params(seed: int) -> Dict:
+    """Like ``trace_params`` but tuned for the span-dense family: mostly
+    cache-free runs (the lock benchmarks' regime, where the analytic
+    group path must dominate) with periodic small caches that force
+    spill inside spans (the full-serial fallback)."""
+    rng = np.random.default_rng(20_000 + seed)
+    W = int(rng.integers(2, 6))
+    page_words = int(rng.choice([8, 16, 32]))
+    n_words = page_words * int(rng.integers(12, 40))
+    cache_pages = [None, None, 5, 8][seed % 4]
+    return dict(rng=rng, W=W, page_words=page_words, n_words=n_words,
+                cache_pages=cache_pages, proto=PROTOS[seed % 3])
+
+
 def crosscheck(seed: int, *, check_ref: bool = True,
                backends=("numpy",),
                family: str = "mixed") -> Dict[str, int]:
@@ -242,12 +360,19 @@ def crosscheck(seed: int, *, check_ref: bool = True,
     cross-validates the vectorized refetch replay against the scalar
     page-walk oracle (``danger_mode='scalar'``) — traffic exact, clocks
     allclose (the schedule groups per-victim-run clock charges the
-    scalar walk applies per page)."""
-    assert family in ("mixed", "danger"), family
+    scalar walk applies per page); 'span' draws from the span-dense
+    consistency-region generator (hot/striped/nested locks, spill forced
+    inside spans), where the batched runtime drives ``span_all`` and the
+    loop runtime the per-worker span loop."""
+    assert family in ("mixed", "danger", "span"), family
     if family == "danger":
         p = danger_trace_params(seed)
         prog = gen_danger_program(p["rng"], p["W"], p["n_words"],
                                   p["page_words"], p["cache_pages"])
+    elif family == "span":
+        p = span_trace_params(seed)
+        prog = gen_span_program(p["rng"], p["W"], p["n_words"],
+                                p["page_words"], p["cache_pages"])
     else:
         p = trace_params(seed)
         prog = gen_program(p["rng"], p["W"], p["n_words"], p["page_words"])
