@@ -50,6 +50,20 @@ def danger_fields(rt) -> Dict[str, int]:
             "danger_shared": stats.get("danger_shared_ops", 0)}
 
 
+def chaos_fields(rt) -> Dict[str, int]:
+    """Chaos/straggler counters for the recovery section: message-loss
+    ticks, drops, invalidation retransmissions, and barrier straggler
+    checks/flags.  Recorded per row (and gated by ``benchmarks.compare``
+    like the traffic fields) so the committed results PROVE the
+    injection and retry paths fired — no silently-idle chaos."""
+    stats = getattr(rt, "stats", {})
+    return {"chaos_msgs": stats.get("chaos_msgs", 0),
+            "chaos_drops": stats.get("chaos_drops", 0),
+            "chaos_inval_retries": stats.get("chaos_inval_retries", 0),
+            "straggler_checks": stats.get("straggler_checks", 0),
+            "straggler_flags": stats.get("straggler_flags", 0)}
+
+
 def span_fields(rt) -> Dict[str, int]:
     """Span-engine path counters for the lock sections: how many span
     bodies the analytic batched group pass absorbed vs how many fell
@@ -154,7 +168,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                 "total_bytes": r.get("net_bytes", 0),
                 **{k: v for k, v in r.items()
                    if k.startswith("tr_") or k.startswith("danger_")
-                   or k.startswith("span_")}})
+                   or k.startswith("span_") or k.startswith("chaos_")
+                   or k.startswith("straggler_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

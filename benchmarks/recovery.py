@@ -1,0 +1,189 @@
+"""Crash recovery — the fault-tolerance bench (fig9_recovery).
+
+Measures what the barrier-consistent checkpoint substrate costs and what
+a crash costs to erase: per-checkpoint snapshot+save wall time, restore
+wall time, checkpoint size on disk, and the recovery run's replayed-event
+fraction, against the uninjected wall — at W = 16/64/256, both samhita
+series, on the selected driver, with deterministic message loss
+(``ChaosNet``) and barrier straggler monitoring always on.
+
+Every row carries the exact ``tr_*`` traffic fields plus the
+``chaos_*``/``straggler_*`` counters (all gated field-for-field by
+``benchmarks.compare``): the committed results PROVE the loss/retry and
+straggler paths fired, and the bench itself asserts the recovered run is
+bit-equal to the uninjected one — the exactness bar as a benchmark
+invariant, not just a test.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import (chaos_fields, make_rt, print_rows,
+                               traffic_fields, write_bench_json, write_csv)
+from repro.dsm.costmodel import ChaosNet
+from repro.ft import (ChaosHarness, FailureInjector, StragglerMonitor,
+                      assert_bit_equal, load_runtime, run_uninjected,
+                      save_runtime)
+
+PAGE_WORDS = 1024
+PAGES_PER_WORKER = 16
+CORES = (16, 64, 256)
+DROP_RATE = 0.05
+CHAOS_SEED = 11
+
+
+def gen_program(W: int, n_words: int, iters: int):
+    """Deterministic phase program: per iteration one bulk phase (block
+    reads + rotating writes — invalidation traffic every pass), one
+    batched span pass on striped locks (grant chains through the span
+    engine), and a barrier (checkpoint cut + straggler observation)."""
+    ids = np.arange(W, dtype=np.int64)
+    chunk = n_words // W
+    prog = []
+    for it in range(iters):
+        r = (ids + it) % W
+        reads = [(0, ids * chunk, np.minimum((ids + 1) * chunk, n_words))]
+        writes = [(0, r * chunk,
+                   np.where(r == W - 1, n_words, (r + 1) * chunk))]
+        # worker 0 drags a heavy modeled compute tail every phase: a
+        # deterministic straggler the barrier monitor must flag
+        # (visible in the committed straggler_flags counters)
+        flops = np.zeros(W)
+        flops[0] = 5e6
+        prog.append(("phase", reads, writes, flops))
+        lo = np.full(W, (it * 7) % max(n_words - 8, 1), np.int64)
+        prog.append(("span_phase", ids % 4, [(0, lo, lo + 8)],
+                     [(0, lo.copy(), lo.copy() + 8)]))
+        prog.append(("barrier",))
+    return prog
+
+
+def apply_event(rt, ev, gas, driver: str):
+    """Program executor for both drivers (the bench-side analogue of the
+    trace-fuzz executor; ``ft.harness_ticks`` decides who calls
+    ``chaos_tick``)."""
+    W = rt.W
+    if ev[0] == "phase":
+        _, reads, writes, flops = ev
+        r = [(gas[g], lo, hi) for g, lo, hi in reads]
+        wr = [(gas[g], lo, hi) for g, lo, hi in writes]
+        if driver == "batched":
+            rt.phase_all(reads=r, writes=wr, flops=flops)
+            return
+        for w in range(W):
+            rt.phase(w, reads=[(ga, int(lo[w]), int(hi[w]))
+                               for ga, lo, hi in r],
+                     writes=[(ga, int(lo[w]), int(hi[w]))
+                             for ga, lo, hi in wr],
+                     flops=float(flops[w]))
+    elif ev[0] == "span_phase":
+        _, locks, reads, writes = ev
+        r = [(gas[g], lo, hi) for g, lo, hi in reads]
+        wr = [(gas[g], lo, hi) for g, lo, hi in writes]
+        if driver == "batched":
+            rt.span_all(None, locks, reads=r, writes=wr)
+            return
+        for w in range(W):
+            with rt.span(w, int(locks[w])):
+                for ga, lo, hi in r:
+                    rt.read(w, ga, int(lo[w]), int(hi[w]))
+                for ga, lo, hi in wr:
+                    rt.write(w, ga, int(lo[w]), int(hi[w]))
+    else:
+        rt.barrier()
+
+
+def _dir_bytes(d: Path) -> int:
+    return sum(f.stat().st_size for f in Path(d).rglob("*") if f.is_file())
+
+
+def recovery(iters: int, driver: str, cores=CORES):
+    rows = []
+    for p in cores:
+        n_words = PAGE_WORDS * PAGES_PER_WORKER * p
+        for series in ("samhita", "samhita_page"):
+            def mk():
+                return make_rt(
+                    series, p, page_words=PAGE_WORDS,
+                    chaos=ChaosNet(seed=CHAOS_SEED, drop_rate=DROP_RATE),
+                    straggler=StragglerMonitor(p, window=4, patience=2))
+
+            prog = gen_program(p, n_words, iters)
+            t0 = time.perf_counter()
+            base = run_uninjected(mk, [n_words], driver, prog, apply_event)
+            t_wall = time.perf_counter() - t0
+            with tempfile.TemporaryDirectory() as td:
+                # checkpoint + restore microcosts on the END state (the
+                # largest the directories get)
+                t0 = time.perf_counter()
+                save_runtime(base, td, 0)
+                t_ckpt = time.perf_counter() - t0
+                ckpt_bytes = _dir_bytes(Path(td) / "step_000000000")
+                t0 = time.perf_counter()
+                restored = load_runtime(td, 0)
+                t_restore = time.perf_counter() - t0
+                np.testing.assert_array_equal(restored.clock, base.clock)
+            # crash worker p//2 at a mid-run BARRIER tick (each iteration
+            # is 3 events, so tick 3*(iters//2) is a barrier): the whole
+            # iteration since the last checkpoint re-executes, keeping
+            # replayed_events > 0 in the committed rows.  Recovery must
+            # land bit-equal with the uninjected run.
+            inj = FailureInjector(
+                at_steps=[(3 * max(1, iters // 2), p // 2)])
+            with tempfile.TemporaryDirectory() as td:
+                t0 = time.perf_counter()
+                rec, rep = ChaosHarness(mk, [n_words], driver, td,
+                                        apply_event, injector=inj
+                                        ).run(prog)
+                t_recovery = time.perf_counter() - t0
+            assert rep.n_crashes == 1, rep
+            assert_bit_equal(rec, base, (series, p, driver))
+            rows.append({
+                "figure": "fig9_recovery", "series": series, "p": p,
+                "n": n_words, "driver": driver,
+                "t_model_s": round(base.time, 6),
+                "t_wall_s": round(t_wall, 4),
+                "t_ckpt_s": round(t_ckpt, 4),
+                "t_restore_s": round(t_restore, 4),
+                "t_recovery_wall_s": round(t_recovery, 4),
+                "ckpt_bytes": ckpt_bytes,
+                "n_events": rep.n_events,
+                "n_checkpoints": rep.n_checkpoints,
+                "n_crashes": rep.n_crashes,
+                "replayed_events": rep.n_replayed_events,
+                "net_bytes": base.traffic.total_bytes,
+                **traffic_fields(base), **chaos_fields(base)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=6,
+                    help="barrier-delimited iterations per point")
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick local subset (W <= 64).  Missing the "
+                         "committed W=256 keys routes the output to "
+                         "*.partial.csv, so the committed artifacts stay "
+                         "untouched")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
+    args = ap.parse_args(argv)
+    rows = recovery(args.iters, args.driver,
+                    cores=CORES[:2] if args.smoke else CORES)
+    write_csv("recovery" if args.driver == "batched"
+              else f"recovery_{args.driver}", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -52,8 +52,8 @@ def main(argv=None):
             s in name or any(s in t for t in tags) for s in args.sections)
 
     from benchmarks import (common, jacobi, lock_contention,
-                            molecular_dynamics, regc_training, roofline,
-                            stream_triad)
+                            molecular_dynamics, recovery, regc_training,
+                            roofline, stream_triad)
 
     sections = []
     for d in drivers:
@@ -84,6 +84,13 @@ def main(argv=None):
              f"lock_contention{tag}", False, ("lock",),
              lambda drv=drv: lock_contention.main(
                  ["--iters", str(iters)] + drv)),
+            # like lock_contention, a focused run regenerates the exact
+            # committed point set — the CI chaos job redirects its CSVs
+            # with BENCH_OUT (see bench_lock)
+            (f"Crash recovery (checkpoint/replay) {tag}",
+             f"recovery{tag}", False, ("chaos",),
+             lambda drv=drv: recovery.main(
+                 ["--iters", str(max(3, iters // 2))] + drv)),
         ]
     sections += [
         # jax-compile-bound (subprocess trainer), not a protocol section

@@ -1,6 +1,8 @@
 from repro.checkpoint.store import (
-    CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
+    CheckpointManager, gc_incomplete, latest_step, load_arrays,
+    restore_checkpoint, save_arrays, save_checkpoint,
 )
 
-__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+__all__ = ["CheckpointManager", "gc_incomplete", "latest_step",
+           "load_arrays", "restore_checkpoint", "save_arrays",
            "save_checkpoint"]

@@ -20,25 +20,48 @@ then async filesystem write).
 from __future__ import annotations
 
 import json
+import re
 import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
-import jax
 import numpy as np
 
 _MANIFEST = "MANIFEST.json"
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _jax():
+    # jax only backs the pytree save/restore path; the numpy-only
+    # save_arrays/load_arrays path (coherence snapshots, nojax CI leg)
+    # must import this module without it
+    import jax
+    return jax
 
 
 def _flat(tree) -> dict:
+    jax = _jax()
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return {jax.tree_util.keystr(p): v for p, v in leaves}
 
 
 def _step_dir(root: Path, step: int) -> Path:
     return Path(root) / f"step_{step:09d}"
+
+
+def _step_dirs(root: Path):
+    """(step, path) for every *conforming* ``step_NNNNNNNNN`` directory.
+    Stray entries (editor backups, ``.nfs*`` debris, ``step_tmp`` …) are
+    ignored — they used to crash ``latest_step``/``_rotate`` with
+    ``ValueError`` on the int parse."""
+    out = []
+    for p in root.glob("step_*"):
+        m = _STEP_RE.match(p.name)
+        if m and p.is_dir():
+            out.append((int(m.group(1)), p))
+    return out
 
 
 def save_checkpoint(root, step: int, tree, *, blocking: bool = True,
@@ -86,14 +109,14 @@ def latest_step(root) -> Optional[int]:
     root = Path(root)
     if not root.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in root.glob("step_*")
-             if (p / _MANIFEST).exists()]
+    steps = [s for s, p in _step_dirs(root) if (p / _MANIFEST).exists()]
     return max(steps) if steps else None
 
 
 def restore_checkpoint(root, step: int, template, *, shardings=None) -> Any:
     """Load step's arrays into ``template``'s structure.  ``shardings``
     (same structure) reshards onto a possibly-different mesh."""
+    jax = _jax()
     d = _step_dir(Path(root), step)
     manifest = json.loads((d / _MANIFEST).read_text())
     data = {}
@@ -123,12 +146,55 @@ def restore_extra(root, step: int) -> dict:
     return json.loads((d / _MANIFEST).read_text())["extra"]
 
 
+def save_arrays(root, step: int, arrays: Dict[str, np.ndarray], *,
+                extra: Optional[dict] = None, host: int = 0):
+    """Numpy-only checkpoint save — no jax, no pytree.  ``arrays`` is a
+    flat name->ndarray dict (e.g. ``RegCScaleRuntime.snapshot()``
+    output); ``extra`` carries the JSON-serializable meta.  Same on-disk
+    layout and crash-consistency protocol as :func:`save_checkpoint`:
+    tmp-write + rename per shard, manifest rename as the commit point —
+    so ``latest_step``/``gc_incomplete``/``CheckpointManager`` rotation
+    all apply unchanged."""
+    d = _step_dir(Path(root), step)
+    d.mkdir(parents=True, exist_ok=True)
+    host_flat = {k: np.asarray(v) for k, v in arrays.items()}
+    spec = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in host_flat.items()}
+    shard = d / f"shard_{host:05d}.npz"
+    tmp = d / f".shard_{host:05d}.tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **host_flat)
+        f.flush()
+    tmp.rename(shard)
+    manifest = {"step": step, "time": time.time(), "n_hosts": 1,
+                "leaves": spec, "extra": extra or {}}
+    mtmp = d / ".manifest.tmp"
+    mtmp.write_text(json.dumps(manifest, indent=1))
+    mtmp.rename(d / _MANIFEST)     # commit point
+
+
+def load_arrays(root, step: int) -> "tuple[Dict[str, np.ndarray], dict]":
+    """Numpy-only restore of a :func:`save_arrays` checkpoint: returns
+    (arrays, extra)."""
+    d = _step_dir(Path(root), step)
+    manifest = json.loads((d / _MANIFEST).read_text())
+    data: Dict[str, np.ndarray] = {}
+    for shard in sorted(d.glob("shard_*.npz")):
+        with np.load(shard) as z:
+            data.update({k: z[k] for k in z.files})
+    missing = set(manifest["leaves"]) - set(data)
+    assert not missing, f"checkpoint missing leaves: {sorted(missing)[:5]}"
+    return data, manifest["extra"]
+
+
 def gc_incomplete(root):
-    """Remove step dirs that never committed a manifest (crash debris)."""
+    """Remove step dirs that never committed a manifest (crash debris).
+    Only conforming ``step_NNNNNNNNN`` directories are candidates — a
+    stray foreign entry is not ours to delete."""
     root = Path(root)
     if not root.exists():
         return
-    for p in root.glob("step_*"):
+    for _s, p in _step_dirs(root):
         if not (p / _MANIFEST).exists():
             shutil.rmtree(p)
 
@@ -149,14 +215,30 @@ class CheckpointManager:
             self.root, step, tree, blocking=not self.async_write, extra=extra)
         self._rotate(pending=step)
 
+    def save_arrays(self, step: int, arrays: Dict[str, np.ndarray], *,
+                    extra: Optional[dict] = None):
+        """Numpy-only flat-dict save (see module-level ``save_arrays``)
+        with the manager's rotation and at-most-one-in-flight async
+        discipline — no jax anywhere on this path."""
+        self.wait()
+        snap = {k: np.asarray(v).copy() for k, v in arrays.items()}
+        if self.async_write:
+            t = threading.Thread(target=save_arrays,
+                                 args=(self.root, step, snap),
+                                 kwargs={"extra": extra}, daemon=True)
+            t.start()
+            self._inflight = t
+        else:
+            save_arrays(self.root, step, snap, extra=extra)
+        self._rotate(pending=step)
+
     def wait(self):
         if self._inflight is not None:
             self._inflight.join()
             self._inflight = None
 
     def _rotate(self, pending: Optional[int] = None):
-        steps = sorted(int(p.name.split("_")[1])
-                       for p in self.root.glob("step_*")
+        steps = sorted(s for s, p in _step_dirs(self.root)
                        if (p / _MANIFEST).exists())
         if pending is not None and pending not in steps:
             steps = sorted(steps + [pending])   # in-flight counts toward keep

@@ -530,6 +530,58 @@ class RegionDirectory:
         n = int(self.length[w])
         return np.nonzero(self.dirty[w, :n])[0]
 
+    # ------------------------------------------------------------------
+    # snapshot / restore (see DIRECTORY.md "Recovery contract")
+    # ------------------------------------------------------------------
+
+    def state_arrays(self) -> Tuple[dict, dict]:
+        """Full plane state as (arrays, meta) — everything needed to
+        rebuild a row-for-row, cell-for-cell clone.  Planes are stored at
+        their current capacity; the derived coverage caches
+        (``_sorted_bases``/``_sorted_ends``) are recomputed on restore."""
+        arrays = {"base": self.base.copy(), "length": self.length.copy(),
+                  "shift": self.shift.copy(), "valid": self.valid.copy(),
+                  "dirty": self.dirty.copy(),
+                  "dirty_lo": self.dirty_lo.copy(),
+                  "dirty_hi": self.dirty_hi.copy()}
+        for name in ("wprot", "touch", "incache", "span_lo", "span_hi"):
+            arr = getattr(self, name)
+            if arr is not None:
+                arrays[name] = arr.copy()
+        meta = {"W": self.W, "region": self.region,
+                "page_lo": self.page_lo, "page_hi": self.page_hi,
+                "cap": self.cap, "maybe_dirty": bool(self.maybe_dirty),
+                "track_wprot": self.wprot is not None,
+                "track_touch": self.touch is not None,
+                "has_span": self.span_lo is not None,
+                "backend": self.backend}
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict) -> "RegionDirectory":
+        d = cls(meta["W"], meta["region"], meta["page_lo"],
+                meta["page_hi"], track_wprot=meta["track_wprot"],
+                track_touch=meta["track_touch"], backend=meta["backend"])
+        d.cap = int(meta["cap"])
+        d.base = np.asarray(arrays["base"], np.int64).copy()
+        d.length = np.asarray(arrays["length"], np.int64).copy()
+        d.shift = np.asarray(arrays["shift"], np.int64).copy()
+        d.valid = np.asarray(arrays["valid"], bool).copy()
+        d.dirty = np.asarray(arrays["dirty"], bool).copy()
+        d.dirty_lo = np.asarray(arrays["dirty_lo"], np.int64).copy()
+        d.dirty_hi = np.asarray(arrays["dirty_hi"], np.int64).copy()
+        if meta["track_wprot"]:
+            d.wprot = np.asarray(arrays["wprot"], bool).copy()
+        if meta["track_touch"]:
+            d.touch = np.asarray(arrays["touch"], np.int64).copy()
+            d.incache = np.asarray(arrays["incache"], bool).copy()
+        if meta["has_span"]:
+            d.span_lo = np.asarray(arrays["span_lo"], np.int64).copy()
+            d.span_hi = np.asarray(arrays["span_hi"], np.int64).copy()
+        d.maybe_dirty = bool(meta["maybe_dirty"])
+        d._cov_stale = True
+        return d
+
 
 class IntervalLog:
     """Flat, version-segmented (page, lo, hi) notice log for one lock.
@@ -612,6 +664,27 @@ class IntervalLog:
             return None
         seg = self._p[a:b]
         return int(seg.min()), int(seg.max()) + 1
+
+    def state_arrays(self) -> dict:
+        """Live log contents (entries [0, _n) plus the version offsets) —
+        the snapshot payload; spare capacity is not serialized."""
+        n = self._n
+        return {"p": self._p[:n].copy(), "lo": self._lo[:n].copy(),
+                "hi": self._hi[:n].copy(),
+                "voff": np.asarray(self.voff, np.int64)}
+
+    @classmethod
+    def from_state(cls, arrays: dict) -> "IntervalLog":
+        log = cls()
+        p = np.asarray(arrays["p"], np.int64)
+        n = int(p.size)
+        log._reserve(n)
+        log._p[:n] = p
+        log._lo[:n] = np.asarray(arrays["lo"], np.int64)
+        log._hi[:n] = np.asarray(arrays["hi"], np.int64)
+        log._n = n
+        log.voff = [int(v) for v in np.asarray(arrays["voff"], np.int64)]
+        return log
 
     def pending(self, v_from: int, v_to: int):
         """Coalesced (pages, lo_min, hi_max) over versions [v_from, v_to)."""

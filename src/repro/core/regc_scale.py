@@ -52,6 +52,7 @@ store-tracking *mechanisms* (§IV):
 from __future__ import annotations
 
 import bisect
+import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -105,7 +106,8 @@ class RegCScaleRuntime:
                  n_mem_servers: int = 1, model_mechanism: bool = True,
                  instr_s_per_word: float = INSTR_S_PER_WORD,
                  fault_s: float = FAULT_S, fetch_batch: int = 1,
-                 backend: str = "numpy", danger_mode: str = "vec"):
+                 backend: str = "numpy", danger_mode: str = "vec",
+                 chaos=None, injector=None, straggler=None):
         assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
         # 'vec' | 'scalar': how ops flagged by the per-op ``_danger``
         # screen (mid-op refetch possible) replay.  'vec' evaluates the
@@ -178,6 +180,38 @@ class RegCScaleRuntime:
                       "span_all_calls": 0, "span_serial_calls": 0,
                       "span_groups_vec": 0, "span_workers_vec": 0,
                       "span_serial_workers": 0}
+        # fault-tolerance wiring (see ft/coherence.py and DIRECTORY.md
+        # "Recovery contract"): ``chaos`` is a dsm.costmodel.ChaosNet
+        # message-loss model (one per-worker tick per clock-charged
+        # message-group event — per-worker event order is identical
+        # across drivers, so retry charges keep loop/batched bit-equal);
+        # ``injector`` is a ft.runtime.FailureInjector fired at phase/
+        # span/barrier boundaries (``chaos_tick``); ``straggler`` is a
+        # ft.runtime.StragglerMonitor observed on per-barrier walls.
+        self.chaos = chaos
+        self.injector = injector
+        self.straggler = straggler
+        if chaos is not None:
+            chaos.bind(n_workers, self.stats)
+        if straggler is not None:
+            assert straggler.n == n_workers, (straggler.n, n_workers)
+            self.stats.setdefault("straggler_checks", 0)
+            self.stats.setdefault("straggler_flags", 0)
+        self._phase_idx = 0
+        self._bar_clock0 = np.zeros(n_workers)
+
+    def chaos_tick(self):
+        """Advance the phase-program position and give the failure
+        injector its shot.  Called internally at ``phase_all`` /
+        ``span_all`` / ``barrier`` entry; loop-driver harnesses call it
+        once per equivalent event so both drivers see the same
+        per-event injection schedule.  A raise here interrupts BEFORE
+        any of the event's state mutations — the runtime is exactly its
+        post-previous-event self, which a barrier checkpoint + replayed
+        event prefix reproduces bit-for-bit."""
+        self._phase_idx += 1
+        if self.injector is not None:
+            self.injector.check(self._phase_idx)
 
     # ------------------------------------------------------------------
     def alloc(self, n_elems: int) -> GasArray:
@@ -202,6 +236,8 @@ class RegCScaleRuntime:
         if self.protocol == IDEAL_PROTO:
             return
         self.clock[w] += self.cost.xfer_s(n_bytes, msgs)
+        if self.chaos is not None:
+            self.clock[w] += self.chaos.retry1(w)
 
     def compute(self, w: int, *, flops: float = 0.0, mem_bytes: float = 0.0,
                 seconds: float = 0.0):
@@ -310,6 +346,8 @@ class RegCScaleRuntime:
                 self.clock[w] += (self.cost.net_latency_s * db.size
                                   + db.size * self.page_bytes
                                   / self.cost.net_bw_Bps)
+                if self.chaos is not None:
+                    self.clock[w] += self.chaos.retry1(w)
                 if d.wprot is not None:
                     d.wprot[w, db] = True
                 self._invalidate_sharers(w, d.region, d.base[w] + db)
@@ -747,6 +785,8 @@ class RegCScaleRuntime:
                 dr.dirty[m[r_i], cols[r_i, c_i]] = False
                 self.traffic.writeback_bytes += db * pb * R
                 self.clock[m] += (lat * db + db * pb / bwd)
+                if self.chaos is not None:
+                    self.clock[m] += self.chaos.retry_rows(m)
                 if dr.wprot is not None:
                     dr.wprot[m[r_i], cols[r_i, c_i]] = True
                 # sharer invalidation is a proven no-op here: shared
@@ -807,6 +847,8 @@ class RegCScaleRuntime:
         if n_miss:
             self.clock[m] += self.cost.xfer_s(
                 n_miss * pb, 2 * -(-n_miss // self.fetch_batch))
+            if self.chaos is not None:
+                self.clock[m] += self.chaos.retry_rows(m)
 
     def _maybe_evict(self, w: int):
         """Watermark-triggered batched eviction: no per-op work unless the
@@ -990,6 +1032,8 @@ class RegCScaleRuntime:
                 d.clear_valid_cells(rows, cols, hit)
                 self.traffic.invalidations += n_inv
                 self.traffic.control_msgs += n_inv
+                if self.chaos is not None:
+                    self.chaos.inval_msgs(n_inv)
             return
         n_inv = 0
         for v in rows:
@@ -1007,6 +1051,8 @@ class RegCScaleRuntime:
         if n_inv:
             self.traffic.invalidations += n_inv
             self.traffic.control_msgs += n_inv
+            if self.chaos is not None:
+                self.chaos.inval_msgs(n_inv)
 
     def _flush_worker(self, w: int):
         """Write back + invalidate sharers for all of w's ordinary-dirty
@@ -1078,6 +1124,8 @@ class RegCScaleRuntime:
             self.clock[active] += (self.cost.net_latency_s * msgs
                                    + (nD_w[active] * self.page_bytes)
                                    / self.cost.net_bw_Bps)
+            if self.chaos is not None:
+                self.clock[active] += self.chaos.retry_rows(active)
             if d.wprot is not None:
                 if mask is None:
                     np.logical_or(d.wprot, d.dirty, out=d.wprot)  # re-arm own
@@ -1153,6 +1201,8 @@ class RegCScaleRuntime:
         if n_inv:
             self.traffic.invalidations += n_inv
             self.traffic.control_msgs += n_inv
+            if self.chaos is not None:
+                self.chaos.inval_msgs(n_inv)
         # final valid state: keep only a sole dirty writer's copy
         keep = (counts == 1)[pu] & (pr == d0_rows[pu])
         hot = val & ~keep
@@ -1222,11 +1272,15 @@ class RegCScaleRuntime:
                 self.traffic.diff_bytes += tot
                 self.clock[w] += (self.cost.net_latency_s * u.size
                                   + tot / self.cost.net_bw_Bps)
+                if self.chaos is not None:
+                    self.clock[w] += self.chaos.retry1(w)
             else:
                 n_inv = self._replay_invalidate(
                     w, u, rearm=self.model_mechanism)
                 self.traffic.invalidations += n_inv
                 self.traffic.control_msgs += int(u.size)
+                if self.chaos is not None:
+                    self.chaos.inval_msgs(n_inv)
         lk.seen[w] = lk.version
         self.spans[w].append(_Span(lock_id, plane=not self.spans[w]))
 
@@ -1269,6 +1323,8 @@ class RegCScaleRuntime:
                 self.traffic.writeback_bytes += tot
             self.clock[w] += (self.cost.net_latency_s * n
                               + tot / self.cost.net_bw_Bps)
+            if self.chaos is not None:
+                self.clock[w] += self.chaos.retry1(w)
         lk.log.append_version(pages, los, his)
         lk.version += 1
         lk.seen[w] = lk.version
@@ -1553,6 +1609,9 @@ class RegCScaleRuntime:
                             self.cost.net_latency_s * db[hit]
                             + db[hit] * self.page_bytes
                             / self.cost.net_bw_Bps)
+                        if self.chaos is not None:
+                            self.clock[Rs[hit]] += (
+                                self.chaos.retry_rows(Rs[hit]))
                     if is_part:
                         # advance each run past its last taken cell
                         self.resident[Rs] -= ks
@@ -1631,6 +1690,9 @@ class RegCScaleRuntime:
                      + (n_miss * self.page_bytes) / self.cost.net_bw_Bps)
                 hit = n_miss > 0
                 self.clock[rows[hit]] += t[hit]
+                if self.chaos is not None:
+                    self.clock[rows[hit]] += self.chaos.retry_rows(
+                        rows[hit])
             d.valid[rb, s] = True
 
     def _fetch_dense(self, d: RegionDirectory, region: int,
@@ -1665,6 +1727,9 @@ class RegCScaleRuntime:
                      + (n_miss * self.page_bytes) / self.cost.net_bw_Bps)
                 hit = n_miss > 0
                 self.clock[rows[hit]] += t[hit]
+                if self.chaos is not None:
+                    self.clock[rows[hit]] += self.chaos.retry_rows(
+                        rows[hit])
             ri, ci = np.nonzero(mask & ~vsub)
             d.valid[rows[ri], cols[ri, ci]] = True
 
@@ -1829,6 +1894,7 @@ class RegCScaleRuntime:
         through their locks and stay per-worker
         (``span``/``acquire``/``release``)."""
         assert not any(self.spans), "phase_all must run outside spans"
+        self.chaos_tick()
         W = self.W
         reads = [(ga, self._w_arr(lo), self._w_arr(hi))
                  for ga, lo, hi in reads]
@@ -2072,6 +2138,8 @@ class RegCScaleRuntime:
                 V &= ~(has_pend[:, None] & pend_mask[None, :])
             self.traffic.invalidations += n_inv
             self.traffic.control_msgs += npend * int(has_pend.sum())
+            if self.chaos is not None:
+                self.chaos.inval_msgs(n_inv)
 
         # ---- op effects, op-major (rows are mutually independent) ------
         op_miss = []       # per read op: (G,) fetch-miss counts
@@ -2177,9 +2245,13 @@ class RegCScaleRuntime:
             c = float(self.clock[w])
             if not IDEAL:
                 c += ctrl2
+                if self.chaos is not None:
+                    c += self.chaos.retry1(w)
             c = max(c, t_rel)
             if has_pend[i] and npend and not IDEAL and FINE:
                 c += lat * npend + pub_bytes / bw
+                if self.chaos is not None:
+                    c += self.chaos.retry1(w)
             ri = wi = 0
             for ga, lo, hi, p_lo, p_hi, is_w in ops:
                 if not is_w:
@@ -2187,6 +2259,8 @@ class RegCScaleRuntime:
                     ri += 1
                     if m and not IDEAL:
                         c += xfer(m * pb, 2 * -(-m // fb))
+                        if self.chaos is not None:
+                            c += self.chaos.retry1(w)
                     continue
                 if self.model_mechanism and FINE:
                     c += (hi - lo) * self.instr_s_per_word
@@ -2196,12 +2270,20 @@ class RegCScaleRuntime:
                 wi += 1
                 if first is not None and first[i]:
                     c += xfer(pb, 2)
+                    if self.chaos is not None:
+                        c += self.chaos.retry1(w)
                 if last is not None and last[i]:
                     c += xfer(pb, 2)
+                    if self.chaos is not None:
+                        c += self.chaos.retry1(w)
             if not IDEAL and npend:
                 c += lat * npend + pub_bytes / bw
+                if self.chaos is not None:
+                    c += self.chaos.retry1(w)
             if not IDEAL:
                 c += ctrl1
+                if self.chaos is not None:
+                    c += self.chaos.retry1(w)
             self.clock[w] = c
             t_rel = c
         lk.last_release_time = t_rel
@@ -2263,6 +2345,7 @@ class RegCScaleRuntime:
         loop when a span could evict (capacity pressure inside spans) or
         when flushed pages and span/notice pages may interact."""
         assert not any(self.spans), "span_all must run outside spans"
+        self.chaos_tick()
         W = self.W
         if w_mask is None:
             rows = self._rows_all
@@ -2328,6 +2411,7 @@ class RegCScaleRuntime:
         return self._reduction_results[name]
 
     def barrier(self):
+        self.chaos_tick()
         self._flush_all_workers()
         if self.protocol != IDEAL_PROTO:
             for lk in self.locks.values():
@@ -2358,6 +2442,12 @@ class RegCScaleRuntime:
                     else:
                         n_inv = self._replay_invalidate(w, u, rearm=False)
                         self.traffic.invalidations += n_inv
+                        if self.chaos is not None:
+                            self.chaos.inval_msgs(n_inv)
+        if self.straggler is not None:
+            flagged = self.straggler.observe(self.clock - self._bar_clock0)
+            self.stats["straggler_checks"] += 1
+            self.stats["straggler_flags"] += len(flagged)
         log_w = max(1, int(np.ceil(np.log2(max(self.W, 2)))))
         for name, contribs in self._reductions.items():
             vals = [v for v, _ in contribs]
@@ -2369,7 +2459,203 @@ class RegCScaleRuntime:
         t = float(self.clock.max()) + self.cost.net_latency_s * log_w * (
             0 if self.protocol == IDEAL_PROTO else 1) + 1e-7 * log_w
         self.clock[:] = t
+        self._bar_clock0 = self.clock.copy()
 
     @property
     def time(self) -> float:
         return float(self.clock.max())
+
+    # ------------------------------------------------------------------
+    # barrier-consistent checkpoints (ft/coherence.py; DIRECTORY.md
+    # "Recovery contract")
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> Tuple[dict, dict]:
+        """Serialize the COMPLETE runtime state as (arrays, meta).
+
+        Only legal at a consistent cut — no open spans, no unresolved
+        reductions, no in-flight danger recording — i.e. right after a
+        ``barrier()`` (or before any work).  At such a cut the directory
+        planes, lock logs, LRU queues, clocks, traffic, stats, and the
+        chaos/straggler counters are the *entire* protocol state:
+        :meth:`from_snapshot` rebuilds a runtime whose every subsequent
+        event is bit-identical to the original's.  ``arrays`` holds only
+        numpy arrays (npz-shardable, no jax); ``meta`` is
+        JSON-serializable."""
+        assert not any(self.spans), "snapshot inside an open span"
+        assert not self._reductions, "snapshot with unresolved reductions"
+        assert self._danger_rec is None, "snapshot during danger recording"
+        arrays: Dict[str, np.ndarray] = {
+            "clock": self.clock.copy(),
+            "bar_clock0": self._bar_clock0.copy(),
+            "resident": self.resident.copy(),
+            "q_degraded": self._q_degraded.copy(),
+        }
+        # LRU touch-run queues: flat (N, 7) entry rows + per-worker counts
+        lru_counts = np.array([len(q) for q in self._lru_q], np.int64)
+        if int(lru_counts.sum()):
+            lru_entries = np.array(
+                [list(e) for q in self._lru_q for e in q], np.int64)
+        else:
+            lru_entries = np.zeros((0, 7), np.int64)
+        arrays["lru_counts"] = lru_counts
+        arrays["lru_entries"] = lru_entries
+        dr_counts = np.array([len(s) for s in self._dirty_regions],
+                             np.int64)
+        arrays["dirty_region_counts"] = dr_counts
+        arrays["dirty_region_flat"] = np.array(
+            [r for s in self._dirty_regions for r in sorted(s)], np.int64)
+        red_names = sorted(self._reduction_results)
+        arrays["red_vals"] = np.array(
+            [self._reduction_results[k] for k in red_names], np.float64)
+        dir_metas = []
+        for r, d in enumerate(self.dirs):
+            darr, dmeta = d.state_arrays()
+            for k, v in darr.items():
+                arrays[f"d{r:05d}_{k}"] = v
+            dir_metas.append(dmeta)
+        lock_metas = []
+        for j, (lid, lk) in enumerate(sorted(self.locks.items())):
+            pre = f"lk{j:05d}_"
+            arrays[pre + "seen"] = lk.seen.copy()
+            arrays[pre + "lrt"] = np.array([lk.last_release_time],
+                                           np.float64)
+            for k, v in lk.log.state_arrays().items():
+                arrays[pre + k] = v
+            lock_metas.append({"id": int(lid), "version": int(lk.version)})
+        if self.chaos is not None:
+            arrays.update(self.chaos.state_arrays())
+        if self.straggler is not None:
+            for k, v in self.straggler.state_arrays().items():
+                arrays["strag_" + k] = v
+        meta = {
+            "config": {"n_workers": self.W, "page_words": self.page_words,
+                       "protocol": self.protocol,
+                       "cache_pages": self.cache_pages,
+                       "prefetch": self.prefetch,
+                       "n_mem_servers": self.n_mem_servers,
+                       "model_mechanism": self.model_mechanism,
+                       "instr_s_per_word": self.instr_s_per_word,
+                       "fault_s": self.fault_s,
+                       "fetch_batch": self.fetch_batch,
+                       "backend": self.backend,
+                       "danger_mode": self.danger_mode},
+            "cost": dataclasses.asdict(self.cost),
+            "traffic": dataclasses.asdict(self.traffic),
+            "stats": dict(self.stats),
+            "tick": self._tick,
+            "phase_idx": self._phase_idx,
+            "n_pages": self.n_pages,
+            "region_starts": [int(x) for x in self._region_starts],
+            "region_ends": [int(x) for x in self._region_ends],
+            "dirs": dir_metas,
+            "locks": lock_metas,
+            "red_names": red_names,
+            "chaos": (None if self.chaos is None
+                      else self.chaos.config()),
+            "straggler": (None if self.straggler is None
+                          else self.straggler.config()),
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_snapshot(cls, arrays: dict, meta: dict, *,
+                      injector=None) -> "RegCScaleRuntime":
+        """Rebuild a runtime from :meth:`snapshot` output.  The clone is
+        bit-identical going forward: same clocks, traffic, stats,
+        directory planes, lock logs, LRU order, chaos counters.  Pass a
+        (possibly already partially fired) ``injector`` to rearm failure
+        injection on the replayed suffix."""
+        cfg = meta["config"]
+        chaos = None
+        if meta.get("chaos") is not None:
+            from repro.dsm.costmodel import ChaosNet
+            chaos = ChaosNet(**meta["chaos"])
+        straggler = None
+        if meta.get("straggler") is not None:
+            from repro.ft.runtime import StragglerMonitor
+            sarr = {k[len("strag_"):]: v for k, v in arrays.items()
+                    if k.startswith("strag_")}
+            straggler = StragglerMonitor.from_state(sarr,
+                                                    meta["straggler"])
+        cache_pages = cfg["cache_pages"]
+        rt = cls(int(cfg["n_workers"]),
+                 page_words=int(cfg["page_words"]),
+                 protocol=cfg["protocol"],
+                 cost=CostModel(**meta["cost"]),
+                 cache_pages=(None if cache_pages is None
+                              else int(cache_pages)),
+                 prefetch=int(cfg["prefetch"]),
+                 n_mem_servers=int(cfg["n_mem_servers"]),
+                 model_mechanism=bool(cfg["model_mechanism"]),
+                 instr_s_per_word=float(cfg["instr_s_per_word"]),
+                 fault_s=float(cfg["fault_s"]),
+                 fetch_batch=int(cfg["fetch_batch"]),
+                 backend=cfg["backend"],
+                 danger_mode=cfg["danger_mode"],
+                 chaos=chaos, injector=injector, straggler=straggler)
+        rt.n_pages = int(meta["n_pages"])
+        rt._region_starts = [int(x) for x in meta["region_starts"]]
+        rt._region_ends = [int(x) for x in meta["region_ends"]]
+        rt._region_starts_np = np.asarray(rt._region_starts, np.int64)
+        rt.dirs = []
+        for r, dmeta in enumerate(meta["dirs"]):
+            pre = f"d{r:05d}_"
+            darr = {k[len(pre):]: v for k, v in arrays.items()
+                    if k.startswith(pre)}
+            rt.dirs.append(RegionDirectory.from_state(darr, dmeta))
+        rt.locks = {}
+        for j, lm in enumerate(meta["locks"]):
+            pre = f"lk{j:05d}_"
+            lk = _Lock(rt.W)
+            lk.version = int(lm["version"])
+            lk.seen = np.asarray(arrays[pre + "seen"], np.int64).copy()
+            lk.last_release_time = float(
+                np.asarray(arrays[pre + "lrt"])[0])
+            lk.log = IntervalLog.from_state(
+                {k: arrays[pre + k] for k in ("p", "lo", "hi", "voff")})
+            rt.locks[int(lm["id"])] = lk
+        rt.clock = np.asarray(arrays["clock"], np.float64).copy()
+        rt._bar_clock0 = np.asarray(arrays["bar_clock0"],
+                                    np.float64).copy()
+        rt.resident = np.asarray(arrays["resident"], np.int64).copy()
+        rt._q_degraded = np.asarray(arrays["q_degraded"], bool).copy()
+        lru_counts = np.asarray(arrays["lru_counts"], np.int64)
+        ents = np.asarray(arrays["lru_entries"],
+                          np.int64).reshape(-1, 7)
+        rt._lru_q = []
+        off = 0
+        for w in range(rt.W):
+            n = int(lru_counts[w])
+            rt._lru_q.append(deque(
+                [int(x) for x in e] for e in ents[off:off + n]))
+            off += n
+        dr_counts = np.asarray(arrays["dirty_region_counts"], np.int64)
+        dr_flat = np.asarray(arrays["dirty_region_flat"], np.int64)
+        rt._dirty_regions = []
+        off = 0
+        for w in range(rt.W):
+            n = int(dr_counts[w])
+            rt._dirty_regions.append(
+                set(int(x) for x in dr_flat[off:off + n]))
+            off += n
+        rt.traffic = Traffic(**meta["traffic"])
+        # IN PLACE: a bound ChaosNet holds a reference to rt.stats
+        rt.stats.clear()
+        rt.stats.update(meta["stats"])
+        if chaos is not None:
+            chaos.load_state(arrays)
+        rt._tick = int(meta["tick"])
+        rt._phase_idx = int(meta["phase_idx"])
+        rt._reduction_results = {
+            k: float(v) for k, v in zip(
+                meta["red_names"],
+                np.asarray(arrays["red_vals"], np.float64))}
+        return rt
+
+    def gas_for_region(self, region: int, n_elems: int) -> GasArray:
+        """Handle for an allocation that already exists in the directory
+        (the restore-side replacement for ``alloc``: snapshots persist
+        regions, not the caller's GasArray handles)."""
+        return GasArray(self._region_starts[region], n_elems,
+                        self.page_words)

@@ -1,6 +1,12 @@
 from repro.ft.runtime import (
     ElasticPlan, FailureInjector, StragglerMonitor, WorkerFailure,
 )
+from repro.ft.coherence import (
+    ChaosHarness, RecoveryReport, assert_bit_equal, harness_ticks,
+    load_runtime, run_uninjected, save_runtime,
+)
 
-__all__ = ["ElasticPlan", "FailureInjector", "StragglerMonitor",
-           "WorkerFailure"]
+__all__ = ["ChaosHarness", "ElasticPlan", "FailureInjector",
+           "RecoveryReport", "StragglerMonitor", "WorkerFailure",
+           "assert_bit_equal", "harness_ticks", "load_runtime",
+           "run_uninjected", "save_runtime"]

@@ -22,6 +22,8 @@ import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 class WorkerFailure(RuntimeError):
     """Simulated loss of a worker/host (network partition, preemption)."""
@@ -33,18 +35,50 @@ class WorkerFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Raise WorkerFailure at configured steps (each fires once)."""
+    """Raise WorkerFailure at configured steps (each fires once).
 
-    at_steps: Sequence[int] = ()
+    ``at_steps`` entries are either bare steps (``int``) — fire for
+    whichever worker reaches the step first, any worker — or targeted
+    ``(step, worker)`` pairs.  A bare step is stored as ``(step, None)``;
+    callers that don't track workers (``check(step)``) still fire it
+    exactly once, preserving the pre-targeting behavior."""
+
+    at_steps: Sequence = ()
     kind: str = "preemption"
 
     def __post_init__(self):
-        self._pending = set(self.at_steps)
+        self._pending = set()
+        for e in self.at_steps:
+            if isinstance(e, tuple):
+                s, w = e
+                self._pending.add((int(s), None if w is None else int(w)))
+            else:
+                self._pending.add((int(e), None))
 
-    def check(self, step: int, worker: int = 0):
-        if step in self._pending:
-            self._pending.discard(step)
-            raise WorkerFailure(step, worker, self.kind)
+    def check(self, step: int, worker: Optional[int] = None):
+        if not self._pending:
+            return
+        if worker is not None:
+            hit = ((step, worker) if (step, worker) in self._pending
+                   else (step, None) if (step, None) in self._pending
+                   else None)
+        else:
+            # untargeted probe: a bare step fires for worker 0 (the old
+            # behavior); a targeted entry at this step fires for its
+            # worker (lowest id wins when several target the same step)
+            cands = [p for p in self._pending if p[0] == step]
+            if not cands:
+                return
+            bare = [p for p in cands if p[1] is None]
+            hit = bare[0] if bare else min(
+                cands, key=lambda p: p[1])
+        if hit is None:
+            return
+        self._pending.discard(hit)
+        w = hit[1]
+        if w is None:
+            w = worker if worker is not None else 0
+        raise WorkerFailure(step, w, self.kind)
 
 
 class StragglerMonitor:
@@ -91,6 +125,38 @@ class StragglerMonitor:
                 out.append(w)
         self.flagged_total += len(out)
         return out
+
+    # -- snapshot support (ft/coherence.py) -----------------------------
+    def config(self) -> dict:
+        return {"n_workers": self.n, "window": self.window, "k": self.k,
+                "abs_floor_s": self.abs_floor, "patience": self.patience}
+
+    def state_arrays(self) -> dict:
+        """Mutable detection state (windows, streaks, totals) as numpy
+        arrays — the checkpoint payload alongside :meth:`config`."""
+        counts = np.array([len(h) for h in self._hist], np.int64)
+        flat = np.array([d for h in self._hist for d in h], np.float64)
+        return {"hist": flat, "hist_counts": counts,
+                "streak": np.asarray(self._streak, np.int64),
+                "flagged_total": np.array([self.flagged_total], np.int64)}
+
+    @classmethod
+    def from_state(cls, arrays: dict, config: dict) -> "StragglerMonitor":
+        m = cls(int(config["n_workers"]), window=int(config["window"]),
+                k=float(config["k"]),
+                abs_floor_s=float(config["abs_floor_s"]),
+                patience=int(config["patience"]))
+        counts = np.asarray(arrays["hist_counts"], np.int64)
+        flat = np.asarray(arrays["hist"], np.float64)
+        off = 0
+        for w in range(m.n):
+            n = int(counts[w])
+            m._hist[w].extend(float(x) for x in flat[off:off + n])
+            off += n
+        m._streak = [int(x) for x in np.asarray(arrays["streak"],
+                                                np.int64)]
+        m.flagged_total = int(np.asarray(arrays["flagged_total"])[0])
+        return m
 
 
 @dataclasses.dataclass(frozen=True)

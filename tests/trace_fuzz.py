@@ -429,3 +429,88 @@ def crosscheck(seed: int, *, check_ref: bool = True,
         for k, v in runs["batched"].stats.items():
             stats[k] = stats.get(k, 0) + v
     return stats
+
+
+def chaos_trace_params(seed: int) -> Dict:
+    """Chaos-family params: every run carries a seeded message-loss
+    model (nonzero drop rate — an idle ChaosNet would test nothing) and
+    a tight straggler window so barrier flags actually fire."""
+    rng = np.random.default_rng(30_000 + seed)
+    W = int(rng.integers(2, 5))
+    page_words = int(rng.choice([16, 32]))
+    n_words = page_words * int(rng.integers(10, 30))
+    cache_pages = [None, 3, 5, 9][seed % 4]
+    drop = float(rng.choice([0.05, 0.15, 0.3]))
+    return dict(rng=rng, W=W, page_words=page_words, n_words=n_words,
+                cache_pages=cache_pages, proto=PROTOS[seed % 3], drop=drop)
+
+
+def chaos_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
+    """The crash-recovery analogue of :func:`crosscheck`: one seeded
+    program under deterministic message loss, run four ways per backend —
+    loop/batched uninjected baselines (asserted in lockstep: traffic
+    field-for-field, clocks bit-equal, chaos counters identical), then
+    loop/batched under injected worker crashes with barrier-checkpoint
+    recovery (``ft.ChaosHarness``), each asserted bit-equal to its
+    uninjected baseline — traffic, clocks, AND stats, so the replayed
+    suffix provably re-took the same engine paths and retry charges.
+    Returns aggregate counters (crashes, drops, retries, replays …) so
+    the suite can assert no chaos path silently idled."""
+    import tempfile
+
+    from repro.dsm.costmodel import ChaosNet
+    from repro.ft import (ChaosHarness, FailureInjector, StragglerMonitor,
+                          assert_bit_equal, run_uninjected)
+    p = chaos_trace_params(seed)
+    rng = p["rng"]
+    if seed % 2:
+        prog = gen_span_program(rng, p["W"], p["n_words"], p["page_words"],
+                                p["cache_pages"], n_phases=5)
+    else:
+        prog = gen_program(rng, p["W"], p["n_words"], p["page_words"],
+                           n_phases=5)
+    n = p["n_words"]
+    # crash schedule over the tick range: every event ticks exactly once
+    # (harness or internal), so steps in [1, len(prog)] always fire;
+    # half the entries target a specific worker, half are bare steps
+    n_crash = int(rng.integers(1, 3))
+    crash_steps = rng.choice(np.arange(1, len(prog) + 1), size=n_crash,
+                             replace=False)
+    at_steps = [((int(s), int(rng.integers(0, p["W"])))
+                 if rng.random() < 0.5 else int(s)) for s in crash_steps]
+
+    stats: Dict[str, int] = {}
+    for backend in backends:
+        def make_rt():
+            return RegCScaleRuntime(
+                p["W"], page_words=p["page_words"], protocol=p["proto"],
+                prefetch=1, model_mechanism=False,
+                cache_pages=p["cache_pages"], backend=backend,
+                chaos=ChaosNet(seed=seed, drop_rate=p["drop"]),
+                straggler=StragglerMonitor(p["W"], window=4, patience=1))
+
+        base = {d: run_uninjected(make_rt, [n, n], d, prog, apply_event)
+                for d in ("loop", "batched")}
+        ctx = (seed, p["proto"], p["cache_pages"], p["drop"], backend)
+        assert_traffic_equal(base["loop"], base["batched"], ctx)
+        np.testing.assert_array_equal(base["loop"].clock,
+                                      base["batched"].clock,
+                                      err_msg=str(ctx))
+        for k in ("chaos_msgs", "chaos_drops", "chaos_inval_retries"):
+            assert base["loop"].stats[k] == base["batched"].stats[k], \
+                (ctx, k)
+        for d in ("loop", "batched"):
+            with tempfile.TemporaryDirectory() as td:
+                inj = FailureInjector(at_steps=at_steps)
+                rt, rep = ChaosHarness(make_rt, [n, n], d, td, apply_event,
+                                       injector=inj).run(prog)
+            assert rep.n_crashes == n_crash, (ctx, d, at_steps, rep)
+            assert_bit_equal(rt, base[d], (ctx, d))
+            stats["crashes"] = stats.get("crashes", 0) + rep.n_crashes
+            stats["replayed_events"] = (stats.get("replayed_events", 0)
+                                        + rep.n_replayed_events)
+            stats["checkpoints"] = (stats.get("checkpoints", 0)
+                                    + rep.n_checkpoints)
+        for k, v in base["batched"].stats.items():
+            stats[k] = stats.get(k, 0) + v
+    return stats
