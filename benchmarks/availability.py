@@ -1,0 +1,162 @@
+"""Availability under process faults — the cluster bench
+(fig10_availability).
+
+Runs the recovery bench's deterministic phase program on the
+partition-tolerant multi-process runtime (``repro.cluster``): the worker
+axis sharded across 1/2/4 spawned OS processes behind the control plane,
+at W = 16/64/256, each point twice — clean, and with an injected
+mid-phase SIGKILL plus a one-directional link partition (the ``_fault``
+series) recovered in degraded mode.  Measured: end-to-end wall
+throughput (events/s) and p50/p99 barrier-round latency from the control
+plane's real-wall barrier clock, plus checkpoint/replay volume.
+
+Every row carries the exact ``tr_*`` traffic fields, the ``chaos_*`` /
+``straggler_*`` counters, AND the deterministic ``rec_*`` recovery
+counters (detections, kills, partitions, respawns, replayed events,
+composed checkpoints, digest agreement rounds) — all gated
+field-for-field by ``benchmarks.compare``: the committed results PROVE
+the failure paths fired and were recovered, and the bench itself asserts
+every sharded run (clean AND faulted) finishes traffic field-for-field
+and clock bit-equal to the unfailed single-process run — the paper's
+exactness bar held through process death.  Modeled time is identical
+across shard counts and fault variants by construction: real-wall RPC
+retries are accounted in ``rpc_retry_model_s`` (via
+``ChaosNet.backoff_seconds``), never charged to the modeled clocks.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import (SERIES, chaos_fields, print_rows,
+                               write_bench_json, write_csv)
+from benchmarks.recovery import CHAOS_SEED, DROP_RATE, apply_event  # noqa: F401  (apply_event: shard apply_ref target)
+from benchmarks.recovery import gen_program
+from repro.cluster import ClusterRuntime
+from repro.dsm.costmodel import IB_2013
+from repro.ft import FailureInjector
+from repro.ft.coherence import assert_bit_equal, run_uninjected
+
+PAGE_WORDS = 1024
+PAGES_PER_WORKER = 8
+CORES = (16, 64, 256)
+SHARDS = (1, 2, 4)
+RPC_TIMEOUT_S = 0.25
+RPC_ATTEMPTS = 3
+
+
+def _cfg(W: int) -> dict:
+    return dict(n_workers=W, page_words=PAGE_WORDS,
+                protocol=SERIES["samhita"], cache_pages=None,
+                fetch_batch=16, cost=dataclasses.asdict(IB_2013),
+                chaos=dict(seed=CHAOS_SEED, drop_rate=DROP_RATE),
+                straggler=dict(n_workers=W, window=4, k=4.0,
+                               abs_floor_s=1e-4, patience=2))
+
+
+def _fault_schedule(iters: int, n_shards: int):
+    """Two deterministic process faults per faulted run: SIGKILL the
+    last rank mid-iteration (between the phase and span events, NOT at
+    a barrier — so the replay suffix is provably non-empty), then a
+    one-directional reply partition on rank 0 a few events later (on
+    the respawned process itself when n_shards == 1)."""
+    n_events = 3 * iters
+    kill_step = 3 * max(1, iters // 2) + 2          # the span event
+    part_step = min(n_events, kill_step + 3)
+    return [("kill", kill_step, n_shards - 1),
+            ("partition_s2c", part_step, 0)]
+
+
+def availability(iters: int, driver: str, cores=CORES, shards=SHARDS):
+    from repro.cluster.shard import make_runtime
+
+    rows = []
+    for p in cores:
+        n_words = PAGE_WORDS * PAGES_PER_WORKER * p
+        cfg = _cfg(p)
+        prog = gen_program(p, n_words, iters)
+        base = run_uninjected(lambda: make_runtime(cfg), [n_words],
+                              driver, prog, apply_event)
+        for n_shards in shards:
+            for fault in (False, True):
+                inj = (FailureInjector(
+                    cluster_at=_fault_schedule(iters, n_shards))
+                    if fault else None)
+                with tempfile.TemporaryDirectory() as td:
+                    t0 = time.perf_counter()
+                    with ClusterRuntime(
+                            cfg, [n_words], n_shards=n_shards,
+                            driver=driver,
+                            apply_ref=("benchmarks.recovery",
+                                       "apply_event"),
+                            root=td, injector=inj,
+                            rpc_timeout_s=RPC_TIMEOUT_S,
+                            rpc_attempts=RPC_ATTEMPTS) as cluster:
+                        res = cluster.run(prog)
+                    t_wall = time.perf_counter() - t0
+                rep = res.report
+                series = f"samhita_s{n_shards}" + ("_fault" if fault
+                                                   else "")
+                # the exactness bar as a bench invariant: every sharded
+                # run — through SIGKILL and partition — finishes
+                # bit-equal to the unfailed single-process run
+                assert_bit_equal(res, base, (series, p, driver))
+                if fault:
+                    assert rep.kills == 1 and rep.partitions == 1, rep
+                    assert rep.detections == 2, rep
+                else:
+                    assert rep.detections == 0, rep
+                bar_ms = np.asarray(rep.bar_wall_s) * 1e3
+                rows.append({
+                    "figure": "fig10_availability", "series": series,
+                    "p": p, "n": n_words, "driver": driver,
+                    "n_shards": n_shards,
+                    "t_model_s": round(res.time, 6),
+                    "t_wall_s": round(t_wall, 4),
+                    "events_per_s": round(rep.n_events / t_wall, 2),
+                    "bar_p50_ms": round(float(np.percentile(bar_ms, 50)),
+                                        3),
+                    "bar_p99_ms": round(float(np.percentile(bar_ms, 99)),
+                                        3),
+                    "n_events": rep.n_events,
+                    "rpc_retries": rep.rpc_retries,
+                    "rpc_retry_model_s": round(rep.rpc_retry_model_s, 6),
+                    **rep.counters(),
+                    "net_bytes": res.traffic.total_bytes,
+                    **{f"tr_{f.name}": getattr(res.traffic, f.name)
+                       for f in dataclasses.fields(type(res.traffic))},
+                    **chaos_fields(res)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=6,
+                    help="barrier-delimited iterations per point")
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick local subset (W <= 64, shards <= 2).  "
+                         "Missing committed keys routes the output to "
+                         "*.partial.csv, so the committed artifacts stay "
+                         "untouched")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
+    args = ap.parse_args(argv)
+    rows = availability(args.iters, args.driver,
+                        cores=CORES[:2] if args.smoke else CORES,
+                        shards=SHARDS[:2] if args.smoke else SHARDS)
+    write_csv("availability" if args.driver == "batched"
+              else f"availability_{args.driver}", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

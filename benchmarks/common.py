@@ -169,7 +169,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                 **{k: v for k, v in r.items()
                    if k.startswith("tr_") or k.startswith("danger_")
                    or k.startswith("span_") or k.startswith("chaos_")
-                   or k.startswith("straggler_")}})
+                   or k.startswith("straggler_")
+                   or k.startswith("rec_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

@@ -51,7 +51,7 @@ def main(argv=None):
         return args.sections is None or any(
             s in name or any(s in t for t in tags) for s in args.sections)
 
-    from benchmarks import (common, jacobi, lock_contention,
+    from benchmarks import (availability, common, jacobi, lock_contention,
                             molecular_dynamics, recovery, regc_training,
                             roofline, stream_triad)
 
@@ -90,6 +90,14 @@ def main(argv=None):
             (f"Crash recovery (checkpoint/replay) {tag}",
              f"recovery{tag}", False, ("chaos",),
              lambda drv=drv: recovery.main(
+                 ["--iters", str(max(3, iters // 2))] + drv)),
+            # sharded multi-process runtime under injected shard death;
+            # like recovery, a focused run regenerates the exact
+            # committed point set — the CI cluster job redirects its
+            # CSVs with BENCH_OUT (see bench_lock)
+            (f"Availability (sharded cluster, process faults) {tag}",
+             f"availability{tag}", False, ("cluster",),
+             lambda drv=drv: availability.main(
                  ["--iters", str(max(3, iters // 2))] + drv)),
         ]
     sections += [

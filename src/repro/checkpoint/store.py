@@ -11,6 +11,12 @@ Crash-consistency: the manifest rename is the commit point.  A job killed
 mid-write leaves a step directory without MANIFEST.json, which restore
 ignores and ``gc_incomplete`` removes.
 
+Durability: rename alone only orders the commit against *processes* —
+against power loss the shard bytes, the manifest bytes, AND the parent
+directory entries must each reach stable storage, so every save fsyncs
+the tmp file before its rename and the step directory (plus the root,
+which holds the step dir's own entry) after the manifest rename.
+
 Restore *reshards*: leaves are loaded on host and ``jax.device_put`` onto the
 target shardings — which may belong to a different mesh than the one that
 saved (elastic rescale).  Async save snapshots to host memory synchronously
@@ -20,6 +26,7 @@ then async filesystem write).
 from __future__ import annotations
 
 import json
+import os
 import re
 import shutil
 import threading
@@ -45,6 +52,41 @@ def _flat(tree) -> dict:
     jax = _jax()
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return {jax.tree_util.keystr(p): v for p, v in leaves}
+
+
+def _fsync_dir(path: Path):
+    """fsync a *directory*: renames inside it are only durable once the
+    directory's own entry table reaches disk (POSIX leaves them volatile
+    until then — a power-loss after rename can otherwise resurrect the
+    tmp name or lose the committed one)."""
+    fd = os.open(path, getattr(os, "O_DIRECTORY", os.O_RDONLY))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_committed(d: Path, host_flat: Dict[str, np.ndarray],
+                     manifest: dict, host: int):
+    """The shared durable-commit protocol for both save paths: fsync'd
+    tmp-write + rename for the shard, fsync'd tmp-write + rename for the
+    manifest (the commit point), then fsync the step dir (persists both
+    renames) and its parent (persists the step dir's creation)."""
+    shard = d / f"shard_{host:05d}.npz"
+    tmp = d / f".shard_{host:05d}.tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **host_flat)
+        f.flush()
+        os.fsync(f.fileno())
+    tmp.rename(shard)
+    mtmp = d / ".manifest.tmp"
+    with open(mtmp, "w") as f:
+        f.write(json.dumps(manifest, indent=1))
+        f.flush()
+        os.fsync(f.fileno())
+    mtmp.rename(d / _MANIFEST)     # commit point
+    _fsync_dir(d)                  # makes both renames durable
+    _fsync_dir(d.parent)           # makes the step dir itself durable
 
 
 def _step_dir(root: Path, step: int) -> Path:
@@ -80,12 +122,6 @@ def save_checkpoint(root, step: int, tree, *, blocking: bool = True,
             for k, v in host_flat.items()}
 
     def _write():
-        shard = d / f"shard_{host:05d}.npz"
-        tmp = d / f".shard_{host:05d}.tmp.npz"
-        with open(tmp, "wb") as f:
-            np.savez(f, **host_flat)
-            f.flush()
-        tmp.rename(shard)
         manifest = {
             "step": step,
             "time": time.time(),
@@ -93,9 +129,7 @@ def save_checkpoint(root, step: int, tree, *, blocking: bool = True,
             "leaves": spec,
             "extra": extra or {},
         }
-        mtmp = d / (".manifest.tmp")
-        mtmp.write_text(json.dumps(manifest, indent=1))
-        mtmp.rename(d / _MANIFEST)     # commit point
+        _write_committed(d, host_flat, manifest, host)
 
     if blocking:
         _write()
@@ -160,17 +194,9 @@ def save_arrays(root, step: int, arrays: Dict[str, np.ndarray], *,
     host_flat = {k: np.asarray(v) for k, v in arrays.items()}
     spec = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
             for k, v in host_flat.items()}
-    shard = d / f"shard_{host:05d}.npz"
-    tmp = d / f".shard_{host:05d}.tmp.npz"
-    with open(tmp, "wb") as f:
-        np.savez(f, **host_flat)
-        f.flush()
-    tmp.rename(shard)
     manifest = {"step": step, "time": time.time(), "n_hosts": 1,
                 "leaves": spec, "extra": extra or {}}
-    mtmp = d / ".manifest.tmp"
-    mtmp.write_text(json.dumps(manifest, indent=1))
-    mtmp.rename(d / _MANIFEST)     # commit point
+    _write_committed(d, host_flat, manifest, host)
 
 
 def load_arrays(root, step: int) -> "tuple[Dict[str, np.ndarray], dict]":

@@ -534,20 +534,29 @@ class RegionDirectory:
     # snapshot / restore (see DIRECTORY.md "Recovery contract")
     # ------------------------------------------------------------------
 
-    def state_arrays(self) -> Tuple[dict, dict]:
+    def state_arrays(self, rows=None) -> Tuple[dict, dict]:
         """Full plane state as (arrays, meta) — everything needed to
         rebuild a row-for-row, cell-for-cell clone.  Planes are stored at
         their current capacity; the derived coverage caches
-        (``_sorted_bases``/``_sorted_ends``) are recomputed on restore."""
-        arrays = {"base": self.base.copy(), "length": self.length.copy(),
-                  "shift": self.shift.copy(), "valid": self.valid.copy(),
-                  "dirty": self.dirty.copy(),
-                  "dirty_lo": self.dirty_lo.copy(),
-                  "dirty_hi": self.dirty_hi.copy()}
+        (``_sorted_bases``/``_sorted_ends``) are recomputed on restore.
+
+        Every array here is worker-major (first dim ``W``), so ``rows``
+        (a slice or index array) restricts the payload to a shard's
+        worker slice — the cluster checkpoint path; ``meta`` still
+        records the full ``W`` (a slice is a view of the whole table,
+        not a smaller directory)."""
+        sl = slice(None) if rows is None else rows
+        arrays = {"base": self.base[sl].copy(),
+                  "length": self.length[sl].copy(),
+                  "shift": self.shift[sl].copy(),
+                  "valid": self.valid[sl].copy(),
+                  "dirty": self.dirty[sl].copy(),
+                  "dirty_lo": self.dirty_lo[sl].copy(),
+                  "dirty_hi": self.dirty_hi[sl].copy()}
         for name in ("wprot", "touch", "incache", "span_lo", "span_hi"):
             arr = getattr(self, name)
             if arr is not None:
-                arrays[name] = arr.copy()
+                arrays[name] = arr[sl].copy()
         meta = {"W": self.W, "region": self.region,
                 "page_lo": self.page_lo, "page_hi": self.page_hi,
                 "cap": self.cap, "maybe_dirty": bool(self.maybe_dirty),

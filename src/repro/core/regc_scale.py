@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import re
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -179,7 +180,8 @@ class RegCScaleRuntime:
                       "danger_shared_ops": 0,
                       "span_all_calls": 0, "span_serial_calls": 0,
                       "span_groups_vec": 0, "span_workers_vec": 0,
-                      "span_serial_workers": 0}
+                      "span_serial_workers": 0,
+                      "span_backlog_serial": 0}
         # fault-tolerance wiring (see ft/coherence.py and DIRECTORY.md
         # "Recovery contract"): ``chaos`` is a dsm.costmodel.ChaosNet
         # message-loss model (one per-worker tick per clock-charged
@@ -2121,9 +2123,18 @@ class RegCScaleRuntime:
             voff = lk.log.voff
             sizes = np.diff(np.asarray(voff[v_min:v0 + 1], np.int64))
             if npend == 0 or not (sizes == npend).all():
+                # mixed-shape backlog: some member must replay versions
+                # whose interval counts differ from this pass's — per-
+                # member pending sets diverge (see DIRECTORY.md "Why the
+                # mixed-payload backlog stays serial")
+                self.stats["span_backlog_serial"] += 1
                 return False
             if not lk.log.payload_matches(v_min, v0, rel_pages, rel_los,
                                           rel_his):
+                # mixed-payload backlog: right shape, different pages —
+                # coalesced pendings are not THIS payload, so the uniform
+                # (G, P) replay algebra below does not apply
+                self.stats["span_backlog_serial"] += 1
                 return False
 
         # ---- replay effects --------------------------------------------
@@ -2470,7 +2481,8 @@ class RegCScaleRuntime:
     # "Recovery contract")
     # ------------------------------------------------------------------
 
-    def snapshot(self) -> Tuple[dict, dict]:
+    def snapshot(self, rows: "Optional[Tuple[int, int]]" = None
+                 ) -> Tuple[dict, dict]:
         """Serialize the COMPLETE runtime state as (arrays, meta).
 
         Only legal at a consistent cut — no open spans, no unresolved
@@ -2481,7 +2493,17 @@ class RegCScaleRuntime:
         :meth:`from_snapshot` rebuilds a runtime whose every subsequent
         event is bit-identical to the original's.  ``arrays`` holds only
         numpy arrays (npz-shardable, no jax); ``meta`` is
-        JSON-serializable."""
+        JSON-serializable.
+
+        ``rows=(w_lo, w_hi)`` restricts the worker-major payload to one
+        shard's contiguous worker slice (directory plane rows, clocks,
+        LRU queues, lock ``seen`` vectors, per-worker chaos/straggler
+        counters); worker-independent state (lock logs, reduction
+        results, global counters) is carried in full by every slice —
+        :meth:`compose_snapshots` reassembles the slices into a full
+        snapshot and *asserts* the replicated globals agree bit-for-bit
+        (the cluster's divergence check).  A slice records
+        ``meta["slice"]`` and cannot be restored directly."""
         assert not any(self.spans), "snapshot inside an open span"
         assert not self._reductions, "snapshot with unresolved reductions"
         assert self._danger_rec is None, "snapshot during danger recording"
@@ -2556,6 +2578,11 @@ class RegCScaleRuntime:
             "straggler": (None if self.straggler is None
                           else self.straggler.config()),
         }
+        if rows is not None:
+            w_lo, w_hi = int(rows[0]), int(rows[1])
+            assert 0 <= w_lo < w_hi <= self.W, rows
+            arrays = _slice_snapshot_arrays(arrays, w_lo, w_hi)
+            meta["slice"] = [w_lo, w_hi]
         return arrays, meta
 
     @classmethod
@@ -2566,6 +2593,8 @@ class RegCScaleRuntime:
         directory planes, lock logs, LRU order, chaos counters.  Pass a
         (possibly already partially fired) ``injector`` to rearm failure
         injection on the replayed suffix."""
+        assert meta.get("slice") is None, (
+            "partial (shard-slice) snapshot: compose_snapshots first")
         cfg = meta["config"]
         chaos = None
         if meta.get("chaos") is not None:
@@ -2653,9 +2682,100 @@ class RegCScaleRuntime:
                 np.asarray(arrays["red_vals"], np.float64))}
         return rt
 
+    @classmethod
+    def compose_snapshots(cls, parts) -> Tuple[dict, dict]:
+        """Reassemble shard-slice snapshots (``snapshot(rows=...)``
+        output, any order) into one full (arrays, meta) restorable by
+        :meth:`from_snapshot`.
+
+        The slices must tile ``[0, W)`` exactly.  Worker-major arrays are
+        concatenated in rank order; the replicated globals (lock logs,
+        reduction results, global chaos/straggler counters, traffic,
+        stats, configs) must agree bit-for-bit across every slice — a
+        mismatch means the shard replicas diverged, which the cluster
+        treats as a hard protocol error, not something to paper over."""
+        parts = sorted(parts, key=lambda p: p[1]["slice"][0])
+        assert parts, "compose_snapshots of nothing"
+        metas = [m for _a, m in parts]
+        W = int(metas[0]["config"]["n_workers"])
+        bounds = [tuple(m["slice"]) for m in metas]
+        want = 0
+        for lo, hi in bounds:
+            assert lo == want, f"slices do not tile: gap before {lo}"
+            want = hi
+        assert want == W, f"slices cover [0, {want}) of {W} workers"
+        ref_meta = {k: v for k, v in metas[0].items() if k != "slice"}
+        for m in metas[1:]:
+            other = {k: v for k, v in m.items() if k != "slice"}
+            assert other == ref_meta, "shard snapshot metas diverged"
+        keys = set(parts[0][0])
+        for a, _m in parts[1:]:
+            assert set(a) == keys, "shard snapshot keys diverged"
+        out: Dict[str, np.ndarray] = {}
+        for k in keys:
+            vals = [a[k] for a, _m in parts]
+            if _snapshot_key_kind(k) == "global":
+                for v in vals[1:]:
+                    assert (v.dtype == vals[0].dtype
+                            and np.array_equal(v, vals[0])), (
+                        f"replicated snapshot key {k!r} diverged "
+                        "across shards")
+                out[k] = vals[0].copy()
+            else:
+                out[k] = np.concatenate(vals, axis=0)
+        return out, ref_meta
+
     def gas_for_region(self, region: int, n_elems: int) -> GasArray:
         """Handle for an allocation that already exists in the directory
         (the restore-side replacement for ``alloc``: snapshots persist
         regions, not the caller's GasArray handles)."""
         return GasArray(self._region_starts[region], n_elems,
                         self.page_words)
+
+
+# ---------------------------------------------------------------------------
+# shard-slice snapshot plumbing (repro.cluster; DIRECTORY.md "Cluster
+# contract").  Snapshot keys fall into three kinds:
+#   rows   — worker-major, first dim W: sliced per shard, concatenated
+#            back in rank order by compose_snapshots
+#   flat   — variable-length per-worker payloads stored as (flat, counts)
+#            pairs: sliced by the counts' prefix sums, concatenated back
+#   global — worker-independent replicated state (lock logs/version
+#            clocks, reduction results, global chaos/straggler totals):
+#            carried whole by every slice, asserted bit-equal on compose
+# ---------------------------------------------------------------------------
+
+_SNAP_ROW_KEYS = frozenset({
+    "clock", "bar_clock0", "resident", "q_degraded",
+    "lru_counts", "dirty_region_counts",
+    "chaos_msg_seq", "strag_hist_counts", "strag_streak"})
+_SNAP_FLAT_COUNTS = {"lru_entries": "lru_counts",
+                     "dirty_region_flat": "dirty_region_counts",
+                     "strag_hist": "strag_hist_counts"}
+_SNAP_DIR_RE = re.compile(r"^d\d{5}_")       # directory planes: all (W, ...)
+_SNAP_SEEN_RE = re.compile(r"^lk\d{5}_seen$")  # per-worker lock version seen
+
+
+def _snapshot_key_kind(key: str) -> str:
+    if key in _SNAP_ROW_KEYS or _SNAP_DIR_RE.match(key) \
+            or _SNAP_SEEN_RE.match(key):
+        return "rows"
+    if key in _SNAP_FLAT_COUNTS:
+        return "flat"
+    return "global"
+
+
+def _slice_snapshot_arrays(arrays: Dict[str, np.ndarray], w_lo: int,
+                           w_hi: int) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for k, v in arrays.items():
+        kind = _snapshot_key_kind(k)
+        if kind == "rows":
+            out[k] = v[w_lo:w_hi].copy()
+        elif kind == "flat":
+            counts = np.asarray(arrays[_SNAP_FLAT_COUNTS[k]], np.int64)
+            off = np.concatenate([[0], np.cumsum(counts)])
+            out[k] = v[int(off[w_lo]):int(off[w_hi])].copy()
+        else:
+            out[k] = v.copy()
+    return out

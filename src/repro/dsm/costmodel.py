@@ -110,9 +110,13 @@ class ChaosNet:
 
     A dropped message is retransmitted after ``timeout_s`` with
     exponential backoff: r consecutive drops charge
-    ``sum_{k<r} timeout_s * backoff**k`` extra seconds (capped at
-    ``max_retries`` levels — the last retransmission always succeeds, so
-    the protocol outcome and traffic counters never change, only time).
+    ``sum_{k<r} timeout_s * backoff**min(k, backoff_cap)`` extra seconds
+    (capped at ``max_retries`` levels — the last retransmission always
+    succeeds, so the protocol outcome and traffic counters never change,
+    only time).  ``backoff_cap`` bounds the per-level exponent so deep
+    retry chains (large ``max_retries``) charge linearly past the cap
+    instead of geometrically without bound; the default cap (6) is above
+    the default chain depth, so stock configurations are unchanged.
 
     Invalidation messages charge no clock in the base model, so their
     losses are accounted on a separate GLOBAL sequence counter as
@@ -123,14 +127,16 @@ class ChaosNet:
 
     def __init__(self, *, seed: int = 0, drop_rate: float = 0.05,
                  timeout_s: float = 5e-6, backoff: float = 2.0,
-                 max_retries: int = 3):
+                 max_retries: int = 3, backoff_cap: int = 6):
         assert 0.0 <= drop_rate < 1.0, drop_rate
         assert max_retries >= 1, max_retries
+        assert backoff_cap >= 0, backoff_cap
         self.seed = int(seed)
         self.drop_rate = float(drop_rate)
         self.timeout_s = float(timeout_s)
         self.backoff = float(backoff)
         self.max_retries = int(max_retries)
+        self.backoff_cap = int(backoff_cap)
         self.W = 0
         self.msg_seq = np.zeros(0, np.uint64)       # per-worker event count
         self.inval_seq = np.zeros(1, np.uint64)     # global inval msg count
@@ -152,7 +158,8 @@ class ChaosNet:
     def config(self) -> dict:
         return {"seed": self.seed, "drop_rate": self.drop_rate,
                 "timeout_s": self.timeout_s, "backoff": self.backoff,
-                "max_retries": self.max_retries}
+                "max_retries": self.max_retries,
+                "backoff_cap": self.backoff_cap}
 
     def state_arrays(self) -> dict:
         return {"chaos_msg_seq": self.msg_seq.copy(),
@@ -205,14 +212,26 @@ class ChaosNet:
         ndrop = int(r.sum())
         if ndrop:
             st["chaos_drops"] = st.get("chaos_drops", 0) + ndrop
-        # sum_{k<r} timeout * backoff^k, elementwise (r <= max_retries)
+        # sum_{k<r} timeout * backoff^min(k, cap), elementwise
+        # (r <= max_retries; the cap keeps deep chains linear past it)
         extra = np.zeros(rows.size, np.float64)
         for k in range(self.max_retries):
             m = r > k
             if not m.any():
                 break
-            extra[m] += self.timeout_s * (self.backoff ** k)
+            extra[m] += self.timeout_s * (
+                self.backoff ** min(k, self.backoff_cap))
         return extra
+
+    @staticmethod
+    def backoff_seconds(timeout_s: float, backoff: float, levels: int,
+                        cap: int = 6) -> float:
+        """The retry charge for ``levels`` consecutive timeouts — the same
+        capped-exponent term :meth:`retry_rows` charges per element.  The
+        cluster control plane uses this to account real RPC retries in
+        its availability report without touching the modeled clocks."""
+        return float(sum(timeout_s * backoff ** min(k, cap)
+                         for k in range(levels)))
 
     def retry1(self, w: int) -> float:
         """Scalar path: delegates to :meth:`retry_rows` on a 1-element

@@ -138,6 +138,49 @@ class ChaosHarness:
         return rt, rep
 
 
+class ClusterChaosHarness:
+    """:class:`ChaosHarness`'s process-level sibling: run a trace program
+    on the sharded multi-process runtime (``repro.cluster``) under
+    *process* faults — SIGKILL and one-directional link partitions from
+    ``FailureInjector.cluster_at`` — with the same contract: recover
+    through the last barrier checkpoint and finish traffic
+    field-for-field and clock bit-equal to the unfailed single-process
+    run.  The control plane performs detection/quarantine/re-shard
+    itself; this wrapper only gives tests the familiar
+    construct-run-report shape (and keeps ``repro.cluster`` a lazy
+    import so the ft module stays importable everywhere)."""
+
+    def __init__(self, cfg: dict, gas_words: Sequence[int], driver: str,
+                 root, apply_ref: "tuple[str, str]", *, n_shards: int,
+                 injector=None, recovery: str = "respawn",
+                 rpc_timeout_s: float = 0.25, rpc_attempts: int = 4):
+        self.cfg = dict(cfg)
+        self.gas_words = list(gas_words)
+        self.driver = driver
+        self.root = root
+        self.apply_ref = tuple(apply_ref)
+        self.n_shards = int(n_shards)
+        self.injector = injector
+        self.recovery = recovery
+        self.rpc_timeout_s = float(rpc_timeout_s)
+        self.rpc_attempts = int(rpc_attempts)
+
+    def run(self, prog):
+        """Returns ``(ClusterResult, ClusterReport, digests)`` where
+        ``digests`` maps event index -> the digest every shard agreed
+        on (the lockstep trace a single-process run must reproduce)."""
+        from repro.cluster.control import ClusterRuntime
+        with ClusterRuntime(self.cfg, self.gas_words,
+                            n_shards=self.n_shards, driver=self.driver,
+                            apply_ref=self.apply_ref, root=self.root,
+                            recovery=self.recovery,
+                            injector=self.injector,
+                            rpc_timeout_s=self.rpc_timeout_s,
+                            rpc_attempts=self.rpc_attempts) as cluster:
+            result = cluster.run(prog)
+            return result, result.report, dict(cluster.digests)
+
+
 def run_uninjected(make_rt: Callable[[], RegCScaleRuntime],
                    gas_words: Sequence[int], driver: str, prog,
                    apply_event: Callable) -> RegCScaleRuntime:

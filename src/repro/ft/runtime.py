@@ -41,10 +41,22 @@ class FailureInjector:
     whichever worker reaches the step first, any worker — or targeted
     ``(step, worker)`` pairs.  A bare step is stored as ``(step, None)``;
     callers that don't track workers (``check(step)``) still fire it
-    exactly once, preserving the pre-targeting behavior."""
+    exactly once, preserving the pre-targeting behavior.
+
+    ``cluster_at`` carries *process-level* faults for the sharded runtime
+    (``repro.cluster``): ``(kind, step, rank)`` entries where kind is
+    ``"kill"`` (SIGKILL the shard process), ``"partition_c2s"`` (drop the
+    control->shard link direction) or ``"partition_s2c"`` (drop the
+    shard->control direction).  These do not raise — the control plane
+    polls :meth:`cluster_actions` at the top of each event round and
+    *performs* the fault, then must detect and recover from it through
+    its own membership machinery.  Each entry fires once."""
 
     at_steps: Sequence = ()
     kind: str = "preemption"
+    cluster_at: Sequence = ()
+
+    CLUSTER_KINDS = ("kill", "partition_c2s", "partition_s2c")
 
     def __post_init__(self):
         self._pending = set()
@@ -54,6 +66,17 @@ class FailureInjector:
                 self._pending.add((int(s), None if w is None else int(w)))
             else:
                 self._pending.add((int(e), None))
+        self._cluster_pending = set()
+        for kind, step, rank in self.cluster_at:
+            assert kind in self.CLUSTER_KINDS, kind
+            self._cluster_pending.add((str(kind), int(step), int(rank)))
+
+    def cluster_actions(self, step: int) -> List[Tuple[str, int]]:
+        """Fire-once ``(kind, rank)`` process faults scheduled for
+        ``step`` (sorted for determinism)."""
+        hits = sorted(p for p in self._cluster_pending if p[1] == step)
+        self._cluster_pending -= set(hits)
+        return [(k, r) for k, _s, r in hits]
 
     def check(self, step: int, worker: Optional[int] = None):
         if not self._pending:
@@ -79,6 +102,22 @@ class FailureInjector:
         if w is None:
             w = worker if worker is not None else 0
         raise WorkerFailure(step, w, self.kind)
+
+
+def mad_threshold(samples: Sequence[float], k: float,
+                  floor: float) -> float:
+    """Robust outlier threshold ``median + k * MAD`` over ``samples``,
+    guarded against degenerate windows: with fewer than 2 samples there
+    is no spread to estimate, so the fallback is ``floor`` (infinite
+    when no floor is given) rather than a threshold derived from a
+    meaningless MAD of 0.  Shared by :class:`StragglerMonitor` (barrier
+    walls) and the cluster heartbeat detector (RPC latencies)."""
+    xs = [float(x) for x in samples]
+    if len(xs) < 2:
+        return float(floor) if floor > 0 else math.inf
+    med = StragglerMonitor._median(xs)
+    mad = StragglerMonitor._median([abs(x - med) for x in xs]) or 1e-12
+    return med + k * mad
 
 
 class StragglerMonitor:
@@ -115,11 +154,13 @@ class StragglerMonitor:
         pool = [d for h in self._hist for d in h]
         if len(pool) < max(8, self.n * 2):
             return []
-        med = self._median(pool)
-        mad = self._median([abs(d - med) for d in pool]) or 1e-12
+        # mad_threshold carries the degenerate-window guard (<2 samples
+        # -> no spread estimate); unreachable through the warm-up gate
+        # above, but direct callers with window=1 configs hit it
+        thresh = mad_threshold(pool, self.k, self.abs_floor)
         out = []
         for w, d in enumerate(durations_s):
-            slow = d > med + self.k * mad and d > self.abs_floor
+            slow = d > thresh and d > self.abs_floor
             self._streak[w] = self._streak[w] + 1 if slow else 0
             if self._streak[w] >= self.patience:
                 out.append(w)

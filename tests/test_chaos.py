@@ -150,3 +150,72 @@ def test_straggler_monitor_state_roundtrip():
         d[2] += 5e-3
         assert a.observe(d.copy()) == b.observe(d.copy())
     assert a.flagged_total == b.flagged_total > 0
+
+
+def test_chaosnet_backoff_cap_exact_charge():
+    """The cap bounds the per-level exponent: with every level forced
+    to drop, each element exhausts all max_retries levels, so the
+    charge is exactly sum_{k<R} timeout * backoff**min(k, cap)."""
+    def charge(cap):
+        net = ChaosNet(seed=0, drop_rate=0.5, timeout_s=1.0,
+                       backoff=2.0, max_retries=10, backoff_cap=cap)
+        net.bind(3, {})
+        net._dropped = lambda lane, seq, level: np.ones(lane.shape, bool)
+        return net.retry_rows(np.arange(3))
+
+    # cap=3: 1+2+4+8 then six more capped 8s = 63
+    np.testing.assert_array_equal(charge(3), np.full(3, 63.0))
+    # default cap=6: 1+2+4+8+16+32+64 then three more 64s = 319
+    np.testing.assert_array_equal(charge(6), np.full(3, 319.0))
+    # cap=0: flat retransmission, 10 * timeout
+    np.testing.assert_array_equal(charge(0), np.full(3, 10.0))
+
+
+def test_chaosnet_default_cap_never_binds_stock_config():
+    """Stock configs (max_retries=3 < cap=6) charge exactly the uncapped
+    geometric sum — committed benches and checkpoints are unchanged."""
+    assert ChaosNet().config()["backoff_cap"] == 6
+    net = ChaosNet(seed=0, drop_rate=0.5, timeout_s=1.0, backoff=2.0,
+                   max_retries=3)
+    net.bind(2, {})
+    net._dropped = lambda lane, seq, level: np.ones(lane.shape, bool)
+    np.testing.assert_array_equal(net.retry_rows(np.arange(2)),
+                                  np.full(2, 7.0))   # 1 + 2 + 4
+
+
+def test_chaosnet_backoff_seconds_matches_retry_charge():
+    """The static helper the cluster control plane charges real RPC
+    retries through is the same capped term retry_rows applies."""
+    assert ChaosNet.backoff_seconds(1.0, 2.0, 0) == 0.0
+    assert ChaosNet.backoff_seconds(1.0, 2.0, 10, cap=3) == 63.0
+    assert ChaosNet.backoff_seconds(1.0, 2.0, 10, cap=6) == 319.0
+    net = ChaosNet(seed=0, drop_rate=0.5, timeout_s=0.25, backoff=3.0,
+                   max_retries=5, backoff_cap=2)
+    net.bind(1, {})
+    net._dropped = lambda lane, seq, level: np.ones(lane.shape, bool)
+    assert float(net.retry_rows(np.array([0]))[0]) == \
+        ChaosNet.backoff_seconds(0.25, 3.0, 5, cap=2)
+
+
+def test_mad_threshold_degenerate_window_guard():
+    from repro.ft.runtime import mad_threshold
+    import math
+    # <2 samples: no spread to estimate -> floor (inf with no floor)
+    assert mad_threshold([], 4.0, 0.5) == 0.5
+    assert mad_threshold([0.3], 4.0, 0.5) == 0.5
+    assert mad_threshold([], 4.0, 0.0) == math.inf
+    assert mad_threshold([0.3], 4.0, 0.0) == math.inf
+    # healthy window: median + k * MAD
+    assert mad_threshold([1.0, 2.0, 3.0], 3.0, 0.0) == 2.0 + 3.0 * 1.0
+    # zero-spread window: MAD floors at epsilon, not 0
+    t = mad_threshold([2.0] * 9, 4.0, 0.0)
+    assert 2.0 < t <= 2.0 + 4e-12
+
+
+def test_straggler_monitor_tiny_window_no_flags():
+    """A window=1 monitor (pool below the warm-up gate) must neither
+    raise nor flag — the degenerate guard in action end-to-end."""
+    m = StragglerMonitor(1, window=1, k=4.0, patience=1)
+    for d in (1e-3, 5.0, 1e-3):
+        assert m.observe([d]) == []
+    assert m.flagged_total == 0

@@ -1,0 +1,277 @@
+"""Partition-tolerant cluster runtime (``repro.cluster``): trace-fuzz
+corpus plus deterministic fault scenarios and unit oracles.
+
+The fuzz family (``trace_fuzz.cluster_crosscheck``) runs every seeded
+program sharded across 2-4 spawned OS processes and asserts the cluster
+contract on every trace: the sharded run finishes traffic
+field-for-field, clock bit-equal, and stats-identical to the unfailed
+single-process run — in LOCKSTEP (every round's cross-shard agreed
+digest equals the baseline's state digest at that event) — both clean
+and under injected process faults (mid-phase SIGKILL, one-directional
+link partitions in either direction) with degraded-mode recovery in
+both flavours (respawn-and-replay, rebind-to-survivor).
+
+The aggregate counters guard against silently-idle fault paths: kills,
+both partition directions, detections, respawns, rebinds, and replayed
+events must all fire across the corpus.
+"""
+import numpy as np
+import pytest
+
+import trace_fuzz
+from repro.cluster import (ClusterRuntime, HeartbeatDetector,
+                           MembershipTable, ShardError, ShardState,
+                           make_runtime, state_digest)
+from repro.core.regc_scale import RegCScaleRuntime
+from repro.ft import FailureInjector
+from repro.ft.coherence import assert_bit_equal, run_uninjected
+
+N_CLUSTER_TRACES = 12
+
+
+def test_cluster_fuzz_traces_recovery_exact():
+    agg = {}
+    for seed in range(N_CLUSTER_TRACES):
+        stats = trace_fuzz.cluster_crosscheck(seed)
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    # every fault class must actually be PERFORMED (not merely
+    # scheduled) somewhere in the corpus, and detected + recovered
+    assert agg["performed_kill"] > 0, agg
+    assert agg["performed_partition_c2s"] > 0, agg
+    assert agg["performed_partition_s2c"] > 0, agg
+    assert agg["rec_kills"] > 0, agg
+    assert agg["rec_partitions"] > 0, agg
+    assert agg["rec_detections"] >= (agg["performed_kill"]
+                                     + agg["performed_partition_c2s"]
+                                     + agg["performed_partition_s2c"]), agg
+    # both degraded-recovery modes fire
+    assert agg["rec_respawns"] > 0, agg
+    assert agg["rec_rebinds"] > 0, agg
+    assert agg["rec_replayed_events"] > 0, agg
+    # partitions are detected by deadline+retry, never silently eaten
+    assert agg["rpc_retries"] > 0, agg
+    # every round reaches cross-shard digest agreement; every barrier
+    # cut a composed checkpoint
+    assert agg["rec_digest_rounds"] > 4 * N_CLUSTER_TRACES, agg
+    assert agg["rec_checkpoints"] > 2 * N_CLUSTER_TRACES, agg
+    # the sharded corpus crosses the engine's chaos + span paths too
+    assert agg["chaos_msgs"] > 0, agg
+    assert agg["chaos_drops"] > 0, agg
+    assert agg["span_all_calls"] > 0, agg
+    assert agg["straggler_checks"] > 0, agg
+
+
+def test_cluster_fuzz_backends_agree():
+    """The sharded runtime on the pallas directory backend must hold the
+    same lockstep + recovery contract (shard processes import jax)."""
+    pytest.importorskip("jax")
+    for seed in (0, 3):
+        trace_fuzz.cluster_crosscheck(seed, backends=("numpy", "pallas"))
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault scenarios
+# ---------------------------------------------------------------------------
+
+_W = 4
+_PAGE = 16
+_NW = _PAGE * 30
+
+
+def _cfg():
+    return dict(n_workers=_W, page_words=_PAGE, protocol="fine",
+                cache_pages=6, chaos=dict(seed=3, drop_rate=0.1),
+                straggler=None)
+
+
+def _prog():
+    rng = np.random.default_rng(1)
+    return trace_fuzz.gen_span_program(rng, _W, _NW, _PAGE, 6, n_phases=6)
+
+
+def _baseline(prog):
+    return run_uninjected(lambda: make_runtime(_cfg()), [_NW, _NW // 2],
+                          "batched", prog, trace_fuzz.apply_event)
+
+
+def _cluster(prog, root, injector=None, recovery="respawn"):
+    with ClusterRuntime(_cfg(), [_NW, _NW // 2], n_shards=2,
+                        driver="batched",
+                        apply_ref=("trace_fuzz", "apply_event"),
+                        root=root, injector=injector, recovery=recovery,
+                        rpc_timeout_s=0.15, rpc_attempts=3) as cl:
+        res = cl.run(prog)
+        return res, dict(cl.digests)
+
+
+def test_cluster_clean_lockstep(tmp_path):
+    prog = _prog()
+    base = _baseline(prog)
+    res, digests = _cluster(prog, tmp_path)
+    assert_bit_equal(res, base, "clean")
+    assert res.report.detections == 0
+    assert res.report.digest_rounds == len(prog)
+    # re-derive the baseline digest trace and hold it to lockstep
+    rt = make_runtime(_cfg())
+    gas = [rt.alloc(_NW), rt.alloc(_NW // 2)]
+    for i, ev in enumerate(prog):
+        from repro.ft.coherence import harness_ticks
+        if harness_ticks(ev, "batched"):
+            rt.chaos_tick()
+        trace_fuzz.apply_event(rt, ev, gas, "batched")
+        assert digests[i] == state_digest(rt), (i, ev)
+
+
+def test_cluster_sigkill_midphase_recovers_bit_equal(tmp_path):
+    """SIGKILL a shard between two phase events (mid-phase, not at a
+    barrier): quarantine, respawn from the last barrier checkpoint,
+    replay the suffix, finish bit-equal."""
+    prog = _prog()
+    base = _baseline(prog)
+    inj = FailureInjector(cluster_at=[("kill", 5, 1)])
+    res, _ = _cluster(prog, tmp_path, injector=inj)
+    assert_bit_equal(res, base, "kill")
+    c = res.report.counters()
+    assert c["rec_kills"] == 1 and c["rec_detections"] == 1, c
+    assert c["rec_respawns"] == 1, c
+
+
+@pytest.mark.parametrize("direction", ["partition_c2s", "partition_s2c"])
+@pytest.mark.parametrize("mode", ["respawn", "rebind"])
+def test_cluster_partition_one_direction_recovers(tmp_path, direction,
+                                                  mode):
+    """A one-directional link partition (requests eaten, or replies
+    eaten) must be detected by deadline + backoff-retry exhaustion,
+    the partitioned-but-healthy process fenced, and the run recovered
+    bit-equal in BOTH degraded modes."""
+    prog = _prog()
+    base = _baseline(prog)
+    inj = FailureInjector(cluster_at=[(direction, 7, 0)])
+    res, _ = _cluster(prog, tmp_path, injector=inj, recovery=mode)
+    assert_bit_equal(res, base, (direction, mode))
+    c = res.report.counters()
+    assert c["rec_partitions"] == 1 and c["rec_detections"] == 1, c
+    # the deadline chain retried before declaring the shard dead
+    assert res.report.rpc_retries >= 2, res.report
+    if mode == "rebind":
+        assert c["rec_rebinds"] == 1 and c["rec_respawns"] == 0, c
+    else:
+        assert c["rec_respawns"] == 1, c
+
+
+def test_cluster_shard_error_propagates(tmp_path):
+    """A shard-side exception (not a death) surfaces as ShardError with
+    the remote traceback — never silently swallowed or retried."""
+    prog = [("phase",)]                    # malformed: unpack raises
+    with pytest.raises(ShardError):
+        _cluster(prog, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# slice snapshots: the checkpoint fan-out building block
+# ---------------------------------------------------------------------------
+
+def _run_some(seed=2):
+    p = trace_fuzz.cluster_trace_params(seed)
+    rng = p["rng"]
+    rt = RegCScaleRuntime(p["W"], page_words=p["page_words"],
+                          protocol=p["proto"],
+                          cache_pages=p["cache_pages"])
+    gas = [rt.alloc(p["n_words"]), rt.alloc(p["n_words"])]
+    prog = trace_fuzz.gen_span_program(rng, p["W"], p["n_words"],
+                                       p["page_words"], p["cache_pages"],
+                                       n_phases=4)
+    trace_fuzz.run_program(rt, prog, gas, "batched")
+    return rt, p["W"]
+
+
+def test_snapshot_slice_compose_roundtrip():
+    """snapshot(rows=...) slices + compose_snapshots must reassemble
+    the exact full snapshot — per-key bit-equality, meta included."""
+    rt, W = _run_some()
+    full_arrays, full_meta = rt.snapshot()
+    cut = W // 2
+    parts = [rt.snapshot(rows=(0, cut)), rt.snapshot(rows=(cut, W))]
+    arrays, meta = RegCScaleRuntime.compose_snapshots(parts)
+    assert meta == full_meta
+    assert set(arrays) == set(full_arrays)
+    for k in full_arrays:
+        np.testing.assert_array_equal(arrays[k], full_arrays[k],
+                                      err_msg=k)
+    rt2 = RegCScaleRuntime.from_snapshot(arrays, meta)
+    assert_bit_equal(rt2, rt, "compose-roundtrip")
+
+
+def test_snapshot_slices_must_tile_worker_axis():
+    rt, W = _run_some()
+    with pytest.raises(AssertionError):
+        RegCScaleRuntime.compose_snapshots(
+            [rt.snapshot(rows=(0, 1)), rt.snapshot(rows=(2, W))])
+
+
+def test_from_snapshot_refuses_partial_slice():
+    """A single shard's slice is NOT a restorable checkpoint — only the
+    composed full-width snapshot is."""
+    rt, W = _run_some()
+    arrays, meta = rt.snapshot(rows=(0, W // 2))
+    assert meta["slice"] == [0, W // 2]
+    with pytest.raises(AssertionError):
+        RegCScaleRuntime.from_snapshot(arrays, meta)
+
+
+# ---------------------------------------------------------------------------
+# membership + failure detection units
+# ---------------------------------------------------------------------------
+
+def test_membership_rebind_and_owners():
+    t = MembershipTable()
+    t.add(0, 100, 0, 2)
+    t.add(1, 101, 2, 4)
+    t.mark(0, ShardState.ALIVE)
+    t.mark(1, ShardState.ALIVE)
+    assert t.owners() == [(0, 2, 0), (2, 4, 1)]
+    assert t.alive_ranks() == [0, 1]
+    t.mark(1, ShardState.DEAD)
+    assert t.alive_ranks() == [0]
+    t.rebind(1, 0)
+    t.mark(1, ShardState.QUARANTINED)
+    # survivor now serves the whole axis; the dead rank owns nothing
+    assert t.owners() == [(0, 2, 0), (2, 4, 0)]
+
+
+def test_membership_reincarnation_restores_home_slice():
+    t = MembershipTable()
+    t.add(0, 100, 0, 2)
+    t.add(1, 101, 2, 4)
+    t.mark(1, ShardState.DEAD)
+    t.rebind(1, 0)
+    t.reincarnate(1, 202)
+    assert t.records[1].incarnation == 1
+    assert t.records[1].pid == 202
+    assert t.state(1) == ShardState.JOINING
+    t.mark(0, ShardState.ALIVE)
+    t.mark(1, ShardState.ALIVE)
+    # rebind had stacked rank 1's home slice onto rank 0; the
+    # reincarnation reclaims it — ownership never double-counts a row
+    assert t.owners() == [(0, 2, 0), (2, 4, 1)]
+
+
+def test_heartbeat_detector_degenerate_window_uses_floor():
+    d = HeartbeatDetector(floor_s=0.25, k=6.0)
+    assert d.timeout_s() == 0.25          # cold start
+    d.observe(0.004)
+    assert d.timeout_s() == 0.25          # single sample: still floor
+    assert d.n_samples() == 1
+
+
+def test_heartbeat_detector_adapts_but_never_below_floor():
+    d = HeartbeatDetector(floor_s=0.001, k=6.0, window=64)
+    for _ in range(64):
+        d.observe(0.010)
+    # zero-MAD window: threshold collapses to ~median, floored
+    assert 0.001 <= d.timeout_s() <= 0.011
+    d2 = HeartbeatDetector(floor_s=0.5, k=6.0)
+    for _ in range(64):
+        d2.observe(0.010)
+    assert d2.timeout_s() == 0.5          # floor dominates fast replies

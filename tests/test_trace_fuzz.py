@@ -78,6 +78,10 @@ def test_fuzz_span_traces_cross_runtime():
     assert agg["span_workers_vec"] > agg["span_groups_vec"], agg
     assert agg["span_serial_workers"] > 0, agg
     assert agg["span_serial_calls"] > 0, agg
+    # the mixed-payload backlog rejection (see DIRECTORY.md "Why the
+    # mixed-payload backlog stays serial") must actually be taken — the
+    # counter proves the documented serial path is live, not dead code
+    assert agg["span_backlog_serial"] > 0, agg
 
 
 def test_lock_contention_app_drivers_bit_equal():

@@ -514,3 +514,138 @@ def chaos_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
         for k, v in base["batched"].stats.items():
             stats[k] = stats.get(k, 0) + v
     return stats
+
+
+def cluster_trace_params(seed: int) -> Dict:
+    """Cluster-family params: every run is sharded across 2-4 OS
+    processes, alternating driver and degraded-recovery mode across the
+    corpus, with 0-2 process faults (SIGKILL / one-directional link
+    partitions) scheduled at random event rounds."""
+    rng = np.random.default_rng(40_000 + seed)
+    W = int(rng.integers(3, 7))
+    page_words = int(rng.choice([16, 32]))
+    n_words = page_words * int(rng.integers(10, 24))
+    cache_pages = [None, 4, 6][seed % 3]
+    n_shards = int(min(W, rng.integers(2, 5)))
+    drop = float(rng.choice([0.0, 0.1, 0.2]))
+    return dict(rng=rng, W=W, page_words=page_words, n_words=n_words,
+                cache_pages=cache_pages, proto=PROTOS[seed % 3],
+                n_shards=n_shards, drop=drop,
+                driver=("batched", "loop")[seed % 2],
+                recovery=("respawn", "rebind")[(seed // 2) % 2])
+
+
+def cluster_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
+    """The process-level analogue of :func:`chaos_crosscheck`: one
+    seeded program run on the sharded multi-process runtime
+    (``repro.cluster``, 2-4 spawned shard processes) against the
+    single-process baseline, in LOCKSTEP — every event round's
+    cross-shard agreed digest must equal the baseline's state digest at
+    that event — then again under injected process faults (SIGKILL and
+    one-directional partitions in both directions), asserting the
+    recovered finish bit-equal to the unfailed single-process run:
+    traffic field-for-field, clocks bit-equal, the full stats dict.
+    Returns aggregate counters (detections, kills, per-direction
+    partitions, respawns, rebinds, replayed events, RPC retries) so the
+    suite can assert no failure path silently idled."""
+    import tempfile
+
+    from repro.cluster.shard import make_runtime, state_digest
+    from repro.ft import FailureInjector
+    from repro.ft.coherence import (ClusterChaosHarness, assert_bit_equal,
+                                    harness_ticks)
+    p = cluster_trace_params(seed)
+    rng = p["rng"]
+    # program family drawn from the rng (NOT seed parity, which picks
+    # the driver) so span programs also land on the batched driver
+    if int(rng.integers(0, 2)):
+        prog = gen_span_program(rng, p["W"], p["n_words"], p["page_words"],
+                                p["cache_pages"], n_phases=4)
+    else:
+        prog = gen_program(rng, p["W"], p["n_words"], p["page_words"],
+                           n_phases=4)
+    n = p["n_words"]
+    n_faults = int(rng.integers(0, 3))
+    fault_steps = rng.choice(np.arange(1, len(prog) + 1), size=n_faults,
+                             replace=False)
+    kinds = rng.choice(FailureInjector.CLUSTER_KINDS, size=n_faults)
+    ranks = rng.integers(0, p["n_shards"], size=n_faults)
+    cluster_at = [(str(k), int(s), int(r))
+                  for k, s, r in zip(kinds, fault_steps, ranks)]
+
+    stats: Dict[str, int] = {}
+    for backend in backends:
+        cfg = dict(n_workers=p["W"], page_words=p["page_words"],
+                   protocol=p["proto"], cache_pages=p["cache_pages"],
+                   backend=backend,
+                   chaos=(dict(seed=seed, drop_rate=p["drop"])
+                          if p["drop"] else None),
+                   straggler=dict(n_workers=p["W"], window=4, k=4.0,
+                                  abs_floor_s=1e-4, patience=1))
+        ctx = (seed, p["proto"], p["n_shards"], p["driver"],
+               p["recovery"], backend)
+        # single-process baseline with a per-event digest trace (same
+        # tick schedule as the shards)
+        rt = make_runtime(cfg)
+        gas = [rt.alloc(n), rt.alloc(n)]
+        base_digests = {}
+        for i, ev in enumerate(prog):
+            if harness_ticks(ev, p["driver"]):
+                rt.chaos_tick()
+            apply_event(rt, ev, gas, p["driver"])
+            base_digests[i] = state_digest(rt)
+
+        # clean sharded run: lockstep digests + bit-equal finish
+        with tempfile.TemporaryDirectory() as td:
+            res, rep, digests = ClusterChaosHarness(
+                cfg, [n, n], p["driver"], td,
+                ("trace_fuzz", "apply_event"),
+                n_shards=p["n_shards"]).run(prog)
+        assert_bit_equal(res, rt, ctx + ("clean",))
+        assert digests == base_digests, ctx + ("lockstep",)
+        assert rep.detections == 0, (ctx, rep)
+
+        # faulted sharded run: recover to the same bit-equal finish
+        with tempfile.TemporaryDirectory() as td:
+            inj = FailureInjector(cluster_at=cluster_at)
+            res, rep, digests = ClusterChaosHarness(
+                cfg, [n, n], p["driver"], td,
+                ("trace_fuzz", "apply_event"),
+                n_shards=p["n_shards"], recovery=p["recovery"],
+                # jax backends can stall a healthy shard for seconds on
+                # first-call kernel compilation — give them slack so the
+                # no-false-positive bound below stays meaningful
+                rpc_timeout_s=0.1 if backend == "numpy" else 1.5,
+                rpc_attempts=3, injector=inj).run(prog)
+        assert_bit_equal(res, rt, ctx + ("faulted",))
+        assert digests == base_digests, ctx + ("faulted-lockstep",)
+        if n_faults:
+            # the earliest fault always targets an alive shard, so at
+            # least one injection performs and must be detected
+            assert rep.kills + rep.partitions >= 1, (ctx, rep)
+            assert rep.detections >= 1, (ctx, rep)
+            if backend == "numpy":
+                # fast replicas: every detection traces to an injected
+                # fault (a compile-stalled accelerator backend may add
+                # benign false positives — safe, but not bounded here)
+                assert rep.detections <= rep.kills + rep.partitions, \
+                    (ctx, rep)
+            if p["recovery"] == "respawn":
+                assert rep.respawns == rep.detections, (ctx, rep)
+        if cluster_at:
+            # the earliest-scheduled fault always lands on an alive
+            # shard, so it is PERFORMED (later ones may be skipped if
+            # their target is already quarantined)
+            first = min(cluster_at, key=lambda t: t[1])
+            stats["performed_" + first[0]] = (
+                stats.get("performed_" + first[0], 0) + 1)
+        for kind, _s, _r in cluster_at:
+            stats[kind] = stats.get(kind, 0) + 1
+        for k, v in rep.counters().items():
+            stats[k] = stats.get(k, 0) + v
+        stats["rpc_retries"] = (stats.get("rpc_retries", 0)
+                                + rep.rpc_retries)
+        for k in ("chaos_msgs", "chaos_drops", "straggler_checks",
+                  "straggler_flags", "span_all_calls"):
+            stats[k] = stats.get(k, 0) + res.stats.get(k, 0)
+    return stats
