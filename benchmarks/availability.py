@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import tempfile
 import time
 
@@ -53,6 +54,9 @@ def _cfg(W: int) -> dict:
     return dict(n_workers=W, page_words=PAGE_WORDS,
                 protocol=SERIES["samhita"], cache_pages=None,
                 fetch_batch=16, cost=dataclasses.asdict(IB_2013),
+                # same pure-observer knob as common.make_rt: flipping it
+                # must not change a single committed cluster number
+                detect_races=os.environ.get("BENCH_DETECT_RACES") == "1",
                 chaos=dict(seed=CHAOS_SEED, drop_rate=DROP_RATE),
                 straggler=dict(n_workers=W, window=4, k=4.0,
                                abs_floor_s=1e-4, patience=2))

@@ -26,6 +26,11 @@ OUT_DIR = Path(os.environ.get("BENCH_OUT", "artifacts/bench"))
 def make_rt(series: str, workers: int, **kw) -> RegCScaleRuntime:
     kw.setdefault("cost", IB_2013)
     kw.setdefault("fetch_batch", 16)   # Samhita's bulk-fetch optimization
+    # BENCH_DETECT_RACES=1 flips race detection on for EVERY bench point:
+    # the pure-observer check — no committed traffic or modeled-time
+    # number may change (benchmarks.compare --strict-model verifies)
+    kw.setdefault("detect_races",
+                  os.environ.get("BENCH_DETECT_RACES") == "1")
     return RegCScaleRuntime(workers, protocol=SERIES[series], **kw)
 
 
@@ -62,6 +67,18 @@ def chaos_fields(rt) -> Dict[str, int]:
             "chaos_inval_retries": stats.get("chaos_inval_retries", 0),
             "straggler_checks": stats.get("straggler_checks", 0),
             "straggler_flags": stats.get("straggler_flags", 0)}
+
+
+def race_fields(rt) -> Dict[str, int]:
+    """Race-detector counters for the fig11 section: distinct flagged
+    write/write and read/write page races.  Deterministic (detection is
+    exact at page granularity over declared ranges), so gated by
+    ``benchmarks.compare`` like the ``danger_*``/``span_*`` counters —
+    the committed results PROVE the detector flagged the seeded races,
+    not silently idled."""
+    stats = getattr(rt, "stats", {})
+    return {"race_ww": stats.get("race_ww", 0),
+            "race_rw": stats.get("race_rw", 0)}
 
 
 def span_fields(rt) -> Dict[str, int]:
@@ -170,7 +187,7 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                    if k.startswith("tr_") or k.startswith("danger_")
                    or k.startswith("span_") or k.startswith("chaos_")
                    or k.startswith("straggler_")
-                   or k.startswith("rec_")}})
+                   or k.startswith("rec_") or k.startswith("race_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

@@ -1,0 +1,98 @@
+"""Race detection — the detector bench (fig11_races).
+
+The paper's programmability promise makes data races the user-facing
+failure mode RegC must help catch; PR 8's ``detect_races=`` mode flags
+them from the coherence metadata the directory already carries (see
+"Race-detection contract" in ``src/repro/core/DIRECTORY.md``).  This
+section measures what that costs and proves it costs nothing where it
+must: ``apps.race_audit`` (clean bulk + striped-span work, plus a
+deliberately unsynchronized W→R handoff and pairwise unlocked W/W
+writes) runs every point TWICE — detector off, then on — at
+W = 16/64/256 on the selected driver.
+
+Rows carry the ON-run numbers plus the off-run wall time and the
+relative ``detect_overhead`` column; the exact ``tr_*`` traffic fields
+and the deterministic ``race_ww``/``race_rw`` counters are gated
+field-for-field by ``benchmarks.compare`` (a silently-idle detector
+fails the diff), and the bench itself asserts the pure-observer
+contract per point: traffic field-for-field identical and modeled time
+bit-equal between the two runs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import (SteadyState, make_rt, print_rows,
+                               race_fields, span_fields, traffic_fields,
+                               write_bench_json, write_csv)
+from repro.dsm.apps import race_audit
+
+N_BASE = 1 << 20
+CORES = (16, 64, 256)
+N_LOCKS = 4
+
+
+def races(iters: int, driver: str, cores=CORES):
+    rows = []
+    for p in cores:
+        for series in ("samhita", "samhita_page"):
+            runs = {}
+            for detect in (False, True):
+                ss = SteadyState()
+                t0 = time.perf_counter()
+                rt = make_rt(series, p, detect_races=detect)
+                race_audit(rt, N_BASE, iters, n_locks=N_LOCKS,
+                           driver=driver, on_iter=ss)
+                runs[detect] = (rt, time.perf_counter() - t0, ss)
+            rt_on, wall_on, ss = runs[True]
+            rt_off, wall_off, _ = runs[False]
+            # the pure-observer contract, asserted per committed point:
+            # detection changes no traffic field and no modeled second
+            assert traffic_fields(rt_on) == traffic_fields(rt_off), (
+                series, p, driver)
+            assert rt_on.time == rt_off.time, (series, p, driver)
+            assert rt_on.stats["race_ww"] > 0, (series, p, driver)
+            assert rt_on.stats["race_rw"] > 0, (series, p, driver)
+            overhead = ((wall_on - wall_off) / wall_off if wall_off
+                        else 0.0)
+            rows.append({"figure": "fig11_races", "series": series,
+                         "p": p, "n": N_BASE, "driver": driver,
+                         "t_iter_s": round(ss.per_iter(), 6),
+                         "net_bytes": rt_on.traffic.total_bytes,
+                         "t_model_s": round(rt_on.time, 6),
+                         "t_wall_s": round(wall_on, 4),
+                         "t_wall_off_s": round(wall_off, 4),
+                         "detect_overhead": round(overhead, 3),
+                         **traffic_fields(rt_on), **race_fields(rt_on),
+                         **span_fields(rt_on)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--driver", choices=["loop", "batched"],
+                    default="batched",
+                    help="SPMD phase + span driver: per-worker loop or "
+                         "phase_all/span_all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick local subset (W <= 64).  Missing the "
+                         "committed W=256 keys routes the output to "
+                         "*.partial.csv, so the committed artifacts stay "
+                         "untouched")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write machine-readable rows here")
+    args = ap.parse_args(argv)
+    rows = races(args.iters, args.driver,
+                 cores=CORES[:2] if args.smoke else CORES)
+    write_csv("races" if args.driver == "batched"
+              else f"races_{args.driver}", rows)
+    if args.json:
+        write_bench_json(args.json, rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

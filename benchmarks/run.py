@@ -52,8 +52,8 @@ def main(argv=None):
             s in name or any(s in t for t in tags) for s in args.sections)
 
     from benchmarks import (availability, common, jacobi, lock_contention,
-                            molecular_dynamics, recovery, regc_training,
-                            roofline, stream_triad)
+                            molecular_dynamics, races, recovery,
+                            regc_training, roofline, stream_triad)
 
     sections = []
     for d in drivers:
@@ -99,6 +99,14 @@ def main(argv=None):
              f"availability{tag}", False, ("cluster",),
              lambda drv=drv: availability.main(
                  ["--iters", str(max(3, iters // 2))] + drv)),
+            # detector on/off overhead + pure-observer assertion; like
+            # lock_contention, a focused run regenerates the exact
+            # committed point set — the CI race job redirects its CSVs
+            # with BENCH_OUT (see bench_lock)
+            (f"Race detection (detector on/off) {tag}",
+             f"races{tag}", False, ("race",),
+             lambda drv=drv: races.main(
+                 ["--iters", str(iters)] + drv)),
         ]
     sections += [
         # jax-compile-bound (subprocess trainer), not a protocol section

@@ -66,6 +66,7 @@ def make_runtime(cfg: Dict[str, Any]):
               fetch_batch=int(cfg.get("fetch_batch", 1)),
               backend=cfg.get("backend", "numpy"),
               danger_mode=cfg.get("danger_mode", "vec"),
+              detect_races=bool(cfg.get("detect_races", False)),
               chaos=chaos, straggler=straggler)
     if cfg.get("cost") is not None:
         kw["cost"] = CostModel(**cfg["cost"])

@@ -73,7 +73,8 @@ class RegionDirectory:
                  "cap", "valid", "dirty", "wprot", "touch", "incache",
                  "shift", "maybe_dirty", "_cov_stale", "_sorted_bases",
                  "_sorted_ends", "backend", "dirty_lo", "dirty_hi",
-                 "span_lo", "span_hi")
+                 "span_lo", "span_hi", "race_w", "race_r",
+                 "race_maxw", "race_maxr")
 
     def __init__(self, n_workers: int, region: int, page_lo: int,
                  page_hi: int, *, track_wprot: bool = False,
@@ -105,6 +106,23 @@ class RegionDirectory:
         # a consistency region.
         self.span_lo = None
         self.span_hi = None
+        # race-detection vector-clock planes (detect_races runs only):
+        # cell (u, p) of ``race_w`` is component u of page p's *write*
+        # vector clock — the epoch (worker u's own clock value) at u's
+        # last recorded write to page p; ``race_r`` is the read twin.
+        # 0 means "never accessed" (epochs start at 1), so out-of-window
+        # cells read as ordered and window growth stays free.  Lazily
+        # allocated (``ensure_race``) since detection is an opt-in mode.
+        self.race_w = None
+        self.race_r = None
+        # per-row running max of every epoch ever recorded in this
+        # region's race planes (cells only ever grow, so this equals the
+        # plane row max) — the batched detector's O(W) screen: when every
+        # row's max is happens-before-ordered under the phase's minimum
+        # vector-clock view, no cross-phase race check can fire anywhere
+        # in the region and recording can skip the per-worker scan.
+        self.race_maxw = None
+        self.race_maxr = None
         # conservative per-row bounding interval of possibly-dirty pages
         # (absolute page numbers; empty when lo >= hi).  Widened on ordinary
         # writes, reset on flush; eviction clears cells without narrowing
@@ -141,6 +159,9 @@ class RegionDirectory:
                                   constant_values=_I64_MAX)
             self.span_hi = np.pad(self.span_hi, ((0, 0), (0, pad)),
                                   constant_values=_I64_MIN)
+        if self.race_w is not None:
+            self.race_w = np.pad(self.race_w, ((0, 0), (0, pad)))
+            self.race_r = np.pad(self.race_r, ((0, 0), (0, pad)))
         self.cap = new_cap
 
     def ensure_span(self):
@@ -148,6 +169,14 @@ class RegionDirectory:
         if self.span_lo is None:
             self.span_lo = np.full((self.W, self.cap), _I64_MAX, np.int64)
             self.span_hi = np.full((self.W, self.cap), _I64_MIN, np.int64)
+
+    def ensure_race(self):
+        """Allocate the race vector-clock planes on first use."""
+        if self.race_w is None:
+            self.race_w = np.zeros((self.W, self.cap), np.int64)
+            self.race_r = np.zeros((self.W, self.cap), np.int64)
+            self.race_maxw = np.zeros(self.W, np.int64)
+            self.race_maxr = np.zeros(self.W, np.int64)
 
     def ensure(self, w: int, lo: int, hi: int):
         """Grow row w's window to cover absolute pages [lo, hi)."""
@@ -169,7 +198,8 @@ class RegionDirectory:
                               (self.wprot, True), (self.touch, 0),
                               (self.incache, False),
                               (self.span_lo, _I64_MAX),
-                              (self.span_hi, _I64_MIN)):
+                              (self.span_hi, _I64_MIN),
+                              (self.race_w, 0), (self.race_r, 0)):
                 if arr is None:
                     continue
                 row = arr[w]
@@ -333,6 +363,72 @@ class RegionDirectory:
         self.span_lo[w, cols] = _I64_MAX
         self.span_hi[w, cols] = _I64_MIN
         return cols + b, los, his
+
+    # ------------------------------------------------------------------
+    # race vector-clock planes (detect_races mode)
+    # ------------------------------------------------------------------
+
+    def race_note(self, w: int, p_lo: int, p_hi: int, epoch: int,
+                  is_write: bool):
+        """Record worker w's access to absolute pages [p_lo, p_hi) at its
+        current ``epoch`` into the matching vector-clock plane.  Epochs
+        are monotone per worker, so recording is a plain store (≡ max).
+        The window must already cover the range (the engine ensures every
+        declared access interval before/while executing it; detection
+        hooks run after the event, so the windows are always grown)."""
+        self.ensure_race()
+        plane = self.race_w if is_write else self.race_r
+        plane[w, self.sl(w, p_lo, p_hi)] = epoch
+        mx = self.race_maxw if is_write else self.race_maxr
+        if epoch > mx[w]:
+            mx[w] = epoch
+
+    def race_note_rows(self, rows: np.ndarray, p_lo: np.ndarray,
+                       p_hi: np.ndarray, epochs: np.ndarray,
+                       is_write: bool):
+        """Vectorized ``race_note`` over ``rows``: record row rows[i]'s
+        access to absolute pages [p_lo[i], p_hi[i]) at epochs[rows[i]]
+        — the batched detector's fast path when the screen proves no
+        check can fire.  Windows must already cover the ranges."""
+        self.ensure_race()
+        plane = self.race_w if is_write else self.race_r
+        L = p_hi - p_lo
+        j = np.arange(int(L.max()) if L.size else 0)
+        cols = (p_lo - self.base[rows])[:, None] + j[None, :]
+        m = j[None, :] < L[:, None]
+        ri, ci = np.nonzero(m)
+        plane[rows[ri], cols[ri, ci]] = epochs[rows[ri]]
+        mx = self.race_maxw if is_write else self.race_maxr
+        # fancy-indexed out= would write a copy — scatter explicitly
+        np.maximum.at(mx, rows, epochs[rows])
+
+    def race_hits(self, p_lo: int, p_hi: int, vcw: np.ndarray,
+                  is_write: bool):
+        """(rows, pages) of write (or read) epochs recorded over absolute
+        pages [p_lo, p_hi) that are NOT ordered under the view ``vcw`` —
+        the scalar detector's check.  Row-screened: a row whose window
+        misses the range (out-of-window cells read 0 — "never accessed",
+        ordered under any view) or whose recorded region max is already
+        covered by the view (every cell of row u is <= race_max*[u])
+        provably holds no firing cell and is skipped without touching
+        its plane, so a check costs O(W) when nothing can fire instead
+        of materializing a (W, pages) gather."""
+        z = np.zeros(0, np.int64)
+        if self.race_w is None:
+            return z, z
+        mx = self.race_maxw if is_write else self.race_maxr
+        ov_lo = np.maximum(p_lo, self.base)
+        ov_hi = np.minimum(p_hi, self.base + self.length)
+        cand = np.nonzero((mx > vcw) & (ov_hi > ov_lo)
+                          & (self.base >= 0))[0]
+        if cand.size == 0:
+            return z, z
+        plane = self.race_w if is_write else self.race_r
+        cols = (p_lo - self.base[cand])[:, None] + np.arange(p_hi - p_lo)
+        inr = (cols >= 0) & (cols < self.length[cand][:, None])
+        G = np.where(inr, plane[cand[:, None], np.where(inr, cols, 0)], 0)
+        ui, ji = np.nonzero(G > vcw[cand][:, None])
+        return cand[ui], p_lo + ji
 
     # ------------------------------------------------------------------
     # batched eviction primitives (segment LRU over touch-run spans)
@@ -553,7 +649,8 @@ class RegionDirectory:
                   "dirty": self.dirty[sl].copy(),
                   "dirty_lo": self.dirty_lo[sl].copy(),
                   "dirty_hi": self.dirty_hi[sl].copy()}
-        for name in ("wprot", "touch", "incache", "span_lo", "span_hi"):
+        for name in ("wprot", "touch", "incache", "span_lo", "span_hi",
+                     "race_w", "race_r", "race_maxw", "race_maxr"):
             arr = getattr(self, name)
             if arr is not None:
                 arrays[name] = arr[sl].copy()
@@ -563,6 +660,7 @@ class RegionDirectory:
                 "track_wprot": self.wprot is not None,
                 "track_touch": self.touch is not None,
                 "has_span": self.span_lo is not None,
+                "has_race": self.race_w is not None,
                 "backend": self.backend}
         return arrays, meta
 
@@ -587,6 +685,11 @@ class RegionDirectory:
         if meta["has_span"]:
             d.span_lo = np.asarray(arrays["span_lo"], np.int64).copy()
             d.span_hi = np.asarray(arrays["span_hi"], np.int64).copy()
+        if meta.get("has_race"):
+            d.race_w = np.asarray(arrays["race_w"], np.int64).copy()
+            d.race_r = np.asarray(arrays["race_r"], np.int64).copy()
+            d.race_maxw = np.asarray(arrays["race_maxw"], np.int64).copy()
+            d.race_maxr = np.asarray(arrays["race_maxr"], np.int64).copy()
         d.maybe_dirty = bool(meta["maybe_dirty"])
         d._cov_stale = True
         return d

@@ -84,7 +84,7 @@ class _Span:
 
 
 class _Lock:
-    __slots__ = ("version", "notices", "last_release_time", "seen")
+    __slots__ = ("version", "notices", "last_release_time", "seen", "race_vc")
 
     def __init__(self, n_workers: int):
         self.version = 0
@@ -92,6 +92,8 @@ class _Lock:
         self.notices: List[List[Tuple[int, int, int, Optional[np.ndarray]]]] = []
         self.last_release_time = 0.0
         self.seen = np.zeros(n_workers, np.int64)
+        # race detection: the lock's vector clock (join of every releaser)
+        self.race_vc = np.zeros(n_workers, np.int64)
 
 
 class RegCRuntime:
@@ -100,7 +102,8 @@ class RegCRuntime:
     def __init__(self, n_workers: int, *, page_words: int = 1024,
                  protocol: str = FINE_PROTO, cost: CostModel = IB_2013,
                  track_values: bool = True, cache_pages: Optional[int] = None,
-                 prefetch: int = 1, n_mem_servers: int = 1):
+                 prefetch: int = 1, n_mem_servers: int = 1,
+                 detect_races: bool = False):
         assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
         self.W = n_workers
         self.page_words = page_words
@@ -130,6 +133,16 @@ class RegCRuntime:
         self._reductions: Dict[str, List[Tuple[float, str]]] = {}
         self._reduction_results: Dict[str, float] = {}
         self._barrier_count = 0
+        # race detection (pure observer — never touches traffic or clocks):
+        # per-worker vector clocks, page-granular last-access epochs, and
+        # the canonical flagged set {(page, a, b, kind)} with a < b and
+        # kind in {"ww", "rw"}
+        self.detect_races = detect_races
+        self.race_vc = (np.eye(n_workers, dtype=np.int64)
+                        if detect_races else None)
+        self._race_wpage: Dict[int, np.ndarray] = {}
+        self._race_rpage: Dict[int, np.ndarray] = {}
+        self.races: set = set()
 
     # ------------------------------------------------------------------
     # allocation
@@ -218,10 +231,51 @@ class RegCRuntime:
         return self.cache_data[(w, p)]
 
     # ------------------------------------------------------------------
+    # race detection (scalar oracle; page-granular epoch vector clocks)
+    # ------------------------------------------------------------------
+
+    def _race_record(self, p: int, w: int, u: int, kind: str):
+        a, b = (w, u) if w < u else (u, w)
+        self.races.add((p, a, b, kind))
+
+    def _race_access(self, w: int, ga: GasArray, lo: int, hi: int,
+                     is_write: bool):
+        """Check-then-record one declared access against the per-page
+        last-access epochs.  Accesses are taken at op granularity over the
+        declared [lo, hi) range — the cache path (prefetch, write-allocate,
+        eviction/refetch) never changes the race set."""
+        if not self.detect_races:
+            return
+        vc = self.race_vc
+        for p in ga.pages_of(lo, hi):
+            wvc = self._race_wpage.get(p)
+            if wvc is not None:
+                for u in np.nonzero(wvc > vc[w])[0]:
+                    self._race_record(p, w, int(u),
+                                      "ww" if is_write else "rw")
+            if is_write:
+                rvc = self._race_rpage.get(p)
+                if rvc is not None:
+                    for u in np.nonzero(rvc > vc[w])[0]:
+                        self._race_record(p, w, int(u), "rw")
+                tgt = self._race_wpage.setdefault(
+                    p, np.zeros(self.W, np.int64))
+            else:
+                tgt = self._race_rpage.setdefault(
+                    p, np.zeros(self.W, np.int64))
+            tgt[w] = vc[w, w]
+
+    @property
+    def race_counts(self) -> Dict[str, int]:
+        return {"race_ww": sum(1 for r in self.races if r[3] == "ww"),
+                "race_rw": sum(1 for r in self.races if r[3] == "rw")}
+
+    # ------------------------------------------------------------------
     # reads / writes
     # ------------------------------------------------------------------
 
     def read(self, w: int, ga: GasArray, lo: int, hi: int) -> Optional[np.ndarray]:
+        self._race_access(w, ga, lo, hi, False)
         pages = list(ga.pages_of(lo, hi))
         for p in pages:
             self._fetch(w, p)
@@ -238,6 +292,7 @@ class RegCRuntime:
 
     def write(self, w: int, ga: GasArray, lo: int, hi: int,
               values: Optional[np.ndarray] = None):
+        self._race_access(w, ga, lo, hi, True)
         pages = list(ga.pages_of(lo, hi))
         in_span = bool(self.spans[w])
         for p in pages:
@@ -349,6 +404,9 @@ class RegCRuntime:
                     self.traffic.invalidations += 1
                 self.traffic.control_msgs += 1
         lk.seen[w] = lk.version
+        if self.detect_races:
+            # happens-before: every prior release of this lock precedes us
+            np.maximum(self.race_vc[w], lk.race_vc, out=self.race_vc[w])
         self.spans[w].append(_Span(lock_id))
 
     def release(self, w: int, lock_id: int):
@@ -410,6 +468,10 @@ class RegCRuntime:
         self._net(w, 64, 1)
         self.traffic.control_msgs += 1
         lk.last_release_time = self.clock[w]
+        if self.detect_races:
+            # publish our clock into the lock, then start a fresh epoch
+            np.maximum(lk.race_vc, self.race_vc[w], out=lk.race_vc)
+            self.race_vc[w, w] += 1
 
     class _SpanCtx:
         def __init__(self, rt, w, lock_id):
@@ -482,6 +544,12 @@ class RegCRuntime:
             self._reduction_results[name] = float(fn(vals))
             self.traffic.reduction_msgs += self.W - 1
         self._reductions.clear()
+        if self.detect_races:
+            # barrier joins every worker's clock, then each worker starts a
+            # fresh epoch
+            j = self.race_vc.max(axis=0)
+            self.race_vc[:] = j[None, :]
+            self.race_vc[np.arange(self.W), np.arange(self.W)] += 1
         # clocks join (+ tree latency)
         t = float(self.clock.max()) + self.cost.net_latency_s * log_w * (
             0 if self.protocol == IDEAL_PROTO else 1) + 1e-7 * log_w

@@ -89,13 +89,17 @@ class _Span:
 
 
 class _Lock:
-    __slots__ = ("version", "log", "last_release_time", "seen")
+    __slots__ = ("version", "log", "last_release_time", "seen", "race_vc")
 
     def __init__(self, n_workers):
         self.version = 0
         self.log = IntervalLog()
         self.last_release_time = 0.0
         self.seen = np.zeros(n_workers, np.int64)
+        # detect_races only: the lock's vector clock — the join of every
+        # releaser's clock at release time (see DIRECTORY.md
+        # "Race-detection contract")
+        self.race_vc = np.zeros(n_workers, np.int64)
 
 
 class RegCScaleRuntime:
@@ -108,6 +112,7 @@ class RegCScaleRuntime:
                  instr_s_per_word: float = INSTR_S_PER_WORD,
                  fault_s: float = FAULT_S, fetch_batch: int = 1,
                  backend: str = "numpy", danger_mode: str = "vec",
+                 detect_races: bool = False,
                  chaos=None, injector=None, straggler=None):
         assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
         # 'vec' | 'scalar': how ops flagged by the per-op ``_danger``
@@ -177,11 +182,24 @@ class RegCScaleRuntime:
         self.stats = {"batched_phases": 0, "evict_batch_rounds": 0,
                       "danger_ops": 0, "residual_replays": 0,
                       "danger_vec_ops": 0, "danger_scalar_ops": 0,
-                      "danger_shared_ops": 0,
+                      "danger_shared_ops": 0, "danger_subgroup_ops": 0,
                       "span_all_calls": 0, "span_serial_calls": 0,
                       "span_groups_vec": 0, "span_workers_vec": 0,
+                      "span_multi_region_groups": 0,
                       "span_serial_workers": 0,
-                      "span_backlog_serial": 0}
+                      "span_backlog_serial": 0,
+                      "race_ww": 0, "race_rw": 0}
+        # race-detection mode (pure observer; see DIRECTORY.md
+        # "Race-detection contract"): per-worker vector clocks, the
+        # canonical flagged-race set, and a suspension flag the batched
+        # drivers set while replaying ops internally (phase_all residual
+        # replay, span_all fallbacks) so detection runs exactly once per
+        # access — in the driver-level batched pass.
+        self.detect_races = detect_races
+        self.race_vc = (np.eye(n_workers, dtype=np.int64)
+                        if detect_races else None)
+        self.races: set = set()
+        self._race_suspend = False
         # fault-tolerance wiring (see ft/coherence.py and DIRECTORY.md
         # "Recovery contract"): ``chaos`` is a dsm.costmodel.ChaosNet
         # message-loss model (one per-worker tick per clock-charged
@@ -852,6 +870,74 @@ class RegCScaleRuntime:
             if self.chaos is not None:
                 self.clock[m] += self.chaos.retry_rows(m)
 
+    def _danger_sig(self, w: int, d: RegionDirectory, lo, hi,
+                    p_lo, p_hi, *, is_write: bool) -> tuple:
+        """Cheap per-row isomorphism-class key for ``_danger_subgroups``:
+        op geometry, occupancy, op-range plane patterns, and the LRU
+        queue's run structure (op-region runs keyed by their column
+        offset relative to the op — the shift-invariant part of the
+        ``_danger_shared`` contract).  Rows with equal keys are only
+        *candidates*: ``_danger_shared`` still re-verifies every
+        cross-row condition (run dirty/live patterns, the cell budget)
+        before any schedule is shared."""
+        pw = self.page_words
+        p0, p1 = int(p_lo[w]), int(p_hi[w])
+        n = p1 - p0
+        s = d.sl(w, p0, p1)
+        sig: list = [n, int(self.resident[w]), bool(self._q_degraded[w])]
+        if is_write:
+            sig += [int(lo[w]) % pw, int(hi[w]) % pw,
+                    int(hi[w]) - int(lo[w])]
+        sig.append(d.incache[w, s].tobytes())
+        sig.append(d.valid[w, s].tobytes())
+        sig.append(d.dirty[w, s].tobytes())
+        if n > 1:
+            sig.append((np.diff(d.touch[w, s]) != 0).tobytes())
+        if self._track_wprot:
+            sig.append(d.wprot[w, s].tobytes())
+        c0 = p0 - int(d.base[w])
+        for _t0, rg, col0, nr, off, _shift0, pris in self._lru_q[w]:
+            cc = col0 + (int(self.dirs[rg].shift[w]) - _shift0)
+            sig.append((rg, nr, off, bool(pris),
+                        cc - c0 if rg == d.region else -(1 << 30)))
+        return tuple(sig)
+
+    def _danger_subgroups(self, drows: np.ndarray, d: RegionDirectory,
+                          ga, lo, hi, p_lo, p_hi, *,
+                          is_write: bool) -> np.ndarray:
+        """The packed multi-row victim scan for danger groups that are
+        almost-but-not-quite isomorphic: when the whole-group
+        ``_danger_shared`` check fails (typically one clamped or
+        phase-skewed row breaking an otherwise-lockstep group),
+        partition the rows into candidate classes by ``_danger_sig``
+        and let every class of >= 2 rows attempt the shared schedule on
+        its own.  Only rows whose class is a singleton — or fails the
+        full cross-row re-verification — drop to per-worker replay.
+        Returns those residual rows, ascending.  Exact for the same
+        reason the split itself is: the rows are proven independent, so
+        subgroup replay order is interchangeable, and each subgroup's
+        shared schedule is bit-equal to its per-worker replays."""
+        groups: Dict[tuple, List[int]] = {}
+        d.ensure_rows(p_lo[drows], p_hi[drows], drows)
+        for w in drows.tolist():
+            groups.setdefault(self._danger_sig(w, d, lo, hi, p_lo, p_hi,
+                                               is_write=is_write),
+                              []).append(w)
+        resid: List[int] = []
+        for ws in groups.values():
+            grp = np.asarray(ws, np.int64)
+            # a class spanning the whole group IS the attempt that just
+            # failed — re-running it cannot succeed
+            if (2 <= grp.size < drows.size
+                    and self._danger_shared(grp, d, d.region, ga, lo, hi,
+                                            p_lo, p_hi,
+                                            is_write=is_write)):
+                self.stats["danger_subgroup_ops"] += int(grp.size)
+                continue
+            resid.extend(ws)
+        resid.sort()
+        return np.asarray(resid, np.int64)
+
     def _maybe_evict(self, w: int):
         """Watermark-triggered batched eviction: no per-op work unless the
         occupancy counter crossed ``cache_pages``; then the oldest pages
@@ -868,6 +954,10 @@ class RegCScaleRuntime:
         region = self._region_of(ga.page_lo)
         p_lo = ga.page_lo + lo // self.page_words
         p_hi = ga.page_lo + (max(hi - 1, lo)) // self.page_words + 1
+        if self.detect_races and not self._race_suspend:
+            # the DECLARED range only — prefetch is a cache artifact, not
+            # an access, so it must not create happens-before obligations
+            self._race_access(w, region, p_lo, p_hi, False)
         arr_end = ga.page_lo + -(-ga.n_elems // self.page_words)
         p_hi_pf = min(p_hi + self.prefetch, arr_end)   # sequential prefetch
         p_hi = max(p_hi_pf, p_hi)
@@ -899,6 +989,8 @@ class RegCScaleRuntime:
         region = self._region_of(ga.page_lo)
         p_lo = ga.page_lo + lo // self.page_words
         p_hi = ga.page_lo + (max(hi - 1, lo)) // self.page_words + 1
+        if self.detect_races and not self._race_suspend:
+            self._race_access(w, region, p_lo, p_hi, True)
         d = self.dirs[region]
         d.ensure(w, p_lo, p_hi)
         in_span = bool(self.spans[w])
@@ -1284,6 +1376,10 @@ class RegCScaleRuntime:
                 if self.chaos is not None:
                     self.chaos.inval_msgs(n_inv)
         lk.seen[w] = lk.version
+        if self.detect_races and not self._race_suspend:
+            # acquire happens-after every release of this lock: join the
+            # lock's vector clock into the acquirer's view
+            np.maximum(self.race_vc[w], lk.race_vc, out=self.race_vc[w])
         self.spans[w].append(_Span(lock_id, plane=not self.spans[w]))
 
     def _span_harvest(self, w: int, span: _Span):
@@ -1344,6 +1440,11 @@ class RegCScaleRuntime:
         self._net(w, 64, 1)
         self.traffic.control_msgs += 1
         lk.last_release_time = self.clock[w]
+        if self.detect_races and not self._race_suspend:
+            # publish the releaser's view into the lock, then open a new
+            # epoch so later accesses are not ordered under this release
+            np.maximum(lk.race_vc, self.race_vc[w], out=lk.race_vc)
+            self.race_vc[w, w] += 1
 
     class _SpanCtx:
         def __init__(self, rt, w, lock_id):
@@ -1358,6 +1459,119 @@ class RegCScaleRuntime:
 
     def span(self, w: int, lock_id: int):
         return self._SpanCtx(self, w, lock_id)
+
+    # ------------------------------------------------------------------
+    # race detection (detect_races mode; pure observer — touches only
+    # race_vc / lock race_vc / the directory race planes / self.races,
+    # never traffic, clocks, windows beyond what the op itself ensures,
+    # or any protocol plane.  See DIRECTORY.md "Race-detection contract".
+    # ------------------------------------------------------------------
+
+    def _race_record(self, p: int, w: int, u: int, kind: str):
+        a, b = (w, u) if w < u else (u, w)
+        t = (p, a, b, kind)
+        if t not in self.races:
+            self.races.add(t)
+            self.stats["race_" + kind] += 1
+
+    def _race_access(self, w: int, region: int, p_lo: int, p_hi: int,
+                     is_write: bool):
+        """Check-then-record one worker's declared page range: flag every
+        (page, other-worker) recorded epoch not ordered before w's view,
+        then stamp w's current epoch into the matching plane.  The check
+        is ``RegionDirectory.race_hits`` — row-screened on window overlap
+        and recorded maxima, so a quiet check is O(W), not a (W, pages)
+        gather."""
+        d = self.dirs[region]
+        d.ensure_race()
+        d.ensure(w, p_lo, p_hi)
+        vcw = self.race_vc[w]
+        ui, pi = d.race_hits(p_lo, p_hi, vcw, True)
+        for u, p in zip(ui.tolist(), pi.tolist()):
+            self._race_record(p, w, u, "ww" if is_write else "rw")
+        if is_write:
+            ui, pi = d.race_hits(p_lo, p_hi, vcw, False)
+            for u, p in zip(ui.tolist(), pi.tolist()):
+                self._race_record(p, w, u, "rw")
+        d.race_note(w, p_lo, p_hi, int(vcw[w]), is_write)
+
+    def _race_op_all(self, ga, lo: np.ndarray, hi: np.ndarray,
+                     is_write: bool):
+        """Batched detection of one phase op across all workers.  Fast
+        path: when the region's recorded-epoch maxima are all ordered
+        under the phase's minimum vector-clock view (no cross-phase
+        check can fire) and write ranges are pairwise disjoint (no
+        same-phase pair), recording collapses to one plane scatter.
+        Otherwise fall to the per-worker check — whose result is
+        processing-order independent (a peer's current epoch is never
+        visible in another row's clock until its next release), so
+        op-major here matches the loop driver's worker-major order."""
+        pw = self.page_words
+        region = self._region_of(ga.page_lo)
+        d = self.dirs[region]
+        p_lo = ga.page_lo + lo // pw
+        p_hi = ga.page_lo + np.maximum(hi - 1, lo) // pw + 1
+        vc = self.race_vc
+        cross = False
+        if d.race_w is not None:
+            vcmin = vc.min(axis=0)
+            cross = bool((d.race_maxw > vcmin).any())
+            if is_write and not cross:
+                cross = bool((d.race_maxr > vcmin).any())
+        overlap = False
+        if is_write and not cross:
+            order = np.argsort(p_lo, kind="stable")
+            run_hi = np.maximum.accumulate(p_hi[order])[:-1]
+            overlap = bool((run_hi > p_lo[order][1:]).any())
+        if cross or overlap:
+            for w in range(self.W):
+                self._race_access(w, region, int(p_lo[w]), int(p_hi[w]),
+                                  is_write)
+        else:
+            d.ensure_race()
+            d.ensure_rows(p_lo, p_hi, self._rows_all)
+            d.race_note_rows(self._rows_all, p_lo, p_hi,
+                             vc.diagonal(), is_write)
+
+    def _race_phase_all(self, reads, writes):
+        """End-of-phase batched detection over the declared op ranges —
+        vector clocks are static inside a phase and page-granular
+        flagging is order independent, so one uniform pass here covers
+        every engine path (batched rows, danger rows, shared-schedule
+        members, residual replays) exactly once."""
+        for ga, lo, hi in reads:
+            self._race_op_all(ga, lo, hi, False)
+        for ga, lo, hi in writes:
+            self._race_op_all(ga, lo, hi, True)
+
+    def _race_span_all(self, rows: np.ndarray, locks: np.ndarray,
+                       reads, writes):
+        """End-of-span_all detection: replay each lock group's grant
+        chain (workers ascending — the engine's grant order in both the
+        analytic and serial paths) through the scalar acquire/access/
+        release detector.  Group processing order is immaterial: rows
+        and lock clocks are disjoint across groups, and cross-group
+        same-call accesses can never be happens-before ordered."""
+        pw = self.page_words
+        vc = self.race_vc
+        for lk_id in np.unique(locks[rows]):
+            lk = self.locks[int(lk_id)]
+            for w in rows[locks[rows] == lk_id].tolist():
+                np.maximum(vc[w], lk.race_vc, out=vc[w])
+                for ops, is_write in ((reads, False), (writes, True)):
+                    for ga, lo, hi in ops:
+                        region = self._region_of(ga.page_lo)
+                        lo_w, hi_w = int(lo[w]), int(hi[w])
+                        p_lo = ga.page_lo + lo_w // pw
+                        p_hi = ga.page_lo + max(hi_w - 1, lo_w) // pw + 1
+                        self._race_access(w, region, p_lo, p_hi, is_write)
+                np.maximum(lk.race_vc, vc[w], out=lk.race_vc)
+                vc[w, w] += 1
+
+    @property
+    def race_counts(self) -> Dict[str, int]:
+        return {"race_ww": self.stats["race_ww"],
+                "race_rw": self.stats["race_rw"]}
 
     # ------------------------------------------------------------------
     # batched SPMD driver fast path
@@ -1511,11 +1725,19 @@ class RegCScaleRuntime:
         # lockstep-uniform danger workers (the rotating steady state)
         # share one schedule: the leader replays once, recording, and the
         # rest apply the recorded schedule as batched plane ops
-        if not (drows.size >= 2 and self.danger_mode == "vec"
-                and self.cache_pages >= 1
+        shareable = (drows.size >= 2 and self.danger_mode == "vec"
+                     and self.cache_pages >= 1)
+        if not (shareable
                 and self._danger_shared(drows, d, d.region, ga, lo, hi,
                                         p_lo, p_hi, is_write=is_write)):
-            for w in drows:
+            # near-isomorphic residue: a size->=3 group that failed the
+            # whole-group check may still contain a lockstep subgroup
+            # (one clamped row breaking an otherwise-uniform phase) —
+            # the packed multi-row victim scan shares what it can
+            resid = (self._danger_subgroups(drows, d, ga, lo, hi,
+                                            p_lo, p_hi, is_write=is_write)
+                     if shareable and drows.size >= 3 else drows)
+            for w in resid:
                 if is_write:
                     self.write(int(w), ga, int(lo[w]), int(hi[w]))
                 else:
@@ -1914,6 +2136,7 @@ class RegCScaleRuntime:
                 resid = r
         rows = None if resid is None else np.nonzero(~resid)[0]
         self.stats["batched_phases"] += 1
+        self._race_suspend = True
         if rows is None or rows.size:
             for ga, lo, hi in reads:
                 self._read_all(ga, lo, hi, rows=rows, may=may)
@@ -1953,6 +2176,9 @@ class RegCScaleRuntime:
                             for ga, lo, hi in writes],
                     flops=float(flb[w]), mem_bytes=float(mbb[w]),
                     seconds=float(secb[w]), instr_words=float(iwb[w]))
+        self._race_suspend = False
+        if self.detect_races:
+            self._race_phase_all(reads, writes)
 
     # ------------------------------------------------------------------
     # worker-axis batched span driver (span_all)
@@ -2031,29 +2257,33 @@ class RegCScaleRuntime:
         accumulation before any barrier): when every log version a member
         has not replayed carries exactly THIS pass's payload, its
         coalesced pending is that payload no matter how far behind it is.
-        Any other backlog, differing per-worker intervals, ops across
-        several regions, or an empty interval returns False (caller falls
-        back to the per-worker serial body).  Eviction inside spans never
+        Any other backlog, differing per-worker intervals, or an empty
+        interval returns False (caller falls back to the per-worker
+        serial body).  Ops across several regions resolve region-by-
+        region: plane matrices, pending masks and replay hits are
+        per-region separable (a page belongs to exactly one region), and
+        the release payload is the per-region payloads concatenated in
+        region order — which IS page order, matching ``_span_harvest``'s
+        sorted multi-region concatenation.  Eviction inside spans never
         reaches here — span_all screens it into the full-serial
         fallback."""
         lk = self.locks.setdefault(lock_id, _Lock(self.W))
         w0 = int(grp[0])
-        region0 = -1
-        ops = []          # (ga, lo, hi, p_lo, p_hi, is_write) — uniform
+        ops = []      # (ga, lo, hi, p_lo, p_hi, is_write, region) — uniform
+        regions = []  # ascending (rranges/wranges come region-resolved)
         for (ga, lo, hi), (region, p_lo, p_hi), is_w in (
                 [(o, r, False) for o, r in zip(reads, rranges)]
                 + [(o, r, True) for o, r in zip(writes, wranges)]):
-            if region0 < 0:
-                region0 = region
-            elif region != region0:
-                return False
             if (not (lo[grp] == lo[w0]).all()
                     or not (hi[grp] == hi[w0]).all()):
                 return False
             if int(hi[w0]) <= int(lo[w0]):
                 return False
+            if region not in regions:
+                regions.append(region)
             ops.append((ga, int(lo[w0]), int(hi[w0]),
-                        int(p_lo[w0]), int(p_hi[w0]), is_w))
+                        int(p_lo[w0]), int(p_hi[w0]), is_w, region))
+        regions.sort()
 
         G = int(grp.size)
         IDEAL = self.protocol == IDEAL_PROTO
@@ -2063,44 +2293,54 @@ class RegCScaleRuntime:
         track = self.cache_pages is not None
         imax = np.iinfo(np.int64).max
         imin = np.iinfo(np.int64).min
+        gi = grp[:, None]
 
-        d = self.dirs[region0] if region0 >= 0 else None
-        if d is not None:
-            u_lo = min(op[3] for op in ops)
-            u_hi = max(op[4] for op in ops)
+        # per-region context: union window, gathered plane matrices, and
+        # the uniform release payload accumulator (per declared-write
+        # page, the (min, max)-coalesced word interval — what each member
+        # publishes and what each later holder replays)
+        ctx = {}
+        for r in regions:
+            d_r = self.dirs[r]
+            u_lo = min(op[3] for op in ops if op[6] == r)
+            u_hi = max(op[4] for op in ops if op[6] == r)
             P = u_hi - u_lo
-            full = np.full(G, u_lo, np.int64)
-            d.ensure_rows(full, np.full(G, u_hi, np.int64), grp)
-            colm = (u_lo - d.base[grp])[:, None] + np.arange(P)[None, :]
-            gi = grp[:, None]
-            V = (d.valid[gi, colm]).copy()
-            IC = (d.incache[gi, colm]).copy() if track else None
-            WP = (d.wprot[gi, colm]).copy() if self._track_wprot else None
-
-            # the uniform release payload: per declared-write page, the
-            # (min, max)-coalesced word interval — what each member
-            # publishes and what each later holder replays
-            pend_mask = np.zeros(P, bool)
-            wlo_acc = np.full(P, imax, np.int64)
-            whi_acc = np.full(P, imin, np.int64)
-            for ga, lo, hi, p_lo, p_hi, is_w in ops:
-                if not is_w:
-                    continue
-                sl = slice(p_lo - u_lo, p_hi - u_lo)
-                bw_ = (np.arange(p_lo, p_hi) - ga.page_lo) * pw
-                pend_mask[sl] = True
-                np.minimum(wlo_acc[sl], np.maximum(lo - bw_, 0),
-                           out=wlo_acc[sl])
-                np.maximum(whi_acc[sl], np.minimum(hi - bw_, pw),
-                           out=whi_acc[sl])
-            rel_idx = np.nonzero(pend_mask)[0]
-            rel_pages = rel_idx + u_lo
-            rel_los = wlo_acc[rel_idx]
-            rel_his = whi_acc[rel_idx]
+            d_r.ensure_rows(np.full(G, u_lo, np.int64),
+                            np.full(G, u_hi, np.int64), grp)
+            colm = (u_lo - d_r.base[grp])[:, None] + np.arange(P)[None, :]
+            ctx[r] = {
+                "d": d_r, "u_lo": u_lo, "colm": colm,
+                "V": (d_r.valid[gi, colm]).copy(),
+                "IC": (d_r.incache[gi, colm]).copy() if track else None,
+                "WP": ((d_r.wprot[gi, colm]).copy()
+                       if self._track_wprot else None),
+                "pend": np.zeros(P, bool),
+                "wlo": np.full(P, imax, np.int64),
+                "whi": np.full(P, imin, np.int64),
+            }
+        for ga, lo, hi, p_lo, p_hi, is_w, r in ops:
+            if not is_w:
+                continue
+            c = ctx[r]
+            sl = slice(p_lo - c["u_lo"], p_hi - c["u_lo"])
+            bw_ = (np.arange(p_lo, p_hi) - ga.page_lo) * pw
+            c["pend"][sl] = True
+            np.minimum(c["wlo"][sl], np.maximum(lo - bw_, 0),
+                       out=c["wlo"][sl])
+            np.maximum(c["whi"][sl], np.minimum(hi - bw_, pw),
+                       out=c["whi"][sl])
+        if regions:
+            parts = []
+            for r in regions:
+                c = ctx[r]
+                rel_idx = np.nonzero(c["pend"])[0]
+                parts.append((rel_idx + c["u_lo"], c["wlo"][rel_idx],
+                              c["whi"][rel_idx]))
+            rel_pages = np.concatenate([p[0] for p in parts])
+            rel_los = np.concatenate([p[1] for p in parts])
+            rel_his = np.concatenate([p[2] for p in parts])
         else:
-            P = 0
             rel_pages = rel_los = rel_his = np.zeros(0, np.int64)
-            pend_mask = None
         npend = int(rel_pages.size)
         pub_bytes = 0
         if npend:
@@ -2138,15 +2378,19 @@ class RegCScaleRuntime:
                 return False
 
         # ---- replay effects --------------------------------------------
-        inval = None
         if npend and not IDEAL and not FINE:
-            hits = V & pend_mask[None, :] & has_pend[:, None]
-            inval = hits.sum(axis=1)
-            n_inv = int(inval.sum())
-            if n_inv:
-                if WP is not None and self.model_mechanism:
-                    WP |= hits
-                V &= ~(has_pend[:, None] & pend_mask[None, :])
+            n_inv = 0
+            for r in regions:
+                c = ctx[r]
+                if not c["pend"].any():
+                    continue
+                hits = c["V"] & c["pend"][None, :] & has_pend[:, None]
+                nh = int(hits.sum())
+                if nh:
+                    if c["WP"] is not None and self.model_mechanism:
+                        c["WP"] |= hits
+                    c["V"] &= ~(has_pend[:, None] & c["pend"][None, :])
+                n_inv += nh
             self.traffic.invalidations += n_inv
             self.traffic.control_msgs += npend * int(has_pend.sum())
             if self.chaos is not None:
@@ -2156,7 +2400,10 @@ class RegCScaleRuntime:
         op_miss = []       # per read op: (G,) fetch-miss counts
         op_faults = []     # per write op: (G,) wprot fault counts
         op_edges = []      # per write op: (first(G,)|None, last(G,)|None)
-        for ga, lo, hi, p_lo, p_hi, is_w in ops:
+        for ga, lo, hi, p_lo, p_hi, is_w, r in ops:
+            cx = ctx[r]
+            V, IC, WP = cx["V"], cx["IC"], cx["WP"]
+            d, u_lo, colm = cx["d"], cx["u_lo"], cx["colm"]
             sl = slice(p_lo - u_lo, p_hi - u_lo)
             n = p_hi - p_lo
             if not is_w:
@@ -2165,7 +2412,7 @@ class RegCScaleRuntime:
                 op_miss.append(miss)
                 V[:, sl] = True
                 if track:
-                    self._span_track_touch(d, grp, gi, colm, IC, region0,
+                    self._span_track_touch(d, grp, gi, colm, IC, r,
                                            p_lo, n, sl)
                 tot = int(miss.sum())
                 if tot:
@@ -2191,7 +2438,7 @@ class RegCScaleRuntime:
                     V[:, c] = True
                     if track:
                         self._span_track_touch(d, grp, gi, colm, IC,
-                                               region0, p_lo, 1,
+                                               r, p_lo, 1,
                                                slice(c, c + 1))
                     tot = int(first.sum())
                     if tot:
@@ -2203,7 +2450,7 @@ class RegCScaleRuntime:
                     V[:, c] = True
                     if track:
                         self._span_track_touch(d, grp, gi, colm, IC,
-                                               region0, p_hi - 1, 1,
+                                               r, p_hi - 1, 1,
                                                slice(c, c + 1))
                     tot = int(last.sum())
                     if tot:
@@ -2211,17 +2458,19 @@ class RegCScaleRuntime:
                         self.traffic.fetch_bytes += tot * pb
             op_edges.append((first, last))
             if track:
-                self._span_track_touch(d, grp, gi, colm, IC, region0,
+                self._span_track_touch(d, grp, gi, colm, IC, r,
                                        p_lo, n, sl)
             V[:, sl] = True
 
         # ---- commit planes --------------------------------------------
-        if d is not None:
-            d.valid[gi, colm] = V
-            if IC is not None:
-                d.incache[gi, colm] = IC
-            if WP is not None:
-                d.wprot[gi, colm] = WP
+        for r in regions:
+            cx = ctx[r]
+            d, colm = cx["d"], cx["colm"]
+            d.valid[gi, colm] = cx["V"]
+            if cx["IC"] is not None:
+                d.incache[gi, colm] = cx["IC"]
+            if cx["WP"] is not None:
+                d.wprot[gi, colm] = cx["WP"]
 
         # ---- publish: one batched log append, G versions --------------
         if not IDEAL:
@@ -2264,7 +2513,7 @@ class RegCScaleRuntime:
                 if self.chaos is not None:
                     c += self.chaos.retry1(w)
             ri = wi = 0
-            for ga, lo, hi, p_lo, p_hi, is_w in ops:
+            for ga, lo, hi, p_lo, p_hi, is_w, _r in ops:
                 if not is_w:
                     m = int(op_miss[ri][i])
                     ri += 1
@@ -2300,6 +2549,8 @@ class RegCScaleRuntime:
         lk.last_release_time = t_rel
         self.stats["span_groups_vec"] += 1
         self.stats["span_workers_vec"] += G
+        if len(regions) > 1:
+            self.stats["span_multi_region_groups"] += 1
         return True
 
     def _span_track_touch(self, d: RegionDirectory, grp, gi, colm, IC,
@@ -2389,22 +2640,26 @@ class RegCScaleRuntime:
         if not serial and self.protocol != IDEAL_PROTO:
             serial = not self._span_flush_safe(rows, locks,
                                                rranges + wranges)
+        self._race_suspend = True
         if serial:
             self.stats["span_serial_calls"] += 1
             self.stats["span_serial_workers"] += int(rows.size)
             for w in rows:
                 self._span_one(int(w), int(locks[w]), reads, writes)
-            return
-        mask = np.zeros(W, bool)
-        mask[rows] = True
-        self._flush_all_workers(mask)
-        for lk_id in np.unique(locks[rows]):
-            grp = rows[locks[rows] == int(lk_id)]
-            if not self._span_group_vec(grp, int(lk_id), reads, writes,
-                                        rranges, wranges):
-                self.stats["span_serial_workers"] += int(grp.size)
-                for w in grp:
-                    self._span_one(int(w), int(lk_id), reads, writes)
+        else:
+            mask = np.zeros(W, bool)
+            mask[rows] = True
+            self._flush_all_workers(mask)
+            for lk_id in np.unique(locks[rows]):
+                grp = rows[locks[rows] == int(lk_id)]
+                if not self._span_group_vec(grp, int(lk_id), reads, writes,
+                                            rranges, wranges):
+                    self.stats["span_serial_workers"] += int(grp.size)
+                    for w in grp:
+                        self._span_one(int(w), int(lk_id), reads, writes)
+        self._race_suspend = False
+        if self.detect_races:
+            self._race_span_all(rows, locks, reads, writes)
 
     # ------------------------------------------------------------------
     def reduce(self, w: int, name: str, value: float, op: str = "sum"):
@@ -2467,6 +2722,12 @@ class RegCScaleRuntime:
             self._reduction_results[name] = float(fn(vals))
             self.traffic.reduction_msgs += self.W - 1
         self._reductions.clear()
+        if self.detect_races:
+            # barrier orders everyone against everyone: join all views,
+            # then every worker opens a fresh epoch
+            j = self.race_vc.max(axis=0)
+            self.race_vc[:] = j[None, :]
+            self.race_vc[self._rows_all, self._rows_all] += 1
         t = float(self.clock.max()) + self.cost.net_latency_s * log_w * (
             0 if self.protocol == IDEAL_PROTO else 1) + 1e-7 * log_w
         self.clock[:] = t
@@ -2542,9 +2803,20 @@ class RegCScaleRuntime:
             arrays[pre + "seen"] = lk.seen.copy()
             arrays[pre + "lrt"] = np.array([lk.last_release_time],
                                            np.float64)
+            if self.detect_races:
+                arrays[pre + "vc"] = lk.race_vc.copy()
             for k, v in lk.log.state_arrays().items():
                 arrays[pre + k] = v
             lock_metas.append({"id": int(lid), "version": int(lk.version)})
+        if self.detect_races:
+            # worker vector clocks slice per shard; the flagged set is
+            # replicated (global) — compose_snapshots asserts it agrees
+            # across shards, another divergence check for free
+            arrays["race_vc"] = self.race_vc.copy()
+            arrays["race_set"] = (np.array(
+                sorted((p, a, b, 0 if kind == "ww" else 1)
+                       for p, a, b, kind in self.races), np.int64)
+                if self.races else np.zeros((0, 4), np.int64))
         if self.chaos is not None:
             arrays.update(self.chaos.state_arrays())
         if self.straggler is not None:
@@ -2561,7 +2833,8 @@ class RegCScaleRuntime:
                        "fault_s": self.fault_s,
                        "fetch_batch": self.fetch_batch,
                        "backend": self.backend,
-                       "danger_mode": self.danger_mode},
+                       "danger_mode": self.danger_mode,
+                       "detect_races": self.detect_races},
             "cost": dataclasses.asdict(self.cost),
             "traffic": dataclasses.asdict(self.traffic),
             "stats": dict(self.stats),
@@ -2622,6 +2895,7 @@ class RegCScaleRuntime:
                  fetch_batch=int(cfg["fetch_batch"]),
                  backend=cfg["backend"],
                  danger_mode=cfg["danger_mode"],
+                 detect_races=bool(cfg.get("detect_races", False)),
                  chaos=chaos, injector=injector, straggler=straggler)
         rt.n_pages = int(meta["n_pages"])
         rt._region_starts = [int(x) for x in meta["region_starts"]]
@@ -2643,7 +2917,15 @@ class RegCScaleRuntime:
                 np.asarray(arrays[pre + "lrt"])[0])
             lk.log = IntervalLog.from_state(
                 {k: arrays[pre + k] for k in ("p", "lo", "hi", "voff")})
+            if pre + "vc" in arrays:
+                lk.race_vc = np.asarray(arrays[pre + "vc"],
+                                        np.int64).copy()
             rt.locks[int(lm["id"])] = lk
+        if rt.detect_races:
+            rt.race_vc = np.asarray(arrays["race_vc"], np.int64).copy()
+            rs = np.asarray(arrays["race_set"], np.int64).reshape(-1, 4)
+            rt.races = {(int(p), int(a), int(b), "ww" if k == 0 else "rw")
+                        for p, a, b, k in rs}
         rt.clock = np.asarray(arrays["clock"], np.float64).copy()
         rt._bar_clock0 = np.asarray(arrays["bar_clock0"],
                                     np.float64).copy()
@@ -2747,13 +3029,14 @@ class RegCScaleRuntime:
 
 _SNAP_ROW_KEYS = frozenset({
     "clock", "bar_clock0", "resident", "q_degraded",
-    "lru_counts", "dirty_region_counts",
+    "lru_counts", "dirty_region_counts", "race_vc",
     "chaos_msg_seq", "strag_hist_counts", "strag_streak"})
 _SNAP_FLAT_COUNTS = {"lru_entries": "lru_counts",
                      "dirty_region_flat": "dirty_region_counts",
                      "strag_hist": "strag_hist_counts"}
 _SNAP_DIR_RE = re.compile(r"^d\d{5}_")       # directory planes: all (W, ...)
-_SNAP_SEEN_RE = re.compile(r"^lk\d{5}_seen$")  # per-worker lock version seen
+# per-worker lock state: version seen + (detect_races) lock vector clock
+_SNAP_SEEN_RE = re.compile(r"^lk\d{5}_(seen|vc)$")
 
 
 def _snapshot_key_kind(key: str) -> str:

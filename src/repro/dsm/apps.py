@@ -417,3 +417,57 @@ def lock_contention(rt, n: int, iters: int, *, n_locks: int = 8,
         if on_iter is not None:
             on_iter(it, rt)
     return rt
+
+
+def race_audit(rt, n: int, iters: int, *, n_locks: int = 4,
+               driver: str = "auto", on_iter: Optional[Callable] = None):
+    """Mixed clean/racy workload for the race-detection bench
+    (fig11_races): real protocol traffic with a known, deterministic
+    set of data races for the detector to flag.
+
+    Each iteration runs
+
+    * a bulk ordinary phase on the worker's own block (clean);
+    * a striped span pass — lock ``w % n_locks`` guarding that lock's
+      private accumulator page (clean: same-lock accesses are ordered);
+    * the audit targets: a write of the own block followed — with the
+      barrier deliberately omitted — by a read of the NEXT worker's
+      block (an unordered W→R handoff: one ``rw`` race per shared
+      page), and pairwise writes to a shared scratch page with no lock
+      at all (one ``ww`` race per worker pair);
+    * a barrier closing the iteration.
+
+    The flagged race set saturates after the first iteration (tuples
+    are counted once), so ``race_ww``/``race_rw`` are deterministic and
+    the committed bench rows gate them like the ``span_*`` counters.
+    With ``detect_races=False`` the program is the detector-off
+    overhead baseline — traffic and clocks must be bit-equal (the
+    pure-observer contract)."""
+    assert n_locks >= 1
+    W = rt.W
+    pw = rt.page_words
+    A = rt.alloc(n)
+    acc = rt.alloc(n_locks * pw)       # one private page per striped lock
+    pairs = rt.alloc(((W + 1) // 2) * pw)  # one shared page per pair
+    ids = np.arange(W, dtype=np.int64)
+    lo, hi = _blocks(n, W)
+    nb_lo, nb_hi = np.roll(lo, -1), np.roll(hi, -1)   # block of (w+1)%W
+    stripe = (ids % n_locks).astype(np.int64)
+    s_lo = stripe * pw
+    s_hi = s_lo + 2
+    pr_lo = (ids // 2) * pw
+    pr_hi = pr_lo + 2
+    phase = _phase_driver(rt, driver)
+    span_phase = _span_driver(rt, driver)
+    for it in range(iters):
+        phase(reads=((A, lo, hi),), writes=((A, lo, hi),),
+              flops=2.0 * (hi - lo))
+        span_phase(stripe, reads=((acc, s_lo, s_hi),),
+                   writes=((acc, s_lo, s_hi),))
+        phase(writes=((A, lo, hi),))
+        phase(reads=((A, nb_lo, nb_hi),))   # no barrier: unordered handoff
+        phase(writes=((pairs, pr_lo, pr_hi),))  # no lock: pairwise W/W
+        rt.barrier()
+        if on_iter is not None:
+            on_iter(it, rt)
+    return rt

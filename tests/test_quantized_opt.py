@@ -24,9 +24,7 @@ from repro.train.train_step import TrainHParams, make_train_step
 KEY = jax.random.PRNGKey(0)
 
 
-@given(st.integers(1, 1000), st.floats(1e-6, 1e4))
-@settings(max_examples=25, deadline=None)
-def test_blockwise_roundtrip_error_bound(n, mag):
+def _check_blockwise_roundtrip(n, mag):
     rng = np.random.RandomState(n)
     x = jnp.asarray(rng.randn(n).astype(np.float32)) * mag
     q, s = quantize_blockwise(x)
@@ -38,6 +36,23 @@ def test_blockwise_roundtrip_error_bound(n, mag):
     bound = np.abs(xa).max(1) / 127.0 * 0.5 + 1e-20
     ea = np.pad(err, (0, pad)).reshape(-1, BLOCK)
     assert (ea <= bound[:, None] + 1e-12).all()
+
+
+@given(st.integers(1, 1000), st.floats(1e-6, 1e4))
+@settings(max_examples=25, deadline=None)
+def test_blockwise_roundtrip_error_bound(n, mag):
+    _check_blockwise_roundtrip(n, mag)
+
+
+def test_blockwise_roundtrip_error_bound_seeded():
+    """Deterministic twin of the hypothesis property above, so tier-1
+    exercises the same invariant in environments without hypothesis."""
+    rng = np.random.RandomState(7)
+    cases = [(1, 1e-6), (BLOCK, 1.0), (BLOCK + 1, 1e4), (1000, 3e-2)]
+    cases += [(int(rng.randint(1, 1001)),
+               float(10.0 ** rng.uniform(-6, 4))) for _ in range(12)]
+    for n, mag in cases:
+        _check_blockwise_roundtrip(n, mag)
 
 
 def test_q8_matches_f32_update_direction():
@@ -90,10 +105,10 @@ def test_q8_state_is_4x_smaller():
     assert q8_b < f32_b / 3.5
 
 
-@given(st.sampled_from([(7,), (3, 5), (2, 3, 130), (4, 256), (1, 1, 1)]),
-       st.integers(0, 100))
-@settings(max_examples=20, deadline=None)
-def test_blockwise_multidim_roundtrip(shape, seed):
+_MULTIDIM_SHAPES = [(7,), (3, 5), (2, 3, 130), (4, 256), (1, 1, 1)]
+
+
+def _check_blockwise_multidim(shape, seed):
     """Last-axis blocking on arbitrary ranks (the sharding-preserving
     layout): round-trip error bounded, scale shape as documented."""
     from repro.optim.quantized import scale_shape
@@ -105,3 +120,16 @@ def test_blockwise_multidim_roundtrip(shape, seed):
     back = dequantize_blockwise(q, s)
     step = np.abs(np.asarray(x)).max() / 127.0 + 1e-20
     assert np.abs(np.asarray(back - x)).max() <= step * 0.5 + 1e-12
+
+
+@given(st.sampled_from(_MULTIDIM_SHAPES), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_blockwise_multidim_roundtrip(shape, seed):
+    _check_blockwise_multidim(shape, seed)
+
+
+def test_blockwise_multidim_roundtrip_seeded():
+    """Deterministic twin: every sampled shape, two seeds each."""
+    for shape in _MULTIDIM_SHAPES:
+        for seed in (0, 37):
+            _check_blockwise_multidim(shape, seed)

@@ -1,0 +1,158 @@
+"""Race-detection fuzz suite (see ``trace_fuzz``): seeded racy/clean
+programs cross-validated on every runtime/driver pairing with
+``detect_races=True``.
+
+The contract under test (see DIRECTORY.md "Race-detection contract"):
+
+* every seeded-race trace is flagged, every clean trace is silent;
+* loop vs batched report the IDENTICAL race set after every event, with
+  traffic field-for-field and clocks bit-equal;
+* the scalar per-event oracle (``RegCRuntime``) agrees with both;
+* detection is a pure observer — a detection-off run is bit-equal in
+  traffic and clocks;
+* the race set survives mid-run chaos crash/recovery unchanged.
+"""
+import numpy as np
+import pytest
+
+import trace_fuzz
+
+N_RACE_TRACES = 120
+
+
+def test_fuzz_race_traces_detection():
+    agg = {}
+    for seed in range(N_RACE_TRACES):
+        stats = trace_fuzz.race_crosscheck(seed)
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    # both race kinds must be exercised across the corpus, and the
+    # engine paths under detection must not silently idle
+    assert agg["race_ww"] > 0, agg
+    assert agg["race_rw"] > 0, agg
+    assert agg["batched_phases"] > N_RACE_TRACES, agg
+    assert agg["span_all_calls"] > 0, agg
+    assert agg["danger_ops"] > 0, agg
+
+
+def test_fuzz_race_traces_backends_agree():
+    """numpy vs pallas directory backends under detection: the detector
+    reads the same planes the protocol writes, so race sets, traffic
+    and clocks must be identical (interpret mode is slow — subset)."""
+    pytest.importorskip("jax")
+    for seed in (1, 2, 5, 8):
+        trace_fuzz.race_crosscheck(seed, backends=("numpy", "pallas"))
+
+
+N_RACE_CHAOS_TRACES = 24
+
+
+def test_fuzz_race_chaos_recovery():
+    """Mid-run worker crashes + barrier-checkpoint replay must finish
+    with the identical race set as the uninjected detection-on run —
+    detector state (vector clocks, lock clocks, the race set itself)
+    rides snapshot/from_snapshot."""
+    agg = {}
+    for seed in range(N_RACE_CHAOS_TRACES):
+        stats = trace_fuzz.race_chaos_crosscheck(seed)
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    assert agg["crashes"] >= N_RACE_CHAOS_TRACES, agg
+    assert agg["race_ww"] + agg["race_rw"] > 0, agg
+
+
+def _mk(W=2, **kw):
+    from repro.core.regc_scale import RegCScaleRuntime
+    kw.setdefault("page_words", 4)
+    kw.setdefault("protocol", "fine")
+    kw.setdefault("prefetch", 1)
+    kw.setdefault("model_mechanism", False)
+    kw.setdefault("detect_races", True)
+    return RegCScaleRuntime(W, **kw)
+
+
+def test_race_exact_tuples_scale_and_oracle():
+    """Canonical race-tuple semantics, pinned on both runtimes: pages
+    are flagged as ``(page, a, b, kind)`` with a < b, ``ww`` for
+    write/write and ``rw`` for any read/write order, exactly once per
+    (page, pair, kind)."""
+    from repro.core import RegCRuntime
+
+    def scenario(rt, ga):
+        P = ga.page_lo
+        rt.write(0, ga, 0, 4)
+        rt.write(1, ga, 2, 6)          # pages 0 (W/W) and 1
+        rt.read(0, ga, 4, 8)           # page 1: unordered vs w1's write
+        rt.barrier()
+        rt.write(0, ga, 32, 36)        # page 8 ...
+        rt.barrier()
+        rt.read(1, ga, 32, 36)         # ... read AFTER a barrier: clean
+        return P
+
+    rt = _mk()
+    P = scenario(rt, rt.alloc(64))
+    ref = RegCRuntime(2, page_words=4, protocol="fine", prefetch=1,
+                      track_values=False, detect_races=True)
+    P2 = scenario(ref, ref.alloc(64))
+    want = {(P + 0, 0, 1, "ww"), (P + 1, 0, 1, "rw")}
+    assert rt.races == want, rt.races
+    assert ref.races == {(P2 + 0, 0, 1, "ww"), (P2 + 1, 0, 1, "rw")}
+    assert rt.race_counts == {"race_ww": 1, "race_rw": 1}
+    assert ref.race_counts == rt.race_counts
+
+
+def test_race_lock_ordering():
+    """The same page under the SAME lock is ordered (acquire joins the
+    lock's clock); under DIFFERENT locks it races."""
+    rt = _mk()
+    ga = rt.alloc(32)
+    P = ga.page_lo
+    for w in (0, 1):
+        rt.acquire(w, 0)
+        rt.write(w, ga, 0, 4)
+        rt.release(w, 0)
+    assert not rt.races, rt.races
+    for w, lk in ((0, 1), (1, 2)):
+        rt.acquire(w, lk)
+        rt.write(w, ga, 4, 8)
+        rt.release(w, lk)
+    assert rt.races == {(P + 1, 0, 1, "ww")}, rt.races
+
+
+def test_race_detection_survives_eviction():
+    """With a tiny cache the racing page is evicted and refetched
+    between the two accesses — the vector-clock planes live in the
+    directory window (which only grows), so the race is still exact."""
+    rt = _mk(cache_pages=2)
+    ga = rt.alloc(256)
+    P = ga.page_lo
+    rt.write(1, ga, 0, 4)              # page 0
+    for k in range(8):                 # churn w1's cache: page 0 evicts
+        rt.read(1, ga, 32 + 16 * k, 32 + 16 * k + 8)
+    rt.read(0, ga, 0, 4)               # still unordered vs w1's write
+    assert (P + 0, 0, 1, "rw") in rt.races, rt.races
+
+
+def test_race_detection_pure_observer_batched():
+    """phase_all with detection on vs off: traffic and clocks bit-equal
+    (the acceptance-criteria observer check, in unit form)."""
+    import dataclasses
+
+    from repro.core.regc import Traffic
+    runs = {}
+    for detect in (False, True):
+        rt = _mk(W=4, cache_pages=3, detect_races=detect)
+        ga = rt.alloc(512)
+        ids = np.arange(4, dtype=np.int64)
+        for it in range(4):
+            lo = ((ids + it) % 4) * 128
+            # NO barrier between rotations: each handoff is unordered
+            rt.phase_all(reads=[(ga, lo, lo + 64)],
+                         writes=[(ga, lo, lo + 32)])
+        rt.barrier()
+        runs[detect] = rt
+    for f in dataclasses.fields(Traffic):
+        assert (getattr(runs[True].traffic, f.name)
+                == getattr(runs[False].traffic, f.name)), f.name
+    np.testing.assert_array_equal(runs[True].clock, runs[False].clock)
+    assert runs[True].races, "rotating unsynchronized blocks must race"

@@ -141,9 +141,19 @@ def drf_program(draw):
     return ops
 
 
-@given(drf_program(), st.sampled_from([FINE_PROTO, PAGE_PROTO]))
-@settings(max_examples=40, deadline=None)
-def test_drf_sequential_consistency(ops, proto):
+def _drf_program_np(rng) -> list:
+    """Numpy-seeded mirror of the ``drf_program`` strategy for the
+    deterministic twin."""
+    ops = []
+    for _ in range(int(rng.randint(2, 13))):
+        w = int(rng.randint(0, 3))
+        lo = int(rng.randint(0, 121))
+        hi = int(rng.randint(lo + 1, min(lo + 8, 128) + 1))
+        ops.append((w, lo, hi, float(rng.uniform(-100, 100))))
+    return ops
+
+
+def _check_drf_sequential_consistency(ops, proto):
     rt = RegCRuntime(3, page_words=64, protocol=proto, track_values=True)
     g = rt.alloc(128)
     oracle = np.zeros(128, np.float32)
@@ -158,9 +168,22 @@ def test_drf_sequential_consistency(ops, proto):
         np.testing.assert_allclose(got, oracle, rtol=0, atol=0)
 
 
-@given(st.integers(1, 20), st.integers(0, 1))
-@settings(max_examples=20, deadline=None)
-def test_ordinary_stores_consistent_after_barrier(n_writes, reader):
+@given(drf_program(), st.sampled_from([FINE_PROTO, PAGE_PROTO]))
+@settings(max_examples=40, deadline=None)
+def test_drf_sequential_consistency(ops, proto):
+    _check_drf_sequential_consistency(ops, proto)
+
+
+def test_drf_sequential_consistency_seeded():
+    """Deterministic twin: seeded program draws, both protocols, so the
+    property still runs under plain pytest (no hypothesis)."""
+    for seed in range(12):
+        ops = _drf_program_np(np.random.RandomState(seed))
+        _check_drf_sequential_consistency(
+            ops, FINE_PROTO if seed % 2 == 0 else PAGE_PROTO)
+
+
+def _check_ordinary_stores(n_writes, reader):
     """Release-consistency-style property for ordinary stores + barriers."""
     rt = RegCRuntime(2, page_words=32, protocol=FINE_PROTO, track_values=True)
     g = rt.alloc(64)
@@ -179,6 +202,19 @@ def test_ordinary_stores_consistent_after_barrier(n_writes, reader):
         rt.barrier()
     got = rt.read(reader, g, 0, 64)
     np.testing.assert_allclose(got, oracle)
+
+
+@given(st.integers(1, 20), st.integers(0, 1))
+@settings(max_examples=20, deadline=None)
+def test_ordinary_stores_consistent_after_barrier(n_writes, reader):
+    _check_ordinary_stores(n_writes, reader)
+
+
+def test_ordinary_stores_consistent_after_barrier_seeded():
+    """Deterministic twin: edge counts plus a spread, both readers."""
+    for n_writes in (1, 2, 3, 7, 13, 20):
+        for reader in (0, 1):
+            _check_ordinary_stores(n_writes, reader)
 
 
 @pytest.mark.parametrize("proto", [FINE_PROTO, PAGE_PROTO])
@@ -202,9 +238,7 @@ def test_false_sharing_disjoint_words_merge(proto):
     np.testing.assert_allclose(got1, got)
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=30, deadline=None)
-def test_false_sharing_random_disjoint(seed):
+def _check_false_sharing_random(seed):
     """Property: random DISJOINT single-word ordinary writes by 3 workers
     to one page, random flush orderings via spans/barriers -> home equals
     the sequential oracle."""
@@ -228,3 +262,15 @@ def test_false_sharing_random_disjoint(seed):
         rt.barrier()
     for w in range(3):
         np.testing.assert_allclose(np.array(rt.read(w, g, 0, 64)), oracle)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_false_sharing_random_disjoint(seed):
+    _check_false_sharing_random(seed)
+
+
+def test_false_sharing_random_disjoint_seeded():
+    """Deterministic twin: fixed seed spread including large ones."""
+    for seed in (0, 1, 2, 3, 17, 1234, 2**31 - 1):
+        _check_false_sharing_random(seed)

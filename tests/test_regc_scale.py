@@ -69,10 +69,42 @@ def run_trace(rt, ops, arrays):
     return rt
 
 
-@given(trace(), st.sampled_from([FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]),
-       st.sampled_from([32, 64]))
-@settings(max_examples=60, deadline=None)
-def test_scale_engine_traffic_matches_reference(ops, proto, page_words):
+def _trace_np(rng) -> list:
+    """Numpy-seeded mirror of the ``trace()`` strategy (same op mix and
+    span/barrier constraints) for the deterministic twin."""
+    ops = []
+    depth = {w: [] for w in range(3)}
+    kinds = ["read", "write", "acquire", "release", "barrier"]
+    for _ in range(int(rng.randint(3, 26))):
+        w = int(rng.randint(0, 3))
+        kind = kinds[int(rng.randint(len(kinds)))]
+        if kind == "release":
+            if not depth[w]:
+                continue
+            ops.append(("release", w, depth[w].pop()))
+        elif kind == "acquire":
+            if len(depth[w]) >= 2:
+                continue
+            lock = int(rng.randint(0, 2))
+            depth[w].append(lock)
+            ops.append(("acquire", w, lock))
+        elif kind == "barrier":
+            if any(depth.values()):
+                continue
+            ops.append(("barrier",))
+        else:
+            arr = int(rng.randint(0, 2))
+            lo = int(rng.randint(0, 251))
+            hi = int(rng.randint(lo + 1, min(lo + 120, 256) + 1))
+            ops.append((kind, w, arr, lo, hi))
+    for w in range(3):
+        while depth[w]:
+            ops.append(("release", w, depth[w].pop()))
+    ops.append(("barrier",))
+    return ops
+
+
+def _check_scale_engine_matches_reference(ops, proto, page_words):
     ref = RegCRuntime(3, page_words=page_words, protocol=proto,
                       track_values=False, prefetch=1)
     fast = RegCScaleRuntime(3, page_words=page_words, protocol=proto,
@@ -86,6 +118,23 @@ def test_scale_engine_traffic_matches_reference(ops, proto, page_words):
             f.name, ref.traffic, fast.traffic)
     # modeled clocks agree too (identical charging rules)
     np.testing.assert_allclose(fast.clock, ref.clock, rtol=1e-9, atol=1e-12)
+
+
+@given(trace(), st.sampled_from([FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]),
+       st.sampled_from([32, 64]))
+@settings(max_examples=60, deadline=None)
+def test_scale_engine_traffic_matches_reference(ops, proto, page_words):
+    _check_scale_engine_matches_reference(ops, proto, page_words)
+
+
+def test_scale_engine_traffic_matches_reference_seeded():
+    """Deterministic twin: seeded traces cycling every protocol and page
+    size, so the cross-validation runs under plain pytest too."""
+    protos = [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]
+    for seed in range(18):
+        ops = _trace_np(np.random.RandomState(seed))
+        _check_scale_engine_matches_reference(
+            ops, protos[seed % 3], 32 if seed % 2 == 0 else 64)
 
 
 def test_scale_engine_capacity_eviction_monotone():

@@ -38,9 +38,7 @@ def tree_shapes(draw):
             for _ in range(n)]
 
 
-@given(tree_shapes(), st.integers(8, 512))
-@settings(max_examples=25, deadline=None)
-def test_bucket_roundtrip_property(shapes, bucket_bytes):
+def _check_bucket_roundtrip(shapes, bucket_bytes):
     rng = np.random.RandomState(0)
     tree = {f"p{i}": jnp.asarray(rng.randn(*s).astype(np.float32))
             for i, s in enumerate(shapes)}
@@ -49,6 +47,24 @@ def test_bucket_roundtrip_property(shapes, bucket_bytes):
     assert jax.tree.structure(out) == jax.tree.structure(tree)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
         np.testing.assert_array_equal(a, b)
+
+
+@given(tree_shapes(), st.integers(8, 512))
+@settings(max_examples=25, deadline=None)
+def test_bucket_roundtrip_property(shapes, bucket_bytes):
+    _check_bucket_roundtrip(shapes, bucket_bytes)
+
+
+def test_bucket_roundtrip_seeded():
+    """Deterministic twin: seeded shape lists across the bucket-size
+    range, plus the degenerate single-scalar tree."""
+    _check_bucket_roundtrip([(1,)], 8)
+    rng = np.random.RandomState(11)
+    for bucket_bytes in (8, 64, 200, 512):
+        shapes = [tuple(int(rng.randint(1, 8))
+                        for _ in range(int(rng.randint(1, 4))))
+                  for _ in range(int(rng.randint(1, 7)))]
+        _check_bucket_roundtrip(shapes, bucket_bytes)
 
 
 def test_bucket_sizes_respect_threshold():
@@ -63,15 +79,29 @@ def test_bucket_sizes_respect_threshold():
 # ---------------------------------------------------------------------------
 
 
-@given(st.integers(1, 2000), st.floats(1e-3, 1e3))
-@settings(max_examples=30, deadline=None)
-def test_quant_error_bound(n, scale_mag):
+def _check_quant_error_bound(n, scale_mag):
     rng = np.random.RandomState(n)
     x = jnp.asarray(rng.randn(n).astype(np.float32) * scale_mag)
     q, s = _quant(x)
     err = np.abs(np.asarray(_dequant(q, s) - x))
     # error bounded by half a quantization step
     assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(1, 2000), st.floats(1e-3, 1e3))
+@settings(max_examples=30, deadline=None)
+def test_quant_error_bound(n, scale_mag):
+    _check_quant_error_bound(n, scale_mag)
+
+
+def test_quant_error_bound_seeded():
+    """Deterministic twin: size/magnitude edges plus seeded draws."""
+    for n, mag in [(1, 1e-3), (2000, 1e3), (7, 1.0)]:
+        _check_quant_error_bound(n, mag)
+    rng = np.random.RandomState(3)
+    for _ in range(10):
+        _check_quant_error_bound(int(rng.randint(1, 2001)),
+                                 float(10.0 ** rng.uniform(-3, 3)))
 
 
 def test_quant_preserves_zero():

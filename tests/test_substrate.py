@@ -53,14 +53,25 @@ def test_synthetic_has_learnable_structure():
     assert match > 0.5, match
 
 
-@given(st.integers(0, 1000), st.sampled_from([1, 2, 4]))
-@settings(max_examples=20, deadline=None)
-def test_synthetic_stateless_by_step(step, world):
+def _check_synthetic_stateless(step, world):
     src = SyntheticTokens(vocab_size=53, seq_len=8, global_batch=4)
     for r in range(world):
         a = src.batch_at(step, rank=r, world=world)
         b = src.batch_at(step, rank=r, world=world)
         np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4]))
+@settings(max_examples=20, deadline=None)
+def test_synthetic_stateless_by_step(step, world):
+    _check_synthetic_stateless(step, world)
+
+
+def test_synthetic_stateless_by_step_seeded():
+    """Deterministic twin: step edges x every world size."""
+    for step in (0, 1, 7, 999, 1000):
+        for world in (1, 2, 4):
+            _check_synthetic_stateless(step, world)
 
 
 def test_memmap_source_roundtrip(tmp_path):
@@ -184,12 +195,28 @@ def test_straggler_monitor_ignores_single_blip():
     assert all(not f for f in out)
 
 
-@given(st.integers(2, 64), st.integers(1, 8), st.integers(8, 512))
-@settings(max_examples=30, deadline=None)
-def test_elastic_plan_preserves_batch_invariants(world, fails, gb):
+def _check_elastic_plan(world, fails, gb):
     fails = min(fails, world - 1)
     plan = plan_rescale(world, list(range(fails)), gb)
     assert plan.new_world == world - fails
     assert plan.new_global_batch % plan.new_world == 0
     assert plan.new_global_batch <= gb
     assert plan.dropped_samples < plan.new_world
+
+
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(8, 512))
+@settings(max_examples=30, deadline=None)
+def test_elastic_plan_preserves_batch_invariants(world, fails, gb):
+    _check_elastic_plan(world, fails, gb)
+
+
+def test_elastic_plan_preserves_batch_invariants_seeded():
+    """Deterministic twin: corner triples plus seeded draws."""
+    for world, fails, gb in [(2, 1, 8), (64, 8, 512), (64, 1, 8),
+                             (3, 2, 13), (17, 5, 100)]:
+        _check_elastic_plan(world, fails, gb)
+    rng = np.random.RandomState(5)
+    for _ in range(12):
+        _check_elastic_plan(int(rng.randint(2, 65)),
+                            int(rng.randint(1, 9)),
+                            int(rng.randint(8, 513)))

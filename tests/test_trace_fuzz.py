@@ -56,6 +56,12 @@ def test_fuzz_danger_traces_cross_runtime():
     # whole corpus (isomorphism must actually be checked, not assumed)
     assert agg["danger_shared_ops"] > 0, agg
     assert agg["danger_shared_ops"] < agg["danger_vec_ops"], agg
+    # the packed multi-row victim scan: near-isomorphic groups (one
+    # clamped row breaking an otherwise-lockstep phase) must still
+    # share — strictly more absorption than the all-or-nothing
+    # whole-group check alone, which measured 431 on this corpus
+    assert agg["danger_shared_ops"] > 431, agg
+    assert agg["danger_subgroup_ops"] > 0, agg
 
 
 N_SPAN_TRACES = 120
@@ -82,6 +88,61 @@ def test_fuzz_span_traces_cross_runtime():
     # mixed-payload backlog stays serial") must actually be taken — the
     # counter proves the documented serial path is live, not dead code
     assert agg["span_backlog_serial"] > 0, agg
+    # multi-region uniform groups (read one array, write another) must
+    # be absorbed by the analytic path — these shapes counted
+    # span_serial before the region-by-region grant-group algebra
+    assert agg["span_multi_region_groups"] > 0, agg
+
+
+def test_span_multi_region_groups_vectorize():
+    """Uniform span groups whose ops touch MULTIPLE regions (read one
+    array, write another) must resolve on the analytic grant-group
+    path: these shapes fell back to the serial span walk before the
+    region-by-region grant-group algebra, counting
+    ``span_serial_workers``."""
+    from repro.core import FINE_PROTO, PAGE_PROTO
+    from repro.core.regc_scale import RegCScaleRuntime
+    ids_cache = ((4, FINE_PROTO, None), (8, PAGE_PROTO, None),
+                 (8, FINE_PROTO, 64))
+    for W, proto, cache in ids_cache:
+        runs = {}
+        for driver in ("loop", "batched"):
+            rt = RegCScaleRuntime(W, page_words=16, protocol=proto,
+                                  prefetch=1, model_mechanism=False,
+                                  cache_pages=cache)
+            gas = [rt.alloc(16 * 64) for _ in range(3)]
+            ids = np.arange(W, dtype=np.int64)
+            locks = ids % 2
+            # a second lock pair for the second span shape: each lock
+            # must see the SAME payload on every re-acquire (the
+            # repeated-uniform backlog relaxation), so the two
+            # multi-region shapes may not share locks
+            locks2 = 2 + ids % 2
+            lo = np.where(locks == 0, 32, 96).astype(np.int64)
+            hi = lo + 8
+            prog = []
+            for _ in range(4):
+                prog.append(("phase", [],
+                             [(0, ids * 64, ids * 64 + 32)], 0.0, 0.0))
+                prog.append(("span_phase", None, locks,
+                             [(1, lo, hi)], [(2, lo.copy(), hi.copy())]))
+                prog.append(("span_phase", None, locks2,
+                             [(1, lo, hi), (2, lo.copy(), hi.copy())],
+                             [(1, lo.copy(), hi.copy())]))
+                prog.append(("barrier",))
+            trace_fuzz.run_program(rt, prog, gas, driver)
+            runs[driver] = rt
+        for f in dataclasses.fields(Traffic):
+            assert (getattr(runs["loop"].traffic, f.name)
+                    == getattr(runs["batched"].traffic, f.name)), \
+                (W, proto, f.name)
+        np.testing.assert_array_equal(runs["loop"].clock,
+                                      runs["batched"].clock)
+        st = runs["batched"].stats
+        assert st["span_groups_vec"] > 0, (W, proto, st)
+        assert st["span_serial_workers"] == 0, \
+            "multi-region uniform groups must stay on the analytic path"
+        assert st["span_serial_calls"] == 0, (W, proto, st)
 
 
 def test_lock_contention_app_drivers_bit_equal():

@@ -158,7 +158,8 @@ def gen_danger_program(rng, W: int, n_words: int, page_words: int,
 
 
 def gen_span_program(rng, W: int, n_words: int, page_words: int,
-                     cache_pages, n_phases: int = 7) -> List[tuple]:
+                     cache_pages, n_phases: int = 7,
+                     n_regions: int = 2) -> List[tuple]:
     """Span-dense program family for the consistency-region engine:
     bulk ordinary phases (so every span pass starts with real flush
     work to hoist), batched span passes over hot / striped / mixed lock
@@ -166,9 +167,12 @@ def gen_span_program(rng, W: int, n_words: int, page_words: int,
     intervals (the last forces spill INSIDE spans — the full-serial
     fallback), masked subsets, spans aimed at the bulk-dirty region
     (flush-unsafe — serial again), plus nested per-worker spans (the
-    dict-tracked scalar walk).  Together the corpus must drive every
-    span_all path: the analytic uniform-group pass, the per-worker
-    Tier-B body, and the serial fallbacks."""
+    dict-tracked scalar walk).  With ``n_regions >= 3`` span passes may
+    split their ops across two clean regions (read one array, write
+    another) — the multi-region uniform groups that serialized before
+    the region-by-region grant-group algebra.  Together the corpus must
+    drive every span_all path: the analytic uniform-group pass, the
+    per-worker Tier-B body, and the serial fallbacks."""
     prog: List[tuple] = []
     ids = np.arange(W, dtype=np.int64)
     for ip in range(n_phases):
@@ -219,6 +223,14 @@ def gen_span_program(rng, W: int, n_words: int, page_words: int,
             reads_s = [(g, lo, hi)] if rng.random() < 0.8 else []
             writes_s = ([(g, lo.copy(), hi.copy())]
                         if rng.random() < 0.9 else [])
+            if n_regions >= 3 and writes_s and rng.random() < 0.4:
+                # multi-region span ops: the write lands in a DIFFERENT
+                # region than the read, so uniform grant groups must
+                # resolve region-by-region on the analytic path (these
+                # shapes counted span_serial before PR 8)
+                writes_s = [(2 if g != 2 else 1, lo.copy(), hi.copy())]
+                if reads_s and rng.random() < 0.5:
+                    reads_s.append((writes_s[0][0], lo.copy(), hi.copy()))
             prog.append(("span_phase", mask, locks, reads_s, writes_s))
         if rng.random() < 0.4:
             evs = []
@@ -235,6 +247,221 @@ def gen_span_program(rng, W: int, n_words: int, page_words: int,
             prog.append(("barrier",))
     prog.append(("barrier",))
     return prog
+
+
+def race_trace_params(seed: int) -> Dict:
+    """Race-family params: alternating racy/clean traces over the full
+    cache spectrum (None / generous / forced-spill), so detection is
+    exercised both on the plain batched path and under the
+    eviction/refetch engine (planes must survive window ops)."""
+    rng = np.random.default_rng(50_000 + seed)
+    W = int(rng.integers(2, 5))
+    page_words = int(rng.choice([8, 16, 32]))
+    n_words = page_words * int(rng.integers(12, 32))
+    cache_pages = [None, 3, 6, 9][seed % 4]
+    return dict(rng=rng, W=W, page_words=page_words, n_words=n_words,
+                cache_pages=cache_pages, proto=PROTOS[seed % 3],
+                racy=bool(seed % 2))
+
+
+def gen_race_program(rng, W: int, n_words: int, page_words: int,
+                     racy: bool, n_segments: int = 6) -> List[tuple]:
+    """Race-family generator.  Clean programs are race-free BY
+    CONSTRUCTION: within a segment writes are owner-disjoint (or the
+    whole range is serialized under ONE lock) and reads never overlap a
+    peer's same-segment writes; segments are separated by barriers, so
+    every cross-segment conflict is ordered.  Racy programs splice 1-3
+    conflict gadgets into that skeleton — same-phase overlapping writes
+    (W/W), a write->read page handoff with the barrier OMITTED (R/W),
+    and a shared span range under DIFFERENT locks (no common lock, no
+    happens-before) — each a guaranteed race, so the detector must flag
+    every racy trace and stay silent on every clean one."""
+    ids = np.arange(W, dtype=np.int64)
+    # owner blocks are PAGE-disjoint: detection is page-granular, so a
+    # clean program may not let two workers write the same page even at
+    # disjoint word offsets (that flags — conservatively — by design)
+    chunk = max(n_words // (W * page_words), 1) * page_words
+    own_lo = ids * chunk
+    own_hi = np.minimum(own_lo + chunk, n_words)
+    shared_hi = min(n_words, max(2 * page_words, chunk))
+    prog: List[tuple] = []
+
+    def seg_own():
+        return [("phase", [(0, own_lo.copy(), own_hi.copy())],
+                 [(0, own_lo.copy(), own_hi.copy())], 0.0, 0.0)]
+
+    def seg_readall():
+        hi = np.full(W, int(rng.integers(2, n_words + 1)), np.int64)
+        return [("phase", [(0, np.zeros(W, np.int64), hi)], [], 0.0, 0.0)]
+
+    def seg_lockstep():
+        lo = np.zeros(W, np.int64)
+        hi = np.full(W, shared_hi, np.int64)
+        return [("span_phase", None, np.zeros(W, np.int64),
+                 [(1, lo, hi)], [(1, lo.copy(), hi.copy())])]
+
+    def seg_rotate(k):
+        r = (ids + k) % W
+        lo = r * chunk
+        hi = np.minimum(lo + chunk, n_words)
+        return [("phase", [(0, lo, hi)], [(0, lo.copy(), hi.copy())],
+                 0.0, 0.0)]
+
+    for k in range(n_segments):
+        pick = int(rng.integers(0, 4))
+        prog += (seg_own, seg_readall, seg_lockstep,
+                 lambda: seg_rotate(k))[pick]()
+        prog.append(("barrier",))
+
+    if not racy:
+        return prog
+
+    def gadget_ww():
+        a, b = (int(x) for x in rng.choice(W, 2, replace=False))
+        x = int(rng.integers(0, max(n_words - 2 * page_words, 1)))
+        lo, hi = own_lo.copy(), own_hi.copy()
+        lo[a] = lo[b] = x
+        hi[a] = hi[b] = min(x + int(rng.integers(1, 2 * page_words)),
+                            n_words)
+        return [("phase", [], [(0, lo, hi)], 0.0, 0.0)]
+
+    def gadget_rw():
+        a, b = (int(x) for x in rng.choice(W, 2, replace=False))
+        x = int(rng.integers(0, max(n_words - 2 * page_words, 1)))
+        x_hi = min(x + int(rng.integers(1, 2 * page_words)), n_words)
+        lo_w, hi_w = own_lo.copy(), own_hi.copy()
+        lo_w[a], hi_w[a] = x, x_hi
+        lo_r, hi_r = own_lo.copy(), own_hi.copy()
+        lo_r[b], hi_r[b] = x, x_hi
+        # write -> read handoff with the barrier OMITTED between phases
+        return [("phase", [], [(0, lo_w, hi_w)], 0.0, 0.0),
+                ("phase", [(0, lo_r, hi_r)], [], 0.0, 0.0)]
+
+    def gadget_span_race():
+        # the same shared range under DIFFERENT locks: serialized within
+        # each lock group, racing across them
+        lo = np.zeros(W, np.int64)
+        hi = np.full(W, shared_hi, np.int64)
+        return [("span_phase", None, ids % 2, [(1, lo, hi)],
+                 [(1, lo.copy(), hi.copy())])]
+
+    gadgets = [gadget_ww, gadget_rw, gadget_span_race]
+    for _ in range(int(rng.integers(1, 4))):
+        gev = gadgets[int(rng.integers(0, 3))]()
+        pos = int(rng.integers(0, len(prog) + 1))
+        # a gadget is spliced as one contiguous chunk, so no barrier can
+        # land inside it and its seeded race survives later splices
+        prog[pos:pos] = gev
+    return prog
+
+
+def race_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
+    """Run one race-family trace with ``detect_races=True`` on every
+    driver pairing and assert the detection contract:
+
+    * loop vs batched: the IDENTICAL race set after every event (the
+      batched detector flags at pass granularity, but the page-granular
+      race set is processing-order independent), traffic field-for-field
+      and clocks bit-equal;
+    * the scalar per-event oracle (``RegCRuntime``) reports the same
+      final race set and counts;
+    * pure observer: a detection-off batched run has bit-equal traffic
+      and clocks after every event;
+    * every racy trace is flagged; every clean trace is silent."""
+    p = race_trace_params(seed)
+    prog = gen_race_program(p["rng"], p["W"], p["n_words"],
+                            p["page_words"], p["racy"])
+    n = p["n_words"]
+    stats: Dict[str, int] = {}
+    for backend in backends:
+        def make_scale(detect):
+            return RegCScaleRuntime(p["W"], page_words=p["page_words"],
+                                    protocol=p["proto"], prefetch=1,
+                                    model_mechanism=False,
+                                    cache_pages=p["cache_pages"],
+                                    backend=backend, detect_races=detect)
+        runs = {"loop": make_scale(True), "batched": make_scale(True)}
+        off = make_scale(False)
+        gas = {d: [rt.alloc(n), rt.alloc(n)] for d, rt in runs.items()}
+        gas_off = [off.alloc(n), off.alloc(n)]
+        ctx = (seed, p["proto"], p["cache_pages"], backend, p["racy"])
+        for i, ev in enumerate(prog):
+            for d, rt in runs.items():
+                apply_event(rt, ev, gas[d], d)
+            apply_event(off, ev, gas_off, "batched")
+            assert runs["loop"].races == runs["batched"].races, \
+                (ctx, i, ev[0], runs["loop"].races ^ runs["batched"].races)
+            np.testing.assert_allclose(
+                runs["batched"].clock, runs["loop"].clock, rtol=0, atol=0,
+                err_msg=f"{ctx} event {i} ({ev[0]})")
+            np.testing.assert_allclose(
+                runs["batched"].clock, off.clock, rtol=0, atol=0,
+                err_msg=f"{ctx} observer event {i} ({ev[0]})")
+        assert_traffic_equal(runs["loop"], runs["batched"], ctx)
+        assert_traffic_equal(off, runs["batched"], ctx + ("observer",))
+        assert off.stats["race_ww"] == 0 and off.stats["race_rw"] == 0
+
+        ref = RegCRuntime(p["W"], page_words=p["page_words"],
+                          protocol=p["proto"], track_values=False,
+                          prefetch=1, cache_pages=p["cache_pages"],
+                          detect_races=True)
+        run_program(ref, prog, [ref.alloc(n), ref.alloc(n)], "ref")
+        assert ref.races == runs["batched"].races, \
+            (ctx, ref.races ^ runs["batched"].races)
+        assert ref.race_counts == runs["batched"].race_counts, ctx
+        if p["racy"]:
+            assert runs["batched"].races, (ctx, "seeded race not flagged")
+        else:
+            assert not runs["batched"].races, (ctx, runs["batched"].races)
+        for k, v in runs["batched"].stats.items():
+            stats[k] = stats.get(k, 0) + v
+    return stats
+
+
+def race_chaos_crosscheck(seed: int) -> Dict[str, int]:
+    """Mid-run crash/recovery must not change the flagged race set: a
+    race-family trace run under ``ChaosHarness`` (worker kills +
+    barrier-checkpoint replay, with detector state riding
+    ``snapshot``/``from_snapshot``) finishes with the identical race
+    set, traffic, clocks and stats as the uninjected detection-on
+    baseline — on both drivers."""
+    import tempfile
+
+    from repro.ft import (ChaosHarness, FailureInjector, assert_bit_equal,
+                          run_uninjected)
+    p = race_trace_params(seed)
+    prog = gen_race_program(p["rng"], p["W"], p["n_words"],
+                            p["page_words"], p["racy"])
+    n = p["n_words"]
+
+    def make_rt():
+        return RegCScaleRuntime(p["W"], page_words=p["page_words"],
+                                protocol=p["proto"], prefetch=1,
+                                model_mechanism=False,
+                                cache_pages=p["cache_pages"],
+                                detect_races=True)
+
+    rng = np.random.default_rng(60_000 + seed)
+    n_crash = int(rng.integers(1, 3))
+    at_steps = [int(s) for s in
+                rng.choice(np.arange(1, len(prog) + 1), size=n_crash,
+                           replace=False)]
+    stats: Dict[str, int] = {}
+    for d in ("loop", "batched"):
+        base = run_uninjected(make_rt, [n, n], d, prog, apply_event)
+        with tempfile.TemporaryDirectory() as td:
+            inj = FailureInjector(at_steps=at_steps)
+            rt, rep = ChaosHarness(make_rt, [n, n], d, td, apply_event,
+                                   injector=inj).run(prog)
+        assert rep.n_crashes == n_crash, (seed, d, at_steps, rep)
+        assert_bit_equal(rt, base, (seed, d))
+        assert rt.races == base.races, (seed, d, rt.races ^ base.races)
+        if p["racy"]:
+            assert rt.races, (seed, d, "race set lost in recovery")
+        stats["crashes"] = stats.get("crashes", 0) + rep.n_crashes
+        for k in ("race_ww", "race_rw"):
+            stats[k] = stats.get(k, 0) + rt.stats[k]
+    return stats
 
 
 def apply_event(rt, ev, gas, driver: str):
@@ -372,11 +599,13 @@ def crosscheck(seed: int, *, check_ref: bool = True,
     elif family == "span":
         p = span_trace_params(seed)
         prog = gen_span_program(p["rng"], p["W"], p["n_words"],
-                                p["page_words"], p["cache_pages"])
+                                p["page_words"], p["cache_pages"],
+                                n_regions=3)
     else:
         p = trace_params(seed)
         prog = gen_program(p["rng"], p["W"], p["n_words"], p["page_words"])
     n_alloc = p["n_words"]
+    n_regs = 3 if family == "span" else 2
 
     def make_scale(backend, danger_mode="vec"):
         return RegCScaleRuntime(p["W"], page_words=p["page_words"],
@@ -390,8 +619,8 @@ def crosscheck(seed: int, *, check_ref: bool = True,
         ref = RegCRuntime(p["W"], page_words=p["page_words"],
                           protocol=p["proto"], track_values=False,
                           prefetch=1, cache_pages=p["cache_pages"])
-        run_program(ref, prog, [ref.alloc(n_alloc), ref.alloc(n_alloc)],
-                    "ref")
+        run_program(ref, prog,
+                    [ref.alloc(n_alloc) for _ in range(n_regs)], "ref")
 
     stats: Dict[str, int] = {}
     for backend in backends:
@@ -401,7 +630,7 @@ def crosscheck(seed: int, *, check_ref: bool = True,
         # (a charge landing on the wrong worker with the right total)
         runs = {"loop": make_scale(backend),
                 "batched": make_scale(backend)}
-        gas = {d: [rt.alloc(n_alloc), rt.alloc(n_alloc)]
+        gas = {d: [rt.alloc(n_alloc) for _ in range(n_regs)]
                for d, rt in runs.items()}
         ctx = (seed, p["proto"], p["cache_pages"], backend)
         for i, ev in enumerate(prog):
@@ -465,7 +694,7 @@ def chaos_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
     rng = p["rng"]
     if seed % 2:
         prog = gen_span_program(rng, p["W"], p["n_words"], p["page_words"],
-                                p["cache_pages"], n_phases=5)
+                                p["cache_pages"], n_phases=5, n_regions=3)
     else:
         prog = gen_program(rng, p["W"], p["n_words"], p["page_words"],
                            n_phases=5)
@@ -489,7 +718,7 @@ def chaos_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
                 chaos=ChaosNet(seed=seed, drop_rate=p["drop"]),
                 straggler=StragglerMonitor(p["W"], window=4, patience=1))
 
-        base = {d: run_uninjected(make_rt, [n, n], d, prog, apply_event)
+        base = {d: run_uninjected(make_rt, [n, n, n], d, prog, apply_event)
                 for d in ("loop", "batched")}
         ctx = (seed, p["proto"], p["cache_pages"], p["drop"], backend)
         assert_traffic_equal(base["loop"], base["batched"], ctx)
@@ -502,7 +731,7 @@ def chaos_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
         for d in ("loop", "batched"):
             with tempfile.TemporaryDirectory() as td:
                 inj = FailureInjector(at_steps=at_steps)
-                rt, rep = ChaosHarness(make_rt, [n, n], d, td, apply_event,
+                rt, rep = ChaosHarness(make_rt, [n, n, n], d, td, apply_event,
                                        injector=inj).run(prog)
             assert rep.n_crashes == n_crash, (ctx, d, at_steps, rep)
             assert_bit_equal(rt, base[d], (ctx, d))
@@ -598,7 +827,7 @@ def cluster_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
         # clean sharded run: lockstep digests + bit-equal finish
         with tempfile.TemporaryDirectory() as td:
             res, rep, digests = ClusterChaosHarness(
-                cfg, [n, n], p["driver"], td,
+                cfg, [n, n, n], p["driver"], td,
                 ("trace_fuzz", "apply_event"),
                 n_shards=p["n_shards"]).run(prog)
         assert_bit_equal(res, rt, ctx + ("clean",))
@@ -609,7 +838,7 @@ def cluster_crosscheck(seed: int, *, backends=("numpy",)) -> Dict[str, int]:
         with tempfile.TemporaryDirectory() as td:
             inj = FailureInjector(cluster_at=cluster_at)
             res, rep, digests = ClusterChaosHarness(
-                cfg, [n, n], p["driver"], td,
+                cfg, [n, n, n], p["driver"], td,
                 ("trace_fuzz", "apply_event"),
                 n_shards=p["n_shards"], recovery=p["recovery"],
                 # jax backends can stall a healthy shard for seconds on
