@@ -9,7 +9,7 @@ import warnings
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO
+from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, make_runtime
 from repro.core.regc_scale import RegCScaleRuntime
 from repro.dsm.costmodel import IB_2013
 
@@ -31,7 +31,7 @@ def make_rt(series: str, workers: int, **kw) -> RegCScaleRuntime:
     # number may change (benchmarks.compare --strict-model verifies)
     kw.setdefault("detect_races",
                   os.environ.get("BENCH_DETECT_RACES") == "1")
-    return RegCScaleRuntime(workers, protocol=SERIES[series], **kw)
+    return make_runtime(workers, protocol=SERIES[series], **kw)
 
 
 def traffic_fields(rt) -> Dict[str, int]:
@@ -187,7 +187,8 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                    if k.startswith("tr_") or k.startswith("danger_")
                    or k.startswith("span_") or k.startswith("chaos_")
                    or k.startswith("straggler_")
-                   or k.startswith("rec_") or k.startswith("race_")}})
+                   or k.startswith("rec_") or k.startswith("race_")
+                   or k.startswith("srv_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

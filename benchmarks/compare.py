@@ -9,8 +9,8 @@ on any exact-traffic drift.
   seconds (pure noise on a busy box); or
 * a point's exact protocol traffic changed — ``total_bytes`` or any
   ``tr_*`` field both files carry — or its deterministic ``danger_*`` /
-  ``span_*`` / ``chaos_*`` / ``straggler_*`` / ``rec_*`` / ``race_*``
-  counters did
+  ``span_*`` / ``chaos_*`` / ``straggler_*`` / ``rec_*`` / ``race_*`` /
+  ``srv_*`` counters did
   (a spill or lock regime silently flipping
   from the vectorized schedule to a scalar fallback keeps traffic
   identical but is a perf regression).  Traffic is deterministic (the
@@ -101,7 +101,7 @@ def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
                 if f.startswith("tr_") or f.startswith("danger_")
                 or f.startswith("span_") or f.startswith("chaos_")
                 or f.startswith("straggler_") or f.startswith("rec_")
-                or f.startswith("race_"))
+                or f.startswith("race_") or f.startswith("srv_"))
             & set(nr))
         bad = [f for f in tfields if br.get(f) != nr.get(f)]
         if bad:

@@ -51,9 +51,9 @@ def main(argv=None):
         return args.sections is None or any(
             s in name or any(s in t for t in tags) for s in args.sections)
 
-    from benchmarks import (availability, common, jacobi, lock_contention,
-                            molecular_dynamics, races, recovery,
-                            regc_training, roofline, stream_triad)
+    from benchmarks import (availability, common, jacobi, kv_serving,
+                            lock_contention, molecular_dynamics, races,
+                            recovery, regc_training, roofline, stream_triad)
 
     sections = []
     for d in drivers:
@@ -106,6 +106,15 @@ def main(argv=None):
             (f"Race detection (detector on/off) {tag}",
              f"races{tag}", False, ("race",),
              lambda drv=drv: races.main(
+                 ["--iters", str(iters)] + drv)),
+            # KV-cache serving adversary (inference traffic); the request
+            # stream is a pure function of (W, seed) — independent of
+            # --iters — so like lock_contention a focused run regenerates
+            # the exact committed point set and the CI serve job
+            # redirects its CSVs with BENCH_OUT (see bench_lock)
+            (f"KV-cache serving (inference traffic) {tag}",
+             f"kv_serving{tag}", False, ("serve",),
+             lambda drv=drv: kv_serving.main(
                  ["--iters", str(iters)] + drv)),
         ]
     sections += [

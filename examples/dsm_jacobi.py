@@ -12,14 +12,16 @@ import argparse
 
 import numpy as np
 
-from repro.core import FINE_PROTO, PAGE_PROTO, RegCRuntime
+from repro.core import FINE_PROTO, PAGE_PROTO, RuntimeConfig, make_runtime
 
 RES_LOCK = 0
 
 
 def run(n=32, workers=4, iters=700, mode="lock", protocol=FINE_PROTO):
-    rt = RegCRuntime(workers, page_words=256, protocol=protocol,
-                     track_values=True)
+    # the reference engine is the one that carries VALUES end to end
+    rt = make_runtime(workers,
+                      RuntimeConfig(page_words=256, protocol=protocol),
+                      engine="reference")
     u = rt.alloc(n * n)
     uold = rt.alloc(n * n)
     fga = rt.alloc(n * n)

@@ -1,8 +1,13 @@
 """Quickstart: the RegC public API in five minutes.
 
-1. The consistency model itself (spans, barriers, the two protocols).
+1. The consistency model itself (spans, barriers, the two protocols),
+   built through the one public entry point: ``RuntimeConfig`` +
+   ``make_runtime``.
 2. The paper's reduction extension.
-3. RegC as a training-sync policy on a real model.
+3. The ``Session`` façade — the portable way to drive SPMD phases and
+   spans (same program text on the reference oracle and the vectorized
+   scale engine), shown on the KV-cache serving workload.
+4. RegC as a training-sync policy on a real model.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,8 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FINE_PROTO, PAGE_PROTO, RegCRuntime
 from repro.configs import get_reduced
+from repro.core import FINE_PROTO, PAGE_PROTO, RuntimeConfig, make_runtime
+from repro.dsm.apps import kv_serving
+from repro.dsm.session import session
 from repro.models import model as M
 from repro.optim.adamw import init_opt_state
 from repro.train.train_step import TrainHParams, make_train_step
@@ -21,8 +28,8 @@ def demo_consistency_model():
     print("== 1. regional consistency: spans make critical-section stores "
           "visible ==")
     for proto in (FINE_PROTO, PAGE_PROTO):
-        rt = RegCRuntime(2, page_words=1024, protocol=proto,
-                         track_values=True)
+        cfg = RuntimeConfig(page_words=1024, protocol=proto)
+        rt = make_runtime(2, cfg, engine="reference")
         shared = rt.alloc(4096)             # 4 pages in the global space
 
         # worker 0 updates two words inside a critical section (a span)
@@ -43,7 +50,7 @@ def demo_consistency_model():
 
 def demo_reduction_extension():
     print("== 2. the reduction extension (paper V-B) ==")
-    rt = RegCRuntime(8, protocol=FINE_PROTO)
+    rt = make_runtime(8, engine="reference")
     for w in range(8):
         rt.reduce(w, "residual", float(w))   # replaces mutex-accumulate
     rt.barrier()
@@ -51,8 +58,33 @@ def demo_reduction_extension():
           f"(runtime log-tree, never a lock)\n")
 
 
+def demo_session_serving():
+    print("== 3. the Session façade + the KV-cache serving workload ==")
+    # the scale engine resolves driver='auto' to the worker-axis-batched
+    # phase_all/span_all path; the reference oracle resolves to the
+    # per-worker loop — SAME program text, bit-equal traffic
+    for engine in ("scale", "reference"):
+        # traffic/clock modeling only (track_values=False): the serving
+        # program is an interval workload, values never flow through it
+        rt = make_runtime(4, RuntimeConfig(page_words=64, cache_pages=2,
+                                           model_mechanism=False,
+                                           track_values=False),
+                          engine=engine)
+        s = session(rt)                     # driver='auto'
+        rep = kv_serving(rt, 12, tok_words=8, max_tokens=24, attn_window=8,
+                         seed=3)
+        print(f"  engine={engine:9s} driver={s.driver:7s}: "
+              f"{rep.latencies().size} requests, "
+              f"p50={rep.latency_pct(50) * 1e3:.3f}ms "
+              f"p99={rep.latency_pct(99) * 1e3:.3f}ms "
+              f"bytes={rt.traffic.total_bytes}")
+    print("  -> continuous batching as a RegC program: prefill = bulk "
+          "writes, decode = windowed\n     reads + appends, admission = "
+          "lock spans; eviction pressure is the adversary\n")
+
+
 def demo_training_sync():
-    print("== 3. RegC as the gradient-sync policy of a trainer ==")
+    print("== 4. RegC as the gradient-sync policy of a trainer ==")
     cfg = get_reduced("internlm2-1.8b")
     params = M.init_model_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     opt = init_opt_state(params)
@@ -72,4 +104,5 @@ def demo_training_sync():
 if __name__ == "__main__":
     demo_consistency_model()
     demo_reduction_extension()
+    demo_session_serving()
     demo_training_sync()

@@ -1,5 +1,26 @@
-from repro.core.directory import IntervalLog, RegionDirectory
-from repro.core.regc import (
-    FINE_PROTO, GasArray, IDEAL_PROTO, PAGE_PROTO, RegCRuntime, Traffic,
+"""Public surface of the RegC protocol core.
+
+Build runtimes through ``make_runtime``/``RuntimeConfig`` and drive them
+through ``repro.dsm.session`` — the engine constructors remain importable
+as back-compat shims (same semantics, proven bit-equal by
+``tests/test_api.py``), but new code should not spell their keyword lists
+out by hand.
+"""
+from repro.core.config import (
+    BACKENDS, DANGER_MODES, DRIVERS, ENGINES, FINE_PROTO, IDEAL_PROTO,
+    PAGE_PROTO, PROTOCOLS, RuntimeConfig, check_choice, make_runtime,
 )
+from repro.core.directory import IntervalLog, RegionDirectory
+from repro.core.regc import GasArray, RegCRuntime, Traffic
 from repro.core.regc_scale import RegCScaleRuntime
+
+__all__ = [
+    # config / factory
+    "RuntimeConfig", "make_runtime", "check_choice",
+    # canonical string-knob vocabularies
+    "PROTOCOLS", "BACKENDS", "DANGER_MODES", "DRIVERS", "ENGINES",
+    "FINE_PROTO", "PAGE_PROTO", "IDEAL_PROTO",
+    # engines + data types
+    "RegCRuntime", "RegCScaleRuntime", "GasArray", "Traffic",
+    "IntervalLog", "RegionDirectory",
+]

@@ -1,0 +1,134 @@
+"""Public configuration surface for the RegC runtimes.
+
+One frozen spec (``RuntimeConfig``) + one factory (``make_runtime``) build
+either protocol engine — the directory-vectorized ``RegCScaleRuntime``
+(``engine="scale"``) or the per-page oracle ``RegCRuntime``
+(``engine="reference"``) — from the same declaration, replacing the two
+keyword constructors as the supported entry point (the old constructors
+remain as thin back-compat shims; ``tests/test_api.py`` proves bit-equal
+traffic/clocks either way).
+
+This module is the bottom layer of ``repro.core``: it defines the
+canonical string-knob vocabularies (``PROTOCOLS``, ``BACKENDS``,
+``DANGER_MODES``, ``DRIVERS``, ``ENGINES``) and the shared validator
+``check_choice`` the engines use instead of bare ``assert``s, and imports
+nothing from the engine modules at import time (they import *us*).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.dsm.costmodel import CostModel, IB_2013
+
+# protocol vocabulary (the paper's three series)
+PAGE_PROTO = "page"    # samhita_page: page invalidation for BOTH region kinds
+FINE_PROTO = "fine"    # samhita: fine-grain diffs for consistency regions
+IDEAL_PROTO = "ideal"  # cache-coherent shared memory (Pthreads baseline)
+
+PROTOCOLS = (FINE_PROTO, PAGE_PROTO, IDEAL_PROTO)
+BACKENDS = ("numpy", "pallas")      # plane-reduction backend (scale engine)
+DANGER_MODES = ("vec", "scalar")    # mid-op refetch replay path (scale)
+DRIVERS = ("auto", "batched", "loop")   # SPMD phase/span drivers (Session)
+ENGINES = ("scale", "reference")        # make_runtime targets
+
+# mechanism costs (calibration constants; provenance in EXPERIMENTS.md
+# §Paper-repro): instrumented store = call + hash-table update; write fault
+# = trap + mprotect re-arm, order ~microseconds on the paper's Harpertown.
+INSTR_S_PER_WORD = 1.5e-9
+FAULT_S = 4.0e-6
+
+
+def check_choice(name: str, value, allowed) -> str:
+    """Validate a string knob against its canonical vocabulary.
+
+    Raises ``ValueError`` naming the bad value AND the allowed set —
+    the one replacement for the bare ``assert knob in (...)`` checks that
+    used to die with a bare ``AssertionError`` (or pass silently under
+    ``python -O``)."""
+    if value not in allowed:
+        raise ValueError(
+            f"invalid {name}={value!r}; allowed: "
+            + ", ".join(repr(c) for c in allowed))
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Frozen spec for building a RegC runtime (either engine).
+
+    Engine-specific knobs are documented per field; the reference engine
+    ignores the scale engine's *performance/mechanism* knobs (they change
+    wall time or modeled mechanism cost, never protocol semantics) but
+    refuses the fault-injection hooks it cannot honor (``chaos``,
+    ``injector``, ``straggler`` — behavior-bearing)."""
+
+    page_words: int = 1024
+    protocol: str = FINE_PROTO
+    cost: CostModel = IB_2013
+    cache_pages: Optional[int] = None   # per-worker cache (None = infinite)
+    prefetch: int = 1
+    n_mem_servers: int = 1
+    track_values: bool = True           # reference only: materialize pages
+    model_mechanism: bool = True        # scale only: §IV store tracking
+    instr_s_per_word: float = INSTR_S_PER_WORD   # scale only
+    fault_s: float = FAULT_S                     # scale only
+    fetch_batch: int = 1                # scale only: bulk-fetch batching
+    backend: str = "numpy"              # scale only: plane reductions
+    danger_mode: str = "vec"            # scale only: mid-op refetch replay
+    detect_races: bool = False          # pure-observer race detection
+    chaos: Any = None                   # scale only: ChaosNet hook
+    injector: Any = None                # scale only: FaultInjector hook
+    straggler: Any = None               # scale only: StragglerMonitor hook
+
+    def __post_init__(self):
+        check_choice("protocol", self.protocol, PROTOCOLS)
+        check_choice("backend", self.backend, BACKENDS)
+        check_choice("danger_mode", self.danger_mode, DANGER_MODES)
+
+
+def make_runtime(n_workers: int, config: Optional[RuntimeConfig] = None,
+                 *, engine: str = "scale", **overrides):
+    """Build a RegC runtime from one spec.
+
+    ``config`` defaults to ``RuntimeConfig()``; keyword ``overrides``
+    are applied on top via ``dataclasses.replace`` (unknown field names
+    raise, catching typos the old ``**kw`` constructors swallowed into
+    ``TypeError`` at the wrong frame).  ``engine="scale"`` returns the
+    directory-vectorized ``RegCScaleRuntime``; ``engine="reference"``
+    the per-page oracle ``RegCRuntime``.  Both are driven through the
+    same declared-access API (``repro.dsm.session``)."""
+    check_choice("engine", engine, ENGINES)
+    cfg = config if config is not None else RuntimeConfig()
+    if overrides:
+        try:
+            cfg = dataclasses.replace(cfg, **overrides)
+        except TypeError as e:
+            known = ", ".join(f.name for f in dataclasses.fields(cfg))
+            raise ValueError(
+                f"make_runtime(): unknown RuntimeConfig override "
+                f"({e}); known fields: {known}") from None
+    if engine == "scale":
+        from repro.core.regc_scale import RegCScaleRuntime
+        return RegCScaleRuntime(
+            n_workers, page_words=cfg.page_words, protocol=cfg.protocol,
+            cost=cfg.cost, cache_pages=cfg.cache_pages,
+            prefetch=cfg.prefetch, n_mem_servers=cfg.n_mem_servers,
+            model_mechanism=cfg.model_mechanism,
+            instr_s_per_word=cfg.instr_s_per_word, fault_s=cfg.fault_s,
+            fetch_batch=cfg.fetch_batch, backend=cfg.backend,
+            danger_mode=cfg.danger_mode, detect_races=cfg.detect_races,
+            chaos=cfg.chaos, injector=cfg.injector,
+            straggler=cfg.straggler)
+    for hook in ("chaos", "injector", "straggler"):
+        if getattr(cfg, hook) is not None:
+            raise ValueError(
+                f"make_runtime(engine='reference'): the reference engine "
+                f"does not support the {hook!r} fault-injection hook "
+                f"(use engine='scale')")
+    from repro.core.regc import RegCRuntime
+    return RegCRuntime(
+        n_workers, page_words=cfg.page_words, protocol=cfg.protocol,
+        cost=cfg.cost, track_values=cfg.track_values,
+        cache_pages=cfg.cache_pages, prefetch=cfg.prefetch,
+        n_mem_servers=cfg.n_mem_servers, detect_races=cfg.detect_races)

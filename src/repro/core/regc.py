@@ -29,11 +29,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.config import (FINE_PROTO, IDEAL_PROTO, PAGE_PROTO,
+                               PROTOCOLS, check_choice)
 from repro.dsm.costmodel import CostModel, IB_2013
-
-PAGE_PROTO = "page"    # samhita_page: page invalidation for BOTH region kinds
-FINE_PROTO = "fine"    # samhita: fine-grain diffs for consistency regions
-IDEAL_PROTO = "ideal"  # cache-coherent shared memory (Pthreads baseline)
 
 _WORD = 4  # fp32 words
 
@@ -104,7 +102,7 @@ class RegCRuntime:
                  track_values: bool = True, cache_pages: Optional[int] = None,
                  prefetch: int = 1, n_mem_servers: int = 1,
                  detect_races: bool = False):
-        assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
+        check_choice("protocol", protocol, PROTOCOLS)
         self.W = n_workers
         self.page_words = page_words
         self.page_bytes = page_words * _WORD

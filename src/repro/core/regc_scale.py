@@ -59,16 +59,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.config import (DANGER_MODES, FAULT_S, INSTR_S_PER_WORD,
+                               PROTOCOLS, check_choice)
 from repro.core.directory import IntervalLog, RegionDirectory, use_dense
 from repro.core.regc import (FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, GasArray,
                              Traffic, _WORD)
 from repro.dsm.costmodel import CostModel, IB_2013
-
-# mechanism costs (calibration constants; provenance in EXPERIMENTS.md
-# §Paper-repro): instrumented store = call + hash-table update; write fault
-# = trap + mprotect re-arm, order ~microseconds on the paper's Harpertown.
-INSTR_S_PER_WORD = 1.5e-9
-FAULT_S = 4.0e-6
 
 
 class _Span:
@@ -114,14 +110,14 @@ class RegCScaleRuntime:
                  backend: str = "numpy", danger_mode: str = "vec",
                  detect_races: bool = False,
                  chaos=None, injector=None, straggler=None):
-        assert protocol in (PAGE_PROTO, FINE_PROTO, IDEAL_PROTO)
+        check_choice("protocol", protocol, PROTOCOLS)
         # 'vec' | 'scalar': how ops flagged by the per-op ``_danger``
         # screen (mid-op refetch possible) replay.  'vec' evaluates the
         # analytic segmented evict-then-refetch schedule (_danger_replay);
         # 'scalar' forces the page-by-page reference walk — the oracle the
         # trace-fuzz suite cross-validates against.  Both are
         # traffic-exact; only wall time differs.
-        assert danger_mode in ("vec", "scalar"), danger_mode
+        check_choice("danger_mode", danger_mode, DANGER_MODES)
         self.danger_mode = danger_mode
         # 'numpy' | 'pallas': backend for the whole-plane directory
         # reductions (kernels.protocol_sweep).  Integer-exact either way;

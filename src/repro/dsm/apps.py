@@ -6,16 +6,12 @@ RegC runtime (reference or scale engine; both expose the same API).
 
 Each bulk phase is described once as (W,) interval arrays — the worker's
 read/write sets declared up front, which is what makes whole-phase batched
-coherence resolution possible — and handed to a *driver*:
-
-* ``batched`` — one ``rt.phase_all`` call per phase (the scale engine's
-  worker-axis vectorized path);
-* ``loop``    — one ``rt.phase`` (or read/write/compute sequence, for the
-  reference runtime) call per worker, in worker order.
-
-The two drivers are bit-exact against each other: consistency-region spans
-(lock mode) always run in a per-worker pass AFTER the bulk phase, so the
-op order is identical whichever driver executes the bulk part.
+coherence resolution possible — and handed to a ``repro.dsm.session``
+driver (``batched`` = the scale engine's worker-axis vectorized
+``phase_all`` path; ``loop`` = per-worker ops in worker order).  The two
+drivers are bit-exact against each other: consistency-region spans (lock
+mode) always run in a per-worker pass AFTER the bulk phase, so the op
+order is identical whichever driver executes the bulk part.
 
 Each app takes ``mode``:
 * ``lock``       — global accumulators protected by a mutex (consistency
@@ -28,99 +24,36 @@ node model turns them into time); ALL protocol traffic is exact.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import dataclasses
+from typing import Callable, List, Optional
 
 import numpy as np
+
+from repro.dsm.session import session
 
 RES_LOCK = 0
 ENERGY_LOCK = 1
 
 
+# --- back-compat shims (pre-Session API) -----------------------------------
+# The driver implementations live in ``repro.dsm.session``; these wrappers
+# keep old ``from repro.dsm.apps import _phase_driver`` call sites working
+# and are what tests/test_api.py proves equivalent to the Session surface.
+
+
 def _phase_driver(rt, driver: str = "auto"):
-    """Return ``phase(reads=..., writes=..., flops=..., ...)`` executing one
-    whole SPMD phase.  Interval tuples are ``(ga, lo, hi)`` with (W,) int
-    arrays; flops/mem_bytes/seconds/instr_words scalars or (W,) arrays."""
-    assert driver in ("auto", "batched", "loop"), driver
-    batched = getattr(rt, "phase_all", None)
-    if driver == "auto":
-        driver = "batched" if batched is not None else "loop"
-    if driver == "batched":
-        assert batched is not None, "runtime has no phase_all (use loop)"
-        return batched
-
-    W = rt.W
-    per_worker = getattr(rt, "phase", None)
-
-    def at(v, w):
-        return float(v[w]) if np.ndim(v) else float(v)
-
-    def loop(reads=(), writes=(), *, flops=0.0, mem_bytes=0.0, seconds=0.0,
-             instr_words=0.0):
-        for w in range(W):
-            r = [(ga, int(lo[w]), int(hi[w])) for ga, lo, hi in reads]
-            wr = [(ga, int(lo[w]), int(hi[w])) for ga, lo, hi in writes]
-            fl, mb = at(flops, w), at(mem_bytes, w)
-            sec, iw = at(seconds, w), at(instr_words, w)
-            if per_worker is not None:
-                per_worker(w, reads=r, writes=wr, flops=fl, mem_bytes=mb,
-                           seconds=sec, instr_words=iw)
-                continue
-            for ga, lo, hi in r:
-                rt.read(w, ga, lo, hi)
-            for ga, lo, hi in wr:
-                rt.write(w, ga, lo, hi)
-            if fl or mb or sec:
-                rt.compute(w, flops=fl, mem_bytes=mb, seconds=sec)
-            if iw:
-                rt.instr_stores(w, iw)
-    return loop
+    """Deprecated: use ``session(rt, driver).phase``."""
+    return session(rt, driver).phase
 
 
 def _span_driver(rt, driver: str = "auto"):
-    """Return ``span_phase(lock_ids, reads=..., writes=..., w_mask=None)``
-    executing one whole consistency-region pass: every masked worker
-    acquires its lock, runs the declared interval ops inside the span,
-    and releases.  ``batched`` drives ``rt.span_all`` (grant order
-    serialized, flush+notice pipelined); ``loop`` — and any runtime
-    without span_all, e.g. the reference — runs the per-worker span loop
-    in worker order.  The two are bit-exact against each other (the
-    span_all contract, lockstep-checked by the trace-fuzz suite)."""
-    assert driver in ("auto", "batched", "loop"), driver
-    batched = getattr(rt, "span_all", None)
-    if driver == "auto":
-        driver = "batched" if batched is not None else "loop"
-    if driver == "batched":
-        assert batched is not None, "runtime has no span_all (use loop)"
-
-        def span_batched(lock_ids, reads=(), writes=(), w_mask=None):
-            batched(w_mask, lock_ids, reads=reads, writes=writes)
-        return span_batched
-
-    W = rt.W
-
-    def span_loop(lock_ids, reads=(), writes=(), w_mask=None):
-        locks = np.broadcast_to(np.asarray(lock_ids, np.int64), (W,))
-        for w in range(W):
-            if w_mask is not None and not w_mask[w]:
-                continue
-            rt.acquire(w, int(locks[w]))
-            for ga, lo, hi in reads:
-                rt.read(w, ga, int(lo[w]), int(hi[w]))
-            for ga, lo, hi in writes:
-                rt.write(w, ga, int(lo[w]), int(hi[w]))
-            rt.release(w, int(locks[w]))
-    return span_loop
+    """Deprecated: use ``session(rt, driver).span``."""
+    return session(rt, driver).span
 
 
 def _reduce_all(rt, name: str, value: float = 1.0):
-    """Per-worker reduction contribution, batched when the runtime offers
-    ``reduce_all`` (identical combine either way)."""
-    ra = getattr(rt, "reduce_all", None)
-    if ra is not None:
-        ra(name, value)
-    else:
-        for w in range(rt.W):
-            rt.reduce(w, name, value)
+    """Deprecated: use ``session(rt).reduce(name, value)``."""
+    session(rt, "auto").reduce(name, value)
 
 
 def _blocks(n: int, W: int):
@@ -144,7 +77,7 @@ def stream_triad(rt, n: int, iters: int, *, driver: str = "auto",
     A, B, C = rt.alloc(n), rt.alloc(n), rt.alloc(n)
     W = rt.W
     lo, hi = _blocks(n, W)
-    phase = _phase_driver(rt, driver)
+    phase = session(rt, driver).phase
     flops = 2.0 * (hi - lo)
     mem_bytes = 3.0 * 4 * (hi - lo)
     for it in range(iters):
@@ -177,7 +110,7 @@ def stream_spill(rt, n: int, iters: int, *, sweeps: int = 2,
     W = rt.W
     chunk = n // W
     ids = np.arange(W, dtype=np.int64)
-    phase = _phase_driver(rt, driver)
+    phase = session(rt, driver).phase
     for it in range(iters):
         for s in range(sweeps):
             r = (ids + it * sweeps + s) % W if rotate else ids
@@ -215,7 +148,7 @@ def stream_refetch(rt, n: int, iters: int, *, sweeps: int = 2,
     step = Lw // 2
     n_offs = (chunk - Lw) // step + 1       # window positions per block
     ids = np.arange(W, dtype=np.int64)
-    phase = _phase_driver(rt, driver)
+    phase = session(rt, driver).phase
     k = 0
     for it in range(iters):
         for s in range(sweeps):
@@ -259,8 +192,8 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
     pts = (r1 - r0) * n
     zero = np.zeros(W, np.int64)
     one = np.ones(W, np.int64)
-    phase = _phase_driver(rt, driver)
-    span_phase = _span_driver(rt, driver)
+    s = session(rt, driver)
+    phase, span_phase = s.phase, s.span
 
     for it in range(iters):
         # phase 1: copy own block u -> uold
@@ -279,7 +212,7 @@ def jacobi(rt, n: int, iters: int, *, mode: str = "lock",
             span_phase(RES_LOCK, reads=((res, zero, one),),
                        writes=((res, zero, one),))
         else:
-            _reduce_all(rt, "residual")
+            s.reduce("residual")
         rt.barrier()
 
         # phase 3: convergence test — everyone reads the residual
@@ -325,8 +258,8 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
     zero = np.zeros(W, np.int64)
     two = np.full(W, 2, np.int64)
     all_w = np.full(W, nw, np.int64)
-    phase = _phase_driver(rt, driver)
-    span_phase = _span_driver(rt, driver)
+    s = session(rt, driver)
+    phase, span_phase = s.phase, s.span
 
     for it in range(iters):
         # phase A: forces + energies.  ~18 flops + sqrt + pow per pair
@@ -343,8 +276,8 @@ def molecular_dynamics(rt, n_particles: int, iters: int, *,
             span_phase(ENERGY_LOCK, reads=((energy, zero, two),),
                        writes=((energy, zero, two),))
         else:
-            _reduce_all(rt, "potential")
-            _reduce_all(rt, "kinetic")
+            s.reduce("potential")
+            s.reduce("kinetic")
         rt.barrier()
 
         # phase B: velocity-Verlet update of own particles
@@ -403,8 +336,8 @@ def lock_contention(rt, n: int, iters: int, *, n_locks: int = 8,
     zero = np.zeros(W, np.int64)
     two = np.full(W, 2, np.int64)
     hot_lock = n_locks                 # distinct from every striped lock
-    phase = _phase_driver(rt, driver)
-    span_phase = _span_driver(rt, driver)
+    s = session(rt, driver)
+    phase, span_phase = s.phase, s.span
     for it in range(iters):
         phase(reads=((A, lo, hi),), writes=((A, lo, hi),),
               flops=4.0 * (hi - lo), mem_bytes=2.0 * 4 * (hi - lo))
@@ -457,8 +390,8 @@ def race_audit(rt, n: int, iters: int, *, n_locks: int = 4,
     s_hi = s_lo + 2
     pr_lo = (ids // 2) * pw
     pr_hi = pr_lo + 2
-    phase = _phase_driver(rt, driver)
-    span_phase = _span_driver(rt, driver)
+    s = session(rt, driver)
+    phase, span_phase = s.phase, s.span
     for it in range(iters):
         phase(reads=((A, lo, hi),), writes=((A, lo, hi),),
               flops=2.0 * (hi - lo))
@@ -471,3 +404,234 @@ def race_audit(rt, n: int, iters: int, *, n_locks: int = 4,
         if on_iter is not None:
             on_iter(it, rt)
     return rt
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving (fig8_kv_serving): inference traffic as a DSM workload
+# ---------------------------------------------------------------------------
+
+
+ADMIT_LOCK = 2
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One inference request in the synthetic multi-tenant stream."""
+    tenant: int
+    prompt_tokens: int
+    decode_tokens: int
+    arrival_step: int
+    slot: int = -1
+    admit_step: int = -1
+    finish_step: int = -1
+    arrival_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Deterministic outcome of one ``kv_serving`` run.
+
+    Everything here is a pure function of the request stream and the
+    runtime's modeled clocks, so the drivers' bit-equal-clock contract
+    makes the whole report — latencies included — bit-equal across
+    ``loop``/``batched`` and both backends."""
+    requests: List[ServeRequest]
+    steps: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    admit_spans: int = 0
+    admitted: int = 0
+    idle_slot_steps: int = 0
+    peak_queue: int = 0
+
+    def latencies(self) -> np.ndarray:
+        done = [r.latency for r in self.requests if r.finish_step >= 0]
+        return np.asarray(sorted(done), dtype=np.float64)
+
+    def latency_pct(self, q: float) -> float:
+        lat = self.latencies()
+        if not lat.size:
+            raise ValueError("latency_pct(): no completed requests")
+        return float(np.percentile(lat, q))
+
+    @property
+    def span_time(self) -> float:
+        """Modeled makespan: last finish time across completed requests."""
+        return max((r.finish_time for r in self.requests
+                    if r.finish_step >= 0), default=0.0)
+
+    def tokens_per_s(self) -> float:
+        t = self.span_time
+        return (self.prefill_tokens + self.decode_tokens) / t if t else 0.0
+
+
+def gen_requests(n_requests: int, *, n_tenants: int = 8,
+                 zipf_s: float = 1.3, max_tokens: int = 96,
+                 burst_mean: int = 4, gap_max: int = 3,
+                 seed: int = 0) -> List[ServeRequest]:
+    """Synthetic multi-tenant request stream: Zipf-skewed tenant draws
+    (tenant 0 hottest), per-tenant length profiles (hot tenants chatty —
+    short prompts/decodes; cold tenants long-context), and bursty
+    arrivals (geometric burst sizes separated by uniform step gaps,
+    arrival step = decode-step index as the time axis).  Deterministic
+    in ``seed``."""
+    rng = np.random.default_rng(seed)
+    # Zipf over tenant ranks via inverse-CDF on the truncated harmonic
+    ranks = np.arange(1, n_tenants + 1, dtype=np.float64)
+    pmf = ranks ** -zipf_s
+    pmf /= pmf.sum()
+    tenants = rng.choice(n_tenants, size=n_requests, p=pmf)
+    # per-tenant profiles: prompt/decode budgets scale with tenant rank
+    p_base = np.minimum(4 + 6 * np.arange(n_tenants), (3 * max_tokens) // 4)
+    d_base = np.minimum(3 + 2 * np.arange(n_tenants), max_tokens // 4)
+    reqs: List[ServeRequest] = []
+    step = 0
+    emitted = 0
+    while emitted < n_requests:
+        burst = min(int(rng.geometric(1.0 / burst_mean)),
+                    n_requests - emitted)
+        for _ in range(burst):
+            t = int(tenants[emitted])
+            dec = max(1, int(d_base[t]) + int(rng.integers(-2, 3)))
+            pro = max(1, int(p_base[t]) + int(rng.integers(-3, 4)))
+            pro = min(pro, max_tokens - dec)   # fits the slot KV budget
+            reqs.append(ServeRequest(tenant=t, prompt_tokens=pro,
+                                     decode_tokens=dec, arrival_step=step))
+            emitted += 1
+        step += int(rng.integers(1, gap_max + 1))
+    return reqs
+
+
+def kv_serving(rt, n_requests: int, *, tok_words: int = 64,
+               max_tokens: int = 96, attn_window: int = 32,
+               n_tenants: int = 8, zipf_s: float = 1.3,
+               burst_mean: int = 4, gap_max: int = 3, seed: int = 0,
+               driver: str = "auto", max_steps: int = 200_000,
+               on_step: Optional[Callable] = None) -> ServeReport:
+    """Continuous-batching inference fleet as a RegC program.
+
+    Workers are decode slots; the KV cache is one GAS region of W
+    page-aligned slot blocks, each ``max_tokens`` rows of ``tok_words``
+    words (a slot's stacked per-layer K/V rows — the layout of
+    ``serve/decode.py``'s caches, flattened time-major).  Each decode
+    step runs:
+
+    1. **admission** — queued requests claim free slots inside a span on
+       ``ADMIT_LOCK`` (the continuous-batching scheduler's critical
+       section; slot reuse is ordered by the lock's grant chain);
+    2. **prefill** — a bulk write phase: admitting slots write their
+       whole prompt's KV rows at once (idle/running slots touch one word
+       of their own block — every worker participates in the SPMD
+       phase);
+    3. **decode** — active slots read their trailing ``attn_window`` KV
+       rows (paged attention) and append one new row; idle slots touch
+       one word.  One barrier per step (the batch-wide sync point).
+
+    Slot blocks are disjoint and the queue cell is lock-guarded, so the
+    program is data-race-free (``detect_races=True`` flags nothing).
+    Under a ``cache_pages`` budget below a slot's working set, prefill
+    ranges wider than the cache drive the mid-op danger path and the
+    sliding attention window keeps batched eviction live — the
+    paged-attention pressure regime the fig8 bench asserts via
+    ``stats`` counters.  Requests, latencies (modeled arrival→finish
+    time), and every counter are bit-equal across drivers and backends.
+    """
+    W = rt.W
+    pw = rt.page_words
+    assert attn_window <= max_tokens
+    slot_words = max_tokens * tok_words
+    stride = -(-slot_words // pw) * pw       # page-aligned slot pitch
+    kv = rt.alloc(W * stride)
+    q = rt.alloc(2)                          # queue head/tail cell
+    s = session(rt, driver)
+
+    reqs = gen_requests(n_requests, n_tenants=n_tenants, zipf_s=zipf_s,
+                        max_tokens=max_tokens, burst_mean=burst_mean,
+                        gap_max=gap_max, seed=seed)
+    rep = ServeReport(requests=reqs)
+
+    base = np.arange(W, dtype=np.int64) * stride
+    zero = np.zeros(W, np.int64)
+    two = np.full(W, 2, np.int64)
+    active = np.full(W, -1, np.int64)        # request index per slot
+    length = np.zeros(W, np.int64)           # KV rows materialized
+    remaining = np.zeros(W, np.int64)        # decode tokens left
+    queue: List[int] = []
+    next_arrival = 0
+    completed = 0
+    step = 0
+    while completed < n_requests:
+        if step >= max_steps:
+            raise RuntimeError(f"kv_serving: no progress in {max_steps} "
+                               "steps (stream starved?)")
+        t_now = rt.time
+        while (next_arrival < n_requests
+               and reqs[next_arrival].arrival_step <= step):
+            reqs[next_arrival].arrival_time = t_now
+            queue.append(next_arrival)
+            next_arrival += 1
+        rep.peak_queue = max(rep.peak_queue, len(queue))
+
+        # admission: free slots claim queued requests in slot order,
+        # serialized through the admission lock's grant chain
+        admit = np.zeros(W, bool)
+        for w in range(W):
+            if active[w] < 0 and queue:
+                i = queue.pop(0)
+                r = reqs[i]
+                r.slot, r.admit_step = w, step
+                active[w] = i
+                length[w] = 0
+                remaining[w] = r.decode_tokens
+                admit[w] = True
+        if admit.any():
+            s.span(ADMIT_LOCK, reads=((q, zero, two),),
+                   writes=((q, zero, two),), w_mask=admit)
+            rep.admit_spans += 1
+            rep.admitted += int(admit.sum())
+            # prefill: bulk KV write of the whole prompt, one phase
+            plen = np.where(
+                admit,
+                np.array([reqs[i].prompt_tokens if i >= 0 else 0
+                          for i in active], np.int64), 0)
+            w_lo = base
+            w_hi = base + np.where(admit, plen * tok_words, 1)
+            s.phase(writes=((kv, w_lo, w_hi),),
+                    flops=2.0 * plen * tok_words,
+                    mem_bytes=4.0 * plen * tok_words)
+            length[admit] = plen[admit]
+            rep.prefill_tokens += int(plen.sum())
+
+        running = active >= 0
+        if running.any():
+            # decode: windowed attention read + one appended KV row
+            win = np.where(running, np.minimum(length, attn_window), 0)
+            r_lo = base + np.where(running, (length - win) * tok_words, 0)
+            r_hi = r_lo + np.where(running, win * tok_words, 1)
+            w_lo = base + np.where(running, length * tok_words, 0)
+            w_hi = w_lo + np.where(running, tok_words, 1)
+            s.phase(reads=((kv, r_lo, r_hi),), writes=((kv, w_lo, w_hi),),
+                    flops=2.0 * win * tok_words,
+                    mem_bytes=4.0 * (win + 1) * tok_words)
+            length[running] += 1
+            remaining[running] -= 1
+            rep.decode_tokens += int(running.sum())
+            rep.idle_slot_steps += int(W - running.sum())
+        rt.barrier()
+        t_end = rt.time
+        done = running & (remaining == 0)
+        for w in np.flatnonzero(done):
+            r = reqs[int(active[w])]
+            r.finish_step, r.finish_time = step, t_end
+            active[w] = -1
+            completed += 1
+        step += 1
+        rep.steps = step
+        if on_step is not None:
+            on_step(step, rt)
+    return rep

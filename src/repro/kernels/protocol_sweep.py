@@ -48,8 +48,8 @@ _LANE = 128
 
 def resolve_backend(backend: str) -> str:
     """Map a requested backend to an available one ('pallas' needs jax)."""
-    if backend not in ("numpy", "pallas"):
-        raise ValueError(f"unknown protocol-sweep backend: {backend!r}")
+    from repro.core.config import BACKENDS, check_choice
+    check_choice("backend", backend, BACKENDS)
     if backend == "pallas" and not HAVE_PALLAS:
         warnings.warn("protocol_sweep: jax/pallas unavailable, "
                       "falling back to numpy", RuntimeWarning, stacklevel=2)

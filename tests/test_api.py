@@ -1,0 +1,170 @@
+"""Public-API redesign suite: ``RuntimeConfig``/``make_runtime`` vs the
+legacy keyword constructors (bit-equal traffic/clocks on seeded traces),
+validated-choice knob errors, and the ``Session`` façade vs the legacy
+underscore drivers.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import trace_fuzz
+from repro.core import (BACKENDS, DANGER_MODES, DRIVERS, ENGINES,
+                        FINE_PROTO, PROTOCOLS, RegCRuntime,
+                        RegCScaleRuntime, RuntimeConfig, check_choice,
+                        make_runtime)
+from repro.core.regc import Traffic
+from repro.dsm.apps import _phase_driver, _reduce_all, _span_driver
+from repro.dsm.session import Session, session
+
+
+def _assert_traffic_equal(a, b, ctx):
+    for f in dataclasses.fields(Traffic):
+        assert (getattr(a.traffic, f.name)
+                == getattr(b.traffic, f.name)), (ctx, f.name)
+
+
+def _seeded_trace(seed):
+    p = trace_fuzz.trace_params(seed)
+    prog = trace_fuzz.gen_program(p["rng"], p["W"], p["n_words"],
+                                  p["page_words"])
+    return p, prog
+
+
+def test_make_runtime_backcompat_scale():
+    """Old-style keyword construction and RuntimeConfig-built scale
+    runtimes produce bit-equal traffic, clocks, and stats on seeded
+    fuzz traces."""
+    for seed in (0, 1, 2, 5):
+        p, prog = _seeded_trace(seed)
+        kw = dict(page_words=p["page_words"], protocol=p["proto"],
+                  prefetch=1, model_mechanism=False,
+                  cache_pages=p["cache_pages"], fetch_batch=4)
+        old = RegCScaleRuntime(p["W"], **kw)
+        new = make_runtime(p["W"], RuntimeConfig(**kw))
+        for rt in (old, new):
+            trace_fuzz.run_program(
+                rt, prog, [rt.alloc(p["n_words"]) for _ in range(2)],
+                "batched")
+        _assert_traffic_equal(old, new, seed)
+        np.testing.assert_array_equal(old.clock, new.clock)
+        assert old.stats == new.stats, seed
+
+
+def test_make_runtime_backcompat_reference():
+    """Same contract for the reference engine (scale-only knobs at
+    their defaults are ignored by the factory, not mis-applied)."""
+    for seed in (0, 3):
+        p, prog = _seeded_trace(seed)
+        kw = dict(page_words=p["page_words"], protocol=p["proto"],
+                  prefetch=1, cache_pages=p["cache_pages"],
+                  track_values=False)
+        old = RegCRuntime(p["W"], **kw)
+        new = make_runtime(p["W"], RuntimeConfig(**kw),
+                           engine="reference")
+        for rt in (old, new):
+            trace_fuzz.run_program(
+                rt, prog, [rt.alloc(p["n_words"]) for _ in range(2)],
+                "ref")
+        _assert_traffic_equal(old, new, seed)
+        np.testing.assert_array_equal(old.clock, new.clock)
+
+
+def test_make_runtime_overrides_and_errors():
+    cfg = RuntimeConfig(page_words=64)
+    rt = make_runtime(4, cfg, cache_pages=7, engine="scale")
+    assert rt.page_words == 64 and rt.cache_pages == 7
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.page_words = 32
+    with pytest.raises(ValueError, match="bogus_knob"):
+        make_runtime(4, bogus_knob=1)
+    with pytest.raises(ValueError) as ei:
+        make_runtime(4, engine="jit")
+    assert "'jit'" in str(ei.value) and "'scale'" in str(ei.value) \
+        and "'reference'" in str(ei.value)
+    # the reference engine refuses behavior-bearing fault hooks
+    with pytest.raises(ValueError, match="chaos"):
+        make_runtime(4, chaos=object(), engine="reference")
+
+
+@pytest.mark.parametrize("name,bad,allowed,build", [
+    ("protocol", "mesi", PROTOCOLS,
+     lambda: RegCScaleRuntime(2, protocol="mesi")),
+    ("protocol", "mesi", PROTOCOLS,
+     lambda: RegCRuntime(2, protocol="mesi")),
+    ("protocol", "mesi", PROTOCOLS,
+     lambda: RuntimeConfig(protocol="mesi")),
+    ("danger_mode", "fast", DANGER_MODES,
+     lambda: RegCScaleRuntime(2, danger_mode="fast")),
+    ("backend", "cuda", BACKENDS,
+     lambda: RuntimeConfig(backend="cuda")),
+    ("backend", "cuda", BACKENDS,
+     lambda: RegCScaleRuntime(2, backend="cuda")),
+    ("driver", "vector", DRIVERS,
+     lambda: session(RegCScaleRuntime(2), driver="vector")),
+])
+def test_knob_validation_messages(name, bad, allowed, build):
+    """Every string knob rejects unknown values with a ValueError that
+    names the knob, the bad value, and the full allowed set."""
+    with pytest.raises(ValueError) as ei:
+        build()
+    msg = str(ei.value)
+    assert name in msg and repr(bad) in msg, msg
+    for choice in allowed:
+        assert repr(choice) in msg, (choice, msg)
+
+
+def test_check_choice_passthrough():
+    assert check_choice("engine", "scale", ENGINES) == "scale"
+
+
+def test_session_vs_legacy_drivers_bit_equal():
+    """Driving a runtime through the Session façade and through the
+    legacy underscore helpers yields bit-equal traffic and clocks."""
+    def run(legacy):
+        rt = make_runtime(4, RuntimeConfig(page_words=32, cache_pages=6,
+                                           model_mechanism=False))
+        A = rt.alloc(32 * 24)
+        acc = rt.alloc(2)
+        lo = np.arange(4, dtype=np.int64) * 32 * 6
+        hi = lo + 32 * 6
+        zero, two = np.zeros(4, np.int64), np.full(4, 2, np.int64)
+        if legacy:
+            phase = _phase_driver(rt, "batched")
+            span = _span_driver(rt, "batched")
+            red = lambda name: _reduce_all(rt, name)
+        else:
+            s = session(rt, "batched")
+            phase, span, red = s.phase, s.span, s.reduce
+        for it in range(3):
+            phase(reads=((A, lo, hi),), writes=((A, lo, hi),),
+                  flops=2.0 * (hi - lo))
+            span(0, reads=((acc, zero, two),), writes=((acc, zero, two),))
+            red("resid")
+            rt.barrier()
+        return rt
+    old, new = run(True), run(False)
+    _assert_traffic_equal(old, new, "session")
+    np.testing.assert_array_equal(old.clock, new.clock)
+    assert old.stats == new.stats
+
+
+def test_session_resolves_driver_and_rejects_impossible():
+    ref = make_runtime(2, engine="reference")
+    s = session(ref)
+    assert isinstance(s, Session) and s.driver == "loop"
+    with pytest.raises(ValueError, match="phase_all"):
+        session(ref, "batched")
+    assert session(RegCScaleRuntime(2)).driver == "batched"
+
+
+def test_core_public_exports():
+    import repro.core as core
+    for name in core.__all__:
+        assert getattr(core, name) is not None, name
+    assert set(PROTOCOLS) == {"fine", "page", "ideal"}
+    assert BACKENDS == ("numpy", "pallas")
+    assert DANGER_MODES == ("vec", "scalar")
+    assert DRIVERS == ("auto", "batched", "loop")
+    assert ENGINES == ("scale", "reference")
+    assert FINE_PROTO in PROTOCOLS

@@ -1,0 +1,180 @@
+"""KV-cache serving workload (fig8): the inference-traffic DSM adversary.
+
+Covers the serving trace-fuzz family (skewed/bursty interval programs,
+reference vs loop vs batched in lockstep, eviction-counter assertions),
+the ``apps.kv_serving`` app itself across drivers/engines/backends, its
+data-race-freedom under the detector, and the determinism of the request
+stream + latency report the fig8 bench commits.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import trace_fuzz
+from repro.core import RuntimeConfig, make_runtime
+from repro.core.regc import Traffic
+from repro.dsm.apps import gen_requests, kv_serving
+
+ROOT = Path(__file__).resolve().parents[1]
+
+N_SERVING_TRACES = 60
+
+# slot geometry used by the app tests: 64-word pages, 8-word KV rows,
+# 24-row slots -> 3-page slot stride; cache below one prompt's pages
+APP_KW = dict(tok_words=8, max_tokens=24, attn_window=8, seed=3)
+CFG = RuntimeConfig(page_words=64, cache_pages=2, model_mechanism=False)
+
+
+def _assert_traffic_equal(a, b, ctx):
+    for f in dataclasses.fields(Traffic):
+        assert (getattr(a.traffic, f.name)
+                == getattr(b.traffic, f.name)), (ctx, f.name)
+
+
+def _report_key(rep):
+    return (rep.steps, rep.prefill_tokens, rep.decode_tokens,
+            rep.admit_spans, rep.admitted, rep.idle_slot_steps,
+            rep.peak_queue,
+            tuple((r.slot, r.admit_step, r.finish_step)
+                  for r in rep.requests))
+
+
+def test_fuzz_serving_traces_cross_runtime():
+    """Serving family (masked admission spans, bursty prefill writes,
+    Zipf-skewed windowed decode appends under slot-scale caches):
+    reference vs loop vs batched in LOCKSTEP on every trace, with the
+    aggregate counters proving the eviction machinery actually fired —
+    the danger screen on wide prefills, batched eviction rounds on the
+    sliding windows, and the span engine on the admission lock."""
+    agg = {}
+    for seed in range(N_SERVING_TRACES):
+        stats = trace_fuzz.crosscheck(seed, family="serving")
+        for k, v in stats.items():
+            agg[k] = agg.get(k, 0) + v
+    assert agg["batched_phases"] > N_SERVING_TRACES, agg
+    assert agg["danger_vec_ops"] > 0, agg
+    assert agg["danger_scalar_ops"] == 0, agg
+    assert agg["evict_batch_rounds"] > 0, agg
+    assert agg["span_all_calls"] > N_SERVING_TRACES // 2, agg
+
+
+def test_kv_serving_app_drivers_bit_equal():
+    """The serving app across drivers: traffic field-for-field, clocks
+    bit-equal, and the whole ServeReport — request latencies included —
+    identical, with the paged-attention pressure counters live."""
+    for W, n_req in ((4, 16), (16, 48)):
+        runs = {}
+        for driver in ("loop", "batched"):
+            rt = make_runtime(W, CFG)
+            rep = kv_serving(rt, n_req, driver=driver, **APP_KW)
+            runs[driver] = (rt, rep)
+        rt_l, rep_l = runs["loop"]
+        rt_b, rep_b = runs["batched"]
+        _assert_traffic_equal(rt_l, rt_b, W)
+        np.testing.assert_array_equal(rt_l.clock, rt_b.clock)
+        assert _report_key(rep_l) == _report_key(rep_b), W
+        np.testing.assert_array_equal(rep_l.latencies(), rep_b.latencies())
+        st = rt_b.stats
+        assert st["danger_vec_ops"] > 0, (W, st)
+        assert st["danger_scalar_ops"] == 0, (W, st)
+        assert st["span_all_calls"] > 0, (W, st)
+        assert rep_b.latencies().size == n_req
+
+
+def test_kv_serving_matches_reference():
+    """Scale engine vs the per-page reference on the serving app:
+    traffic exact, clocks allclose (the exactness contract)."""
+    for W in (3, 6):
+        rt_s = make_runtime(W, CFG)
+        rep_s = kv_serving(rt_s, 18, driver="batched", **APP_KW)
+        rt_r = make_runtime(W, CFG, engine="reference", track_values=False)
+        rep_r = kv_serving(rt_r, 18, driver="loop", **APP_KW)
+        _assert_traffic_equal(rt_s, rt_r, W)
+        np.testing.assert_allclose(rt_s.clock, rt_r.clock,
+                                   rtol=1e-9, atol=1e-12)
+        assert _report_key(rep_s) == _report_key(rep_r), W
+
+
+def test_kv_serving_race_free():
+    """Slot blocks are disjoint and the queue cell is lock-guarded, so
+    the serving program is DRF: the detector must flag nothing, and as a
+    pure observer must not move traffic or clocks."""
+    base = make_runtime(8, CFG)
+    kv_serving(base, 24, driver="batched", **APP_KW)
+    det = make_runtime(8, CFG, detect_races=True)
+    kv_serving(det, 24, driver="batched", **APP_KW)
+    assert det.stats["race_ww"] == 0 and det.stats["race_rw"] == 0
+    _assert_traffic_equal(base, det, "observer")
+    np.testing.assert_array_equal(base.clock, det.clock)
+
+
+def test_request_stream_deterministic_and_skewed():
+    """The synthetic stream is a pure function of its seed, Zipf-skewed
+    toward tenant 0, and bursty (some same-step arrival groups)."""
+    a = gen_requests(200, n_tenants=8, seed=11)
+    b = gen_requests(200, n_tenants=8, seed=11)
+    assert [dataclasses.astuple(r) for r in a] == \
+        [dataclasses.astuple(r) for r in b]
+    counts = np.bincount([r.tenant for r in a], minlength=8)
+    assert counts[0] == counts.max() and counts[0] > 200 // 8
+    steps = [r.arrival_step for r in a]
+    assert any(steps.count(s) > 1 for s in set(steps)), "no bursts"
+    assert all(1 <= r.prompt_tokens and r.decode_tokens >= 1
+               and r.prompt_tokens + r.decode_tokens <= 96 for r in a)
+
+
+def test_kv_serving_report_deterministic():
+    """Same seed twice -> identical report, down to float latencies."""
+    reps = []
+    for _ in range(2):
+        rt = make_runtime(5, CFG)
+        reps.append(kv_serving(rt, 20, driver="batched", **APP_KW))
+    assert _report_key(reps[0]) == _report_key(reps[1])
+    np.testing.assert_array_equal(reps[0].latencies(), reps[1].latencies())
+    assert reps[0].latency_pct(99) >= reps[0].latency_pct(50) > 0
+    assert reps[0].tokens_per_s() > 0
+
+
+def test_committed_fig8_rows_driver_bit_equal():
+    """The committed BENCH_scale.json fig8 rows: for every (protocol, W)
+    pair the loop and batched rows carry identical modeled time, exact
+    traffic, and identical srv_* workload counters — the both-drivers
+    half of the bench exactness contract, pinned on the committed
+    ground truth itself.  (srv_evict_rounds and the span/danger path
+    counters are engine-path telemetry and legitimately differ by
+    driver.)"""
+    rows = json.loads((ROOT / "BENCH_scale.json").read_text())["rows"]
+    fig8 = [r for r in rows if r["section"] == "fig8_kv_serving"]
+    assert len(fig8) == 12, len(fig8)
+    by_key = {}
+    for r in fig8:
+        by_key.setdefault((r["protocol"], r["W"]), {})[r["driver"]] = r
+    shared = (["t_model_s", "total_bytes", "srv_requests",
+               "srv_prefill_tok", "srv_decode_tok", "srv_steps",
+               "srv_admit_spans", "srv_admitted", "srv_idle_slot_steps",
+               "srv_peak_queue", "danger_vec", "danger_scalar"])
+    for key, drv in by_key.items():
+        assert set(drv) == {"loop", "batched"}, key
+        for f in shared + [f for f in drv["loop"]
+                           if f.startswith("tr_")]:
+            assert drv["loop"][f] == drv["batched"][f], (key, f)
+        assert drv["batched"]["srv_evict_rounds"] > 0, key
+        assert drv["batched"]["danger_vec"] > 0, key
+
+
+def test_kv_serving_backends_agree():
+    """numpy vs pallas directory backends on the serving app: traffic
+    and clocks identical (integer-exact plane kernels)."""
+    pytest.importorskip("jax")
+    runs = {}
+    for backend in ("numpy", "pallas"):
+        rt = make_runtime(4, CFG, backend=backend)
+        rep = kv_serving(rt, 12, driver="batched", **APP_KW)
+        runs[backend] = (rt, rep)
+    _assert_traffic_equal(runs["numpy"][0], runs["pallas"][0], "backend")
+    np.testing.assert_array_equal(runs["numpy"][0].clock,
+                                  runs["pallas"][0].clock)
+    assert _report_key(runs["numpy"][1]) == _report_key(runs["pallas"][1])

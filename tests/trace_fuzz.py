@@ -31,7 +31,7 @@ import numpy as np
 from repro.core import FINE_PROTO, IDEAL_PROTO, PAGE_PROTO, RegCRuntime
 from repro.core.regc import Traffic
 from repro.core.regc_scale import RegCScaleRuntime
-from repro.dsm.apps import _span_driver
+from repro.dsm.session import session
 
 PROTOS = [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]
 STYLES = ["blocks", "halo", "shared", "skewed", "shrink", "rotate"]
@@ -506,9 +506,9 @@ def apply_event(rt, ev, gas, driver: str):
         if driver == "batched":
             rt.span_all(mask, locks, reads=r, writes=wr)
         else:
-            # the apps' own per-worker span body — the fuzz oracle and
-            # the loop driver must be the same code, not a copy
-            _span_driver(rt, "loop")(locks, reads=r, writes=wr,
+            # the Session's own per-worker span body — the fuzz oracle
+            # and the loop driver must be the same code, not a copy
+            session(rt, "loop").span(locks, reads=r, writes=wr,
                                      w_mask=mask)
     elif ev[0] == "spans_nested":
         # nested spans: inner is dict-tracked, outer plane-tracked; the
@@ -575,6 +575,82 @@ def span_trace_params(seed: int) -> Dict:
                 cache_pages=cache_pages, proto=PROTOS[seed % 3])
 
 
+def serving_trace_params(seed: int) -> Dict:
+    """Serving-family params: page-aligned per-slot KV blocks (stride =
+    max_tokens x tok_words rounded up to a page), caches mostly sized
+    BELOW a slot's prompt working set so bulk prefill writes cross the
+    danger screen and the sliding attention window keeps batched
+    eviction live."""
+    rng = np.random.default_rng(70_000 + seed)
+    W = int(rng.integers(2, 5))
+    page_words = int(rng.choice([8, 16, 32]))
+    tok_words = int(rng.integers(2, 6))
+    max_tokens = int(rng.integers(10, 25))
+    stride = -(-(max_tokens * tok_words) // page_words) * page_words
+    cache_pages = [2, 3, 4, None][seed % 4]
+    return dict(rng=rng, W=W, page_words=page_words,
+                n_words=W * stride, stride=stride, tok_words=tok_words,
+                max_tokens=max_tokens, cache_pages=cache_pages,
+                proto=PROTOS[seed % 3])
+
+
+def gen_serving_program(rng, W: int, stride: int, tok_words: int,
+                        max_tokens: int, n_steps: int = 10) -> List[tuple]:
+    """Serving-shaped program family (the ``apps.kv_serving`` access
+    pattern, fuzzed): region 0 is the KV arena (one page-aligned slot
+    block per worker), region 1 the admission-queue cell.  Steps mix
+    masked admission spans on one hot lock, bursty bulk prefill writes
+    (whole-prompt KV ranges — wider than the small caches, the mid-op
+    danger regime), and Zipf-skewed decode phases (trailing-window reads
+    + one appended row per active slot; idle slots touch one word of
+    their own block, as every worker participates in an SPMD phase).
+    Slot blocks stay disjoint, so the batched driver must absorb the
+    eviction pressure on the vectorized paths."""
+    ids = np.arange(W, dtype=np.int64)
+    base = ids * stride
+    zero = np.zeros(W, np.int64)
+    two = np.full(W, 2, np.int64)
+    length = np.zeros(W, np.int64)
+    active = np.zeros(W, bool)
+    # zipf-skewed decode rates: hot slots append every round, cold rarely
+    rate = np.minimum(rng.zipf(1.4, W), 4).astype(np.int64)
+    prog: List[tuple] = []
+    for _step in range(n_steps):
+        free = ~active
+        if free.any() and rng.random() < 0.6:     # bursty admissions
+            adm = free & (rng.random(W) < 0.7)
+            if adm.any():
+                prog.append(("span_phase", adm.copy(),
+                             np.zeros(W, np.int64),
+                             [(1, zero.copy(), two.copy())],
+                             [(1, zero.copy(), two.copy())]))
+                plen = np.where(
+                    adm, rng.integers(1, max(2, (3 * max_tokens) // 4), W),
+                    0).astype(np.int64)
+                w_hi = base + np.where(adm, plen * tok_words, 1)
+                prog.append(("phase", [], [(0, base.copy(), w_hi)],
+                             rng.integers(0, 20, W).astype(np.float64),
+                             0.0))
+                length[adm] = plen[adm]
+                active |= adm
+        stepping = active & (rng.integers(1, 5, W) <= rate)
+        stepping &= length < max_tokens - 1       # room to append a row
+        if stepping.any():                        # decode phase
+            win = np.minimum(length, int(rng.integers(2, max_tokens)))
+            r_lo = base + np.where(stepping, (length - win) * tok_words, 0)
+            r_hi = r_lo + np.where(stepping, win * tok_words, 1)
+            w_lo = base + np.where(stepping, length * tok_words, 0)
+            w_hi = w_lo + np.where(stepping, tok_words, 1)
+            prog.append(("phase", [(0, r_lo, r_hi)], [(0, w_lo, w_hi)],
+                         rng.integers(0, 30, W).astype(np.float64), 0.0))
+            length[stepping] += 1
+        active &= ~(active & (rng.random(W) < 0.25))   # completions
+        if rng.random() < 0.6:
+            prog.append(("barrier",))
+    prog.append(("barrier",))
+    return prog
+
+
 def crosscheck(seed: int, *, check_ref: bool = True,
                backends=("numpy",),
                family: str = "mixed") -> Dict[str, int]:
@@ -590,12 +666,19 @@ def crosscheck(seed: int, *, check_ref: bool = True,
     scalar walk applies per page); 'span' draws from the span-dense
     consistency-region generator (hot/striped/nested locks, spill forced
     inside spans), where the batched runtime drives ``span_all`` and the
-    loop runtime the per-worker span loop."""
-    assert family in ("mixed", "danger", "span"), family
+    loop runtime the per-worker span loop; 'serving' draws from the
+    KV-serving-shaped generator (masked admission spans, bursty bulk
+    prefill writes, skewed windowed decode appends under slot-scale
+    caches)."""
+    assert family in ("mixed", "danger", "span", "serving"), family
     if family == "danger":
         p = danger_trace_params(seed)
         prog = gen_danger_program(p["rng"], p["W"], p["n_words"],
                                   p["page_words"], p["cache_pages"])
+    elif family == "serving":
+        p = serving_trace_params(seed)
+        prog = gen_serving_program(p["rng"], p["W"], p["stride"],
+                                   p["tok_words"], p["max_tokens"])
     elif family == "span":
         p = span_trace_params(seed)
         prog = gen_span_program(p["rng"], p["W"], p["n_words"],
