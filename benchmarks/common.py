@@ -92,6 +92,20 @@ def span_fields(rt) -> Dict[str, int]:
             "span_serial": stats.get("span_serial_workers", 0)}
 
 
+def jit_fields(rt_or_stats) -> Dict[str, int]:
+    """Fused-dispatch counters for the 'pallas-jit' tier.
+    ``jit_dispatches`` (how many fused device programs actually ran) is
+    deterministic per point and gated by ``benchmarks.compare`` like the
+    traffic fields — a zero on a jit-backed point is the silent
+    numpy-fallback signature.  ``jit_cache_misses`` mirrors jax's
+    process-wide compile cache (it depends on what ran earlier in the
+    process), so it is emitted as un-prefixed ``compiles`` — report-only,
+    outside the gate."""
+    stats = getattr(rt_or_stats, "stats", rt_or_stats) or {}
+    return {"jit_dispatches": stats.get("jit_dispatches", 0),
+            "compiles": stats.get("jit_cache_misses", 0)}
+
+
 class SteadyState:
     """Capture per-iteration modeled time, skipping the cold first iter."""
 
@@ -188,7 +202,7 @@ def bench_json_rows(rows: List[Dict]) -> List[Dict]:
                    or k.startswith("span_") or k.startswith("chaos_")
                    or k.startswith("straggler_")
                    or k.startswith("rec_") or k.startswith("race_")
-                   or k.startswith("srv_")}})
+                   or k.startswith("srv_") or k.startswith("jit_")}})
         elif "policy" in r:            # regc_training (8-way DP mesh)
             out.append({
                 "section": "regc_training", "protocol": r["policy"],

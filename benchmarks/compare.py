@@ -101,7 +101,8 @@ def diff(base: Dict, new: Dict, *, threshold: float = 0.3,
                 if f.startswith("tr_") or f.startswith("danger_")
                 or f.startswith("span_") or f.startswith("chaos_")
                 or f.startswith("straggler_") or f.startswith("rec_")
-                or f.startswith("race_") or f.startswith("srv_"))
+                or f.startswith("race_") or f.startswith("srv_")
+                or f.startswith("jit_"))
             & set(nr))
         bad = [f for f in tfields if br.get(f) != nr.get(f)]
         if bad:

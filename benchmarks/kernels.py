@@ -1,0 +1,172 @@
+"""Protocol-kernel micro-benchmarks — fig12_kernels.
+
+Times every protocol plane-sweep kernel tier head-to-head on the packed
+``(W, window/32)`` uint32 planes the directory engine actually feeds
+them: the boolean/SWAR ``numpy`` tier, the ``pallas`` interpret-mode
+kernels (what CPU CI exercises; on a TPU the same kernels compile), and
+the ``pallas-jit`` fused jitted tier, at windows {1k, 8k, 64k} pages x
+worker counts {16, 64, 256}.  The committed walls are the evidence for
+where each tier wins — the jit tier amortizes to a single XLA program
+per shape, so it overtakes numpy as the plane grows.
+
+One protocol-level point rides along: a halo phase program on the
+batched driver with ``backend='pallas-jit'`` and an infinite cache,
+where the ONLY kernel consumer is the barrier flush — so
+``jit_dispatches`` must equal the barrier count exactly (one fused
+device program per protocol phase, asserted in-bench).  Zero dispatches
+anywhere would mean the jit tier silently fell back to numpy; the
+``jit_*`` columns are gated field-for-field by ``benchmarks.compare``.
+
+Wall times are report-only, like every ``t_wall_s``.  ``jit_compiles``
+(first-seen shapes, mirroring jax's process-wide compile cache) is
+deliberately NOT ``jit_``-prefixed in rows — it depends on what ran
+earlier in the process, so it is reported as ``compiles`` untracked.
+
+Timed reps are pinned (not ``--iters``-scaled) so the gated dispatch
+counts are invocation-independent — ``--iters`` is accepted for harness
+uniformity only, like ``kv_serving``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import (jit_fields, make_rt, print_rows,
+                               write_csv)
+from repro.kernels import protocol_sweep as ps
+
+WINDOWS = (1024, 8192, 65536)       # pages per worker plane
+CORES = (16, 64, 256)
+REPS = 3                            # timed reps (after 1 warmup), pinned
+SEED = 13
+N_PHASES = 6                        # protocol-level point: barrier count
+
+
+def _plane(rng, W: int, window: int):
+    """A packed dirty plane + eviction-style k vector at 35% density —
+    the barrier-flush regime the directory engine feeds these kernels."""
+    plane = rng.random((W, window)) < 0.35
+    k = rng.integers(1, max(2, window // 3), W).astype(np.int64)
+    return ps.pack_mask_rows(plane), k
+
+
+def _geometry(rng, W: int, window: int):
+    """Fused-chain geometry for one region: bases on a halo layout (every
+    window overlaps its neighbours, so the coverage stab has real >=2
+    spans), int32 with INT32_MAX padding exactly as the runtime packs."""
+    stride = max(window // 2, 1)
+    base = (np.arange(W, dtype=np.int64) * stride).astype(np.int32)
+    sbs = np.sort(base).astype(np.int32)
+    ses = np.sort(base + np.int32(window)).astype(np.int32)
+    rowmask = np.ones((1, W), bool)
+    return base[None], sbs[None], ses[None], rowmask
+
+
+def _timed(fn) -> float:
+    fn()                            # warmup (jit: compile; numpy: caches)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        fn()
+    return (time.perf_counter() - t0) / REPS
+
+
+def micro_rows():
+    rows = []
+    backends = (("numpy", "pallas", "pallas-jit") if ps.HAVE_PALLAS
+                else ("numpy",))
+    for window in WINDOWS:
+        for W in CORES:
+            rng = np.random.default_rng(SEED)
+            bits, k = _plane(rng, W, window)
+            base, sbs, ses, rowmask = _geometry(rng, W, window)
+            pbits = bits[None]
+            kernels = {
+                "popcount": lambda b: ps.popcount_rows(
+                    bits, backend=b, stats=st),
+                "take_first_k": lambda b: ps.take_first_k(
+                    bits, k, backend=b, stats=st),
+                "kth_set_index": lambda b: ps.kth_set_index(
+                    bits, k, backend=b, stats=st),
+                "take_and_cut": lambda b: ps.take_and_cut(
+                    bits, k, backend=b, stats=st),
+            }
+            for name, fn in kernels.items():
+                for b in backends:
+                    st = {}
+                    wall = _timed(lambda: fn(b))
+                    rows.append(_row(name, b, W, window, wall, st))
+            # the fused flush chain has no interpret tier: it is either
+            # the one jitted device program or the host oracle
+            for b in ("numpy",) + (("pallas-jit",) if ps.HAVE_PALLAS
+                                   else ()):
+                st = {}
+                if b == "pallas-jit":
+                    wall = _timed(lambda: ps.phase_step(
+                        pbits, base, rowmask, sbs, ses, stats=st))
+                else:
+                    wall = _timed(lambda: ps._phase_step_np(
+                        pbits, base, rowmask, sbs, ses))
+                rows.append(_row("phase_step", b, W, window, wall, st))
+    return rows
+
+
+def _row(kernel: str, backend: str, W: int, window: int, wall: float,
+         st: dict):
+    if backend == "pallas-jit":
+        # warmup + pinned reps, every call one device dispatch — a zero
+        # here is the silent-numpy-fallback signature the gate must catch
+        assert st.get("jit_dispatches", 0) == REPS + 1, (kernel, W, st)
+    return {"figure": "fig12_kernels", "series": f"{kernel}_{backend}",
+            "p": W, "driver": f"{window // 1024}k", "window": window,
+            "t_wall_s": round(wall, 7), **jit_fields(st)}
+
+
+def protocol_rows():
+    """One protocol-level point per worker count: a halo phase program on
+    ``backend='pallas-jit'`` where the barrier flush is the only kernel
+    consumer — ``jit_dispatches`` must equal the phase count exactly."""
+    if not ps.HAVE_PALLAS:
+        return []
+    rows = []
+    for W in CORES:
+        rt = make_rt("samhita", W, backend="pallas-jit",
+                     model_mechanism=False)
+        ga = rt.alloc(W * 4096)
+        ids = np.arange(W, dtype=np.int64)
+        lo = np.maximum(ids * 4096 - 512, 0)
+        hi = np.minimum(ids * 4096 + 4608, W * 4096)
+        t0 = time.perf_counter()
+        for _ in range(N_PHASES):
+            rt.phase_all(writes=[(ga, lo, hi)])
+            rt.barrier()
+        wall = time.perf_counter() - t0
+        # ONE fused device program per protocol phase — exactly, not
+        # approximately: extra dispatches would mean the chain split,
+        # zero that it silently fell back to numpy
+        assert rt.stats["jit_dispatches"] == N_PHASES, (W, rt.stats)
+        rows.append({"figure": "fig12_kernels",
+                     "series": "phase_all_pallas-jit", "p": W,
+                     "driver": "batched", "window": W * 4096 // 1024,
+                     "t_wall_s": round(wall, 7),
+                     "t_model_s": round(rt.time, 6), **jit_fields(rt)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8,
+                    help="accepted for harness uniformity; timed reps are "
+                         "pinned so the gated dispatch counters never "
+                         "depend on the invocation")
+    args = ap.parse_args(argv)
+    del args
+    rows = micro_rows() + protocol_rows()
+    write_csv("kernels", rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

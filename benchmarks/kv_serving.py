@@ -96,6 +96,21 @@ def serving(iters: int, driver: str, cores=CORES):
                     err_msg=f"pallas clock drift {series} W={p}")
                 np.testing.assert_array_equal(rep2.latencies(),
                                               rep.latencies())
+                # jit twin on the same live sample: the fused flush
+                # chain must reproduce traffic/clocks/latencies exactly
+                # AND actually dispatch — jit_dispatches == 0 would mean
+                # the compiled tier silently degraded to numpy
+                rt3, rep3, _ = serve_point(series, p, driver,
+                                           backend="pallas-jit")
+                assert traffic_fields(rt3) == traffic_fields(rt), \
+                    (series, p, driver, "pallas-jit traffic drift")
+                np.testing.assert_array_equal(
+                    rt3.clock, rt.clock,
+                    err_msg=f"pallas-jit clock drift {series} W={p}")
+                np.testing.assert_array_equal(rep3.latencies(),
+                                              rep.latencies())
+                assert rt3.stats["jit_dispatches"] > 0, \
+                    (series, p, driver, "jit twin never dispatched")
             lat = rep.latencies()
             rows.append({
                 "figure": "fig8_kv_serving", "series": series, "p": p,

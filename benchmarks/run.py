@@ -51,9 +51,10 @@ def main(argv=None):
         return args.sections is None or any(
             s in name or any(s in t for t in tags) for s in args.sections)
 
-    from benchmarks import (availability, common, jacobi, kv_serving,
-                            lock_contention, molecular_dynamics, races,
-                            recovery, regc_training, roofline, stream_triad)
+    from benchmarks import (availability, common, jacobi, kernels,
+                            kv_serving, lock_contention,
+                            molecular_dynamics, races, recovery,
+                            regc_training, roofline, stream_triad)
 
     sections = []
     for d in drivers:
@@ -118,6 +119,13 @@ def main(argv=None):
                  ["--iters", str(iters)] + drv)),
         ]
     sections += [
+        # protocol-kernel tiers head-to-head (fig12) + the one-dispatch-
+        # per-phase protocol point; driver-independent, so it runs once.
+        # A focused run regenerates the exact committed point set — the
+        # CI kernels job redirects its CSV with BENCH_OUT (see bench_lock)
+        ("Protocol kernels (numpy / pallas / pallas-jit tiers)",
+         "kernels", False, ("kernels",),
+         lambda: kernels.main(["--iters", str(iters)])),
         # jax-compile-bound (subprocess trainer), not a protocol section
         ("RegC training-layer sync policies (DESIGN.md 2.2)",
          "regc_training", True, (), lambda: regc_training.main([])),

@@ -27,7 +27,11 @@ FINE_PROTO = "fine"    # samhita: fine-grain diffs for consistency regions
 IDEAL_PROTO = "ideal"  # cache-coherent shared memory (Pthreads baseline)
 
 PROTOCOLS = (FINE_PROTO, PAGE_PROTO, IDEAL_PROTO)
-BACKENDS = ("numpy", "pallas")      # plane-reduction backend (scale engine)
+# plane-reduction backend (scale engine): boolean-plane numpy reductions,
+# per-op Pallas kernels (interpret mode off-TPU), or the fused jitted
+# kernel chain over device-resident packed planes (see DIRECTORY.md
+# "Compiled-phase contract")
+BACKENDS = ("numpy", "pallas", "pallas-jit")
 DANGER_MODES = ("vec", "scalar")    # mid-op refetch replay path (scale)
 DRIVERS = ("auto", "batched", "loop")   # SPMD phase/span drivers (Session)
 ENGINES = ("scale", "reference")        # make_runtime targets

@@ -74,7 +74,7 @@ class RegionDirectory:
                  "shift", "maybe_dirty", "_cov_stale", "_sorted_bases",
                  "_sorted_ends", "backend", "dirty_lo", "dirty_hi",
                  "span_lo", "span_hi", "race_w", "race_r",
-                 "race_maxw", "race_maxr")
+                 "race_maxw", "race_maxr", "jit_stats", "_jit_geom")
 
     def __init__(self, n_workers: int, region: int, page_lo: int,
                  page_hi: int, *, track_wprot: bool = False,
@@ -134,10 +134,19 @@ class RegionDirectory:
         self._cov_stale = True
         self._sorted_bases: Optional[np.ndarray] = None
         self._sorted_ends: Optional[np.ndarray] = None
-        # 'numpy' | 'pallas': execution backend for the whole-plane
-        # reductions (barrier-flush popcount, shared-interval sweep).  Both
-        # are integer-exact, so traffic is backend-independent.
+        # 'numpy' | 'pallas' | 'pallas-jit': execution backend for the
+        # whole-plane reductions (barrier-flush popcount, shared-interval
+        # sweep, eviction rank-select).  All tiers are integer-exact, so
+        # traffic is backend-independent; 'pallas-jit' additionally fuses
+        # the flush reductions into one device dispatch per phase (see
+        # DIRECTORY.md "Compiled-phase contract").
         self.backend = backend
+        # jit-tier state: the runtime's stats dict (jit_dispatches /
+        # jit_cache_misses accounting, attached by ``alloc``) and the
+        # cached int32 window-geometry operands of the fused flush chain
+        # (rebuilt only when a window changes — _refresh_bounds drops it)
+        self.jit_stats: Optional[dict] = None
+        self._jit_geom = None
 
     # ------------------------------------------------------------------
     # window management
@@ -475,11 +484,12 @@ class RegionDirectory:
         k = np.asarray(k)
         if tot is not None and bool((tot == live.shape[1]).all()):
             return np.arange(live.shape[1]) < k[:, None]
-        if self.backend == "pallas":
+        if self.backend != "numpy":
             from repro.kernels import protocol_sweep as _ps
             bits = _ps.take_first_k(_ps.pack_mask_rows(live),
                                     np.asarray(k, np.int64),
-                                    backend=self.backend)
+                                    backend=self.backend,
+                                    stats=self.jit_stats)
             return _ps.unpack_mask_rows(bits, live.shape[1])
         return live & (np.cumsum(live, axis=1, dtype=np.int32)
                        <= k[:, None])
@@ -495,8 +505,15 @@ class RegionDirectory:
         ``take_first_k`` rank-select kernel computes it (the cut falls
         out of the take mask itself); integer-exact either way.  The
         standalone ``kth_set_index`` rank-query kernel answers the cut
-        without unpacking — what a multi-row plane-op schedule would use
-        (ROADMAP rung); the one-row scan here has the mask in hand."""
+        without unpacking; on 'pallas-jit' the fused ``take_and_cut``
+        program computes mask AND cut in ONE device dispatch."""
+        if self.backend == "pallas-jit":
+            from repro.kernels import protocol_sweep as _ps
+            bits, cut = _ps.take_and_cut(_ps.pack_mask_rows(live[None]),
+                                         np.asarray([k], np.int64),
+                                         backend=self.backend,
+                                         stats=self.jit_stats)
+            return _ps.unpack_mask_rows(bits, live.size)[0], int(cut[0]) + 1
         if self.backend == "pallas":
             from repro.kernels import protocol_sweep as _ps
             take = _ps.unpack_mask_rows(
@@ -524,10 +541,11 @@ class RegionDirectory:
         s = slice(start, start + length)
         rb = self.row_block(rows)
         dm = self.dirty[rb, s] if take is None else self.dirty[rb, s] & take
-        if self.backend == "pallas":
+        if self.backend != "numpy":
             from repro.kernels import protocol_sweep as _ps
             db = _ps.popcount_rows(_ps.pack_mask_rows(dm),
-                                   backend=self.backend)
+                                   backend=self.backend,
+                                   stats=self.jit_stats)
         else:
             db = dm.sum(axis=1, dtype=np.int64)
         if take is None:
@@ -578,7 +596,22 @@ class RegionDirectory:
             live = self.base >= 0
             self._sorted_bases = np.sort(self.base[live])
             self._sorted_ends = np.sort((self.base + self.length)[live])
+            self._jit_geom = None          # window geometry changed
             self._cov_stale = False
+
+    def jit_geometry(self):
+        """(base, sorted_bases, sorted_ends) as int32 — the fused flush
+        chain's window-geometry operands (``kernels.phase_step``), cached
+        until a window changes (``_cov_stale`` drops it).  The packed
+        dirty planes are rebuilt per flush (their contents changed) but
+        geometry survives phases — the steady state re-packs one plane
+        and reuses everything else."""
+        self._refresh_bounds()
+        if self._jit_geom is None:
+            self._jit_geom = (self.base.astype(np.int32),
+                              self._sorted_bases.astype(np.int32),
+                              self._sorted_ends.astype(np.int32))
+        return self._jit_geom
 
     def shared_intervals(self) -> Tuple[np.ndarray, np.ndarray]:
         """Absolute page intervals covered by >= 2 worker windows, as
@@ -596,9 +629,10 @@ class RegionDirectory:
                                 np.full(e.size, -1, np.int64)])
         order = np.argsort(pts, kind="stable")
         pts = pts[order]
-        if self.backend == "pallas":
+        if self.backend != "numpy":
             from repro.kernels import protocol_sweep as _ps
-            multi = _ps.coverage_multi(delta[order], backend=self.backend)
+            multi = _ps.coverage_multi(delta[order], backend=self.backend,
+                                       stats=self.jit_stats)
         else:
             multi = np.cumsum(delta[order]) >= 2
         edge = np.diff(np.concatenate([[False], multi]).astype(np.int8))
@@ -615,11 +649,14 @@ class RegionDirectory:
         On the 'pallas' backend the boolean plane is packed into uint32
         bitmasks and popcounted by the protocol-sweep kernel; cells outside
         a row's live window are always False, so whole-plane reduction is
-        exact on both backends."""
-        if self.backend == "pallas":
+        exact on every backend.  (On 'pallas-jit' the barrier flush
+        bypasses this per-region call for the fused ``phase_step`` chain;
+        this path serves direct callers.)"""
+        if self.backend != "numpy":
             from repro.kernels import protocol_sweep as _ps
             return _ps.popcount_rows(_ps.pack_mask_rows(self.dirty),
-                                     backend=self.backend)
+                                     backend=self.backend,
+                                     stats=self.jit_stats)
         return self.dirty.sum(axis=1)
 
     def row_dirty_cols(self, w: int) -> np.ndarray:

@@ -119,9 +119,12 @@ class RegCScaleRuntime:
         # traffic-exact; only wall time differs.
         check_choice("danger_mode", danger_mode, DANGER_MODES)
         self.danger_mode = danger_mode
-        # 'numpy' | 'pallas': backend for the whole-plane directory
-        # reductions (kernels.protocol_sweep).  Integer-exact either way;
-        # degrades to numpy with a warning when jax is unavailable.
+        # 'numpy' | 'pallas' | 'pallas-jit': backend for the whole-plane
+        # directory reductions (kernels.protocol_sweep).  Integer-exact
+        # on every tier; 'pallas-jit' compiles the barrier-flush hot path
+        # into ONE fused device dispatch per phase (see DIRECTORY.md
+        # "Compiled-phase contract").  Degrades to numpy with a warning
+        # when jax is unavailable (or REPRO_FORCE_NUMPY=1).
         from repro.kernels.protocol_sweep import resolve_backend
         self.backend = resolve_backend(backend)
         self.W = n_workers
@@ -184,7 +187,13 @@ class RegCScaleRuntime:
                       "span_multi_region_groups": 0,
                       "span_serial_workers": 0,
                       "span_backlog_serial": 0,
-                      "race_ww": 0, "race_rw": 0}
+                      "race_ww": 0, "race_rw": 0,
+                      # 'pallas-jit' accounting: fused/jitted device
+                      # dispatches and first-seen-shape compiles.  CI's
+                      # kernels smoke gates jit_dispatches > 0 on jit
+                      # bench legs — a silent fallback to numpy keeps
+                      # traffic identical but zeroes the counter.
+                      "jit_dispatches": 0, "jit_cache_misses": 0}
         # race-detection mode (pure observer; see DIRECTORY.md
         # "Race-detection contract"): per-worker vector clocks, the
         # canonical flagged-race set, and a suspension flag the batched
@@ -236,10 +245,12 @@ class RegCScaleRuntime:
         self._region_starts.append(self.n_pages)
         self._region_ends.append(self.n_pages + pages)
         self._region_starts_np = np.asarray(self._region_starts, np.int64)
-        self.dirs.append(RegionDirectory(
+        d = RegionDirectory(
             self.W, len(self.dirs), self.n_pages, self.n_pages + pages,
             track_wprot=self._track_wprot, track_touch=self._track_touch,
-            backend=self.backend))
+            backend=self.backend)
+        d.jit_stats = self.stats
+        self.dirs.append(d)
         self.n_pages += pages
         return ga
 
@@ -1188,10 +1199,30 @@ class RegCScaleRuntime:
         clocks bit-equal to the per-worker span loop.
         """
         mrows = None if mask is None else np.nonzero(mask)[0]
+        # 'pallas-jit': run the whole flush chain — per-row popcount,
+        # shared-interval coverage stab, sharer-candidate mask — for ALL
+        # dirty regions as ONE fused device dispatch, then consume its
+        # outputs region by region below.  Charging, wprot re-arm and the
+        # analytic invalidation stay host-side (they are cheap and carry
+        # the exactness contract), so traffic/clocks are bit-equal to the
+        # unfused path by construction.  IDEAL skips sharer work entirely
+        # and keeps the short-circuit path.
+        jit_counts = jit_shared = None
+        ji = 0
+        if self.backend == "pallas-jit" and self.protocol != IDEAL_PROTO:
+            cand = [d for d in self.dirs if d.maybe_dirty and d.cap > 0]
+            if cand:
+                jit_counts, jit_shared = self._jit_flush_chain(cand, mask)
         for d in self.dirs:
             if not d.maybe_dirty:
                 continue
-            nD_w = d.dirty_counts()        # bitmask popcount on 'pallas'
+            if jit_counts is not None and d.cap > 0:
+                nD_w = jit_counts[ji]      # fused chain output
+                sub_bits = jit_shared[ji]
+                ji += 1
+            else:
+                nD_w = d.dirty_counts()    # bitmask popcount on 'pallas'
+                sub_bits = None
             if mask is not None:
                 rest = int(nD_w[~mask].sum())
                 nD_w = np.where(mask, nD_w, 0)
@@ -1224,27 +1255,40 @@ class RegCScaleRuntime:
             # sharer invalidation: only pages under >= 2 worker windows can
             # have sharers, so per-cell work is confined to the (small)
             # halo/global intervals instead of every dirty page
-            starts, ends = d.shared_intervals()
-            if starts.size:
-                w_list, col_list = [], []
-                for w in active:
-                    b = int(d.base[w])
-                    e = b + int(d.length[w])
-                    i0 = int(np.searchsorted(ends, b, "right"))
-                    i1 = int(np.searchsorted(starts, e, "left"))
-                    for i in range(i0, i1):
-                        lo = max(int(starts[i]), b)
-                        hi = min(int(ends[i]), e)
-                        if lo >= hi:
-                            continue
-                        c = np.nonzero(d.dirty[w, lo - b:hi - b])[0]
-                        if c.size:
-                            col_list.append(c + (lo - b))
-                            w_list.append(np.full(c.size, w, np.int64))
-                if col_list:
-                    w_idx = np.concatenate(w_list)   # ascending worker ==
-                    cols = np.concatenate(col_list)  # sequential flush order
-                    self._invalidate_shared_dirty(d, w_idx, cols)
+            if sub_bits is not None:
+                # fused chain already intersected dirty & multi-coverage &
+                # active-row on device; row-major nonzero over the active
+                # rows reproduces the sequential worker-major /
+                # column-ascending flush order exactly
+                from repro.kernels.protocol_sweep import unpack_mask_rows
+                sub = unpack_mask_rows(sub_bits[active], int(d.cap))
+                ai, cols = np.nonzero(sub)
+                if ai.size:
+                    self._invalidate_shared_dirty(
+                        d, active[ai].astype(np.int64),
+                        cols.astype(np.int64))
+            else:
+                starts, ends = d.shared_intervals()
+                if starts.size:
+                    w_list, col_list = [], []
+                    for w in active:
+                        b = int(d.base[w])
+                        e = b + int(d.length[w])
+                        i0 = int(np.searchsorted(ends, b, "right"))
+                        i1 = int(np.searchsorted(starts, e, "left"))
+                        for i in range(i0, i1):
+                            lo = max(int(starts[i]), b)
+                            hi = min(int(ends[i]), e)
+                            if lo >= hi:
+                                continue
+                            c = np.nonzero(d.dirty[w, lo - b:hi - b])[0]
+                            if c.size:
+                                col_list.append(c + (lo - b))
+                                w_list.append(np.full(c.size, w, np.int64))
+                    if col_list:
+                        w_idx = np.concatenate(w_list)  # ascending worker
+                        cols = np.concatenate(col_list)  # == seq. order
+                        self._invalidate_shared_dirty(d, w_idx, cols)
             if mask is None:
                 d.dirty[:] = False
             else:
@@ -1255,6 +1299,41 @@ class RegCScaleRuntime:
         else:
             for w in mrows:
                 self._dirty_regions[w].clear()
+
+    def _jit_flush_chain(self, cand, mask: Optional[np.ndarray]):
+        """Stack every dirty region's packed dirty plane + cached int32
+        window geometry into one (R, W, nw) batch and run the fused
+        barrier-flush chain (``kernels.phase_step``) as a single jitted
+        device dispatch.  Returns ``(counts, shared)`` — per-region
+        per-row UNMASKED dirty counts (the caller applies ``mask`` for
+        the ``rest`` bookkeeping, exactly as the unfused path) and packed
+        shared-dirty candidate masks (dirty & >=2-coverage & active row).
+        Returns ``(None, None)`` when page ids could overflow the int32
+        device arithmetic — the caller falls back to the unfused sweep."""
+        from repro.kernels import protocol_sweep as _ps
+        R, W = len(cand), self.W
+        nw_max = max(-(-int(d.cap) // 32) for d in cand)
+        # page = base + col with col < nw_max*32; bound it in int32 (pads
+        # are INT32_MAX and must stay strictly above every probed page)
+        if max(int(d.page_hi) for d in cand) + nw_max * 32 >= (1 << 31) - 1:
+            return None, None
+        i32max = np.iinfo(np.int32).max
+        bits = np.zeros((R, W, nw_max), np.uint32)
+        base32 = np.empty((R, W), np.int32)
+        sbs = np.full((R, W), i32max, np.int32)
+        ses = np.full((R, W), i32max, np.int32)
+        for i, d in enumerate(cand):
+            pk = _ps.pack_mask_rows(d.dirty)
+            bits[i, :, :pk.shape[1]] = pk
+            b32, sb, se = d.jit_geometry()
+            base32[i] = b32
+            sbs[i, :sb.size] = sb
+            ses[i, :se.size] = se
+        rowmask = (np.ones((R, W), bool) if mask is None
+                   else np.broadcast_to(mask, (R, W)))
+        counts, shared = _ps.phase_step(bits, base32, rowmask, sbs, ses,
+                                        stats=self.stats)
+        return counts, shared
 
     def _invalidate_shared_dirty(self, d: RegionDirectory,
                                  w_idx: np.ndarray, cols: np.ndarray):
@@ -2902,7 +2981,9 @@ class RegCScaleRuntime:
             pre = f"d{r:05d}_"
             darr = {k[len(pre):]: v for k, v in arrays.items()
                     if k.startswith(pre)}
-            rt.dirs.append(RegionDirectory.from_state(darr, dmeta))
+            d = RegionDirectory.from_state(darr, dmeta)
+            d.jit_stats = rt.stats
+            rt.dirs.append(d)
         rt.locks = {}
         for j, lm in enumerate(meta["locks"]):
             pre = f"lk{j:05d}_"

@@ -1,3 +1,18 @@
+"""One import surface for every kernel (the lite_llama idiom): protocol
+plane-sweep kernels, fused jit chains, and the model-layer Pallas ops all
+resolve from ``repro.kernels`` directly.  Backend availability is probed
+once (``available_backends`` — honors ``REPRO_FORCE_NUMPY=1``); the
+protocol kernels degrade to their numpy tiers when jax is absent, while
+the model-layer ops (which have no numpy twin) surface as ``None``.
+"""
+from repro.kernels.protocol_sweep import (HAVE_PALLAS,  # noqa: F401
+                                          available_backends,
+                                          coverage_multi, kth_set_index,
+                                          pack_mask_rows, phase_step,
+                                          popcount_rows, resolve_backend,
+                                          take_and_cut, take_first_k,
+                                          unpack_mask_rows)
+
 try:
     from repro.kernels.ops import (diff_apply, diff_encode, flash_attention,
                                    ssd_chunk)
@@ -14,3 +29,9 @@ except ImportError:
         diff_apply = diff_encode = flash_attention = ssd_chunk = None
     else:
         raise
+
+__all__ = ["HAVE_PALLAS", "available_backends", "resolve_backend",
+           "pack_mask_rows", "unpack_mask_rows", "popcount_rows",
+           "coverage_multi", "take_first_k", "kth_set_index",
+           "take_and_cut", "phase_step",
+           "diff_apply", "diff_encode", "flash_attention", "ssd_chunk"]

@@ -163,7 +163,7 @@ def test_core_public_exports():
     for name in core.__all__:
         assert getattr(core, name) is not None, name
     assert set(PROTOCOLS) == {"fine", "page", "ideal"}
-    assert BACKENDS == ("numpy", "pallas")
+    assert BACKENDS == ("numpy", "pallas", "pallas-jit")
     assert DANGER_MODES == ("vec", "scalar")
     assert DRIVERS == ("auto", "batched", "loop")
     assert ENGINES == ("scale", "reference")

@@ -53,6 +53,17 @@ def test_chaos_fuzz_backends_agree():
         trace_fuzz.chaos_crosscheck(seed, backends=("numpy", "pallas"))
 
 
+def test_chaos_fuzz_jit_lockstep():
+    """The fused flush chain ('pallas-jit') under chaos + checkpoint
+    replay: crash recovery must land on the identical traffic/clocks as
+    the uninjected jit baseline (jit_* dispatch counters sit outside the
+    exactness bar — replay topology differs).  Sampled seeds by default;
+    FUZZ_JIT=1 runs the full chaos corpus."""
+    pytest.importorskip("jax")
+    for seed in trace_fuzz.jit_seeds(N_CHAOS_TRACES, (0, 1, 4, 7)):
+        trace_fuzz.chaos_crosscheck(seed, backends=("pallas-jit",))
+
+
 def test_chaosnet_deterministic_and_seed_sensitive():
     stats_a, stats_b, stats_c = {}, {}, {}
     a = ChaosNet(seed=7, drop_rate=0.3)

@@ -70,6 +70,17 @@ def test_cluster_fuzz_backends_agree():
         trace_fuzz.cluster_crosscheck(seed, backends=("numpy", "pallas"))
 
 
+def test_cluster_fuzz_jit_lockstep():
+    """The sharded multi-process runtime on 'pallas-jit': per-round
+    digests lockstep with the single-process jit baseline, and fault
+    recovery lands bit-equal (jit dispatch topology differs per shard —
+    excluded from the exactness bar).  FUZZ_JIT=1 runs the full
+    corpus."""
+    pytest.importorskip("jax")
+    for seed in trace_fuzz.jit_seeds(N_CLUSTER_TRACES, (2, 5)):
+        trace_fuzz.cluster_crosscheck(seed, backends=("pallas-jit",))
+
+
 # ---------------------------------------------------------------------------
 # deterministic fault scenarios
 # ---------------------------------------------------------------------------

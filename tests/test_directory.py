@@ -234,12 +234,127 @@ def test_kth_set_index_pallas_matches_numpy():
         ps.kth_set_index(bits, k, backend="numpy"))
 
 
-@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_jit_kernels_match_numpy_oracles():
+    """Every jitted kernel tier vs its numpy oracle, with the dispatch
+    accounting live: popcount, rank-select, rank-query, coverage, and
+    the fused ``take_and_cut`` (one dispatch for what the unfused path
+    does in two)."""
+    pytest.importorskip("jax")
+    from repro.kernels import protocol_sweep as ps
+    rng = np.random.default_rng(37)
+    live = rng.random((29, 451)) < 0.45
+    k = rng.integers(0, 300, 29).astype(np.int64)
+    bits = ps.pack_mask_rows(live)
+    st = {}
+    np.testing.assert_array_equal(
+        ps.popcount_rows(bits, backend="pallas-jit", stats=st),
+        ps.popcount_rows(bits))
+    np.testing.assert_array_equal(
+        ps.take_first_k(bits, k, backend="pallas-jit", stats=st),
+        ps.take_first_k(bits, k))
+    np.testing.assert_array_equal(
+        ps.kth_set_index(bits, k, backend="pallas-jit", stats=st),
+        ps.kth_set_index(bits, k))
+    delta = rng.choice(np.array([1, -1], np.int64), 513)
+    np.testing.assert_array_equal(
+        ps.coverage_multi(delta, backend="pallas-jit", stats=st),
+        np.cumsum(delta) >= 2)
+    take_j, cut_j = ps.take_and_cut(bits, k, backend="pallas-jit",
+                                    stats=st)
+    np.testing.assert_array_equal(take_j, ps.take_first_k(bits, k))
+    np.testing.assert_array_equal(cut_j, ps.kth_set_index(bits, k))
+    # five jit entries above -> five device dispatches, no silent
+    # numpy fallback
+    assert st["jit_dispatches"] == 5, st
+
+
+def test_phase_step_jit_matches_numpy_oracle():
+    """The fused barrier-flush chain vs its numpy oracle on randomized
+    multi-region stacks: per-row dirty counts AND the packed
+    shared-dirty candidate masks (dirty & >=2-coverage & active row),
+    including inactive rows (base=-1), masked rows, and INT32_MAX
+    geometry padding."""
+    pytest.importorskip("jax")
+    from repro.kernels import protocol_sweep as ps
+    rng = np.random.default_rng(41)
+    i32max = np.iinfo(np.int32).max
+    for trial in range(4):
+        R, W, C = 3, 7, int(rng.integers(40, 200))
+        nw = -(-C // 32)
+        bits = np.zeros((R, W, nw), np.uint32)
+        base = np.full((R, W), -1, np.int32)
+        sbs = np.full((R, W), i32max, np.int32)
+        ses = np.full((R, W), i32max, np.int32)
+        for r in range(R):
+            nlive = int(rng.integers(2, W + 1))
+            rows = rng.choice(W, nlive, replace=False)
+            b = np.sort(rng.integers(0, 5000, nlive)).astype(np.int32)
+            ln = rng.integers(1, C + 1, nlive).astype(np.int32)
+            base[r, rows] = b
+            sbs[r, :nlive] = np.sort(b)
+            ses[r, :nlive] = np.sort(b + ln)
+            for i, w in enumerate(rows):
+                plane = np.zeros(C, bool)
+                plane[:ln[i]] = rng.random(int(ln[i])) < 0.4
+                bits[r, w] = ps.pack_mask_rows(plane[None])[0]
+        rowmask = rng.random((R, W)) < 0.8
+        st = {}
+        counts, shared = ps.phase_step(bits, base, rowmask, sbs, ses,
+                                       stats=st)
+        counts_np, shared_np = ps._phase_step_np(bits, base, rowmask,
+                                                 sbs, ses)
+        np.testing.assert_array_equal(counts, counts_np, err_msg=str(trial))
+        np.testing.assert_array_equal(shared, shared_np, err_msg=str(trial))
+        assert st["jit_dispatches"] == 1, st
+
+
+def test_force_numpy_env_override_wins():
+    """``REPRO_FORCE_NUMPY=1`` pins every backend request to the numpy
+    tier through the cached one-shot probe: ``available_backends``
+    collapses, ``resolve_backend`` degrades both accelerated tiers, and
+    a 'pallas-jit' runtime runs the whole trace without a single device
+    dispatch — while staying traffic/clock exact."""
+    from repro.kernels import protocol_sweep as ps
+    import os
+    old = os.environ.get(ps._FORCE_ENV)
+    os.environ[ps._FORCE_ENV] = "1"
+    ps._reset_backend_probe()
+    try:
+        assert ps.available_backends() == ("numpy",)
+        assert ps.resolve_backend("pallas-jit") == "numpy"
+        assert ps.resolve_backend("pallas") == "numpy"
+        rts = {}
+        for backend in ("numpy", "pallas-jit"):
+            rt = RegCScaleRuntime(4, page_words=32, protocol=PAGE_PROTO,
+                                  prefetch=1, cache_pages=6,
+                                  backend=backend)
+            ga = rt.alloc(32 * 40)
+            ids = np.arange(4, dtype=np.int64)
+            for _ in range(3):
+                rt.phase_all(writes=[(ga, ids * 320, ids * 320 + 340)])
+                rt.barrier()
+            rts[backend] = rt
+        for f in dataclasses.fields(Traffic):
+            assert (getattr(rts["numpy"].traffic, f.name)
+                    == getattr(rts["pallas-jit"].traffic, f.name)), f.name
+        np.testing.assert_array_equal(rts["numpy"].clock,
+                                      rts["pallas-jit"].clock)
+        assert rts["pallas-jit"].stats["jit_dispatches"] == 0
+    finally:
+        if old is None:
+            os.environ.pop(ps._FORCE_ENV, None)
+        else:
+            os.environ[ps._FORCE_ENV] = old
+        ps._reset_backend_probe()
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas", "pallas-jit"])
 def test_take_upto_row_rank_select(backend):
     """The replay engine's one-run victim scan: first k live cells plus
-    the scan cut, packed kernels on 'pallas' vs the cumsum path — both
-    must agree with the boolean oracle (caller guarantees count > k)."""
-    if backend == "pallas":
+    the scan cut, packed kernels on 'pallas' (and the fused one-dispatch
+    ``take_and_cut`` on 'pallas-jit') vs the cumsum path — all must
+    agree with the boolean oracle (caller guarantees count > k)."""
+    if backend != "numpy":
         pytest.importorskip("jax")
     from repro.core.directory import RegionDirectory
     d = RegionDirectory(1, 0, 0, 64, backend=backend)
@@ -259,13 +374,13 @@ def test_take_upto_row_rank_select(backend):
         assert cut == idx[k - 1] + 1, (backend, C, k)
 
 
-@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+@pytest.mark.parametrize("backend", ["numpy", "pallas", "pallas-jit"])
 def test_evict_rows_matches_per_cell_oracle(backend):
     """The batched eviction primitive (dirty counts, wprot re-arm,
     valid/incache clears at the take cells — and only there) against a
-    straight per-cell simulation, packed-vs-boolean parity on both
-    backends, including the take=None whole-span fast path."""
-    if backend == "pallas":
+    straight per-cell simulation, packed-vs-boolean parity on every
+    backend, including the take=None whole-span fast path."""
+    if backend != "numpy":
         pytest.importorskip("jax")
     rng = np.random.default_rng(23)
     for trial in range(4):
@@ -329,12 +444,11 @@ def test_run_live_and_lru_take_segment_semantics():
 
 
 def test_directory_backends_agree():
-    """dirty_counts + shared_intervals identical on both backends (the
+    """dirty_counts + shared_intervals identical on every backend (the
     packed-bitmask kernels are integer-exact reformulations)."""
     pytest.importorskip("jax")
-    rng = np.random.default_rng(3)
     dirs = {}
-    for backend in ("numpy", "pallas"):
+    for backend in ("numpy", "pallas", "pallas-jit"):
         d = RegionDirectory(6, 0, 0, 4000, backend=backend)
         rng2 = np.random.default_rng(3)
         for w in range(6):
@@ -343,12 +457,14 @@ def test_directory_backends_agree():
             n = int(d.length[w])
             d.dirty[w, :n] = rng2.random(n) < 0.2
         dirs[backend] = d
-    np.testing.assert_array_equal(dirs["numpy"].dirty_counts(),
-                                  dirs["pallas"].dirty_counts())
-    s_np, e_np = dirs["numpy"].shared_intervals()
-    s_pl, e_pl = dirs["pallas"].shared_intervals()
-    np.testing.assert_array_equal(s_np, s_pl)
-    np.testing.assert_array_equal(e_np, e_pl)
+    for backend in ("pallas", "pallas-jit"):
+        np.testing.assert_array_equal(dirs["numpy"].dirty_counts(),
+                                      dirs[backend].dirty_counts(),
+                                      err_msg=backend)
+        s_np, e_np = dirs["numpy"].shared_intervals()
+        s_pl, e_pl = dirs[backend].shared_intervals()
+        np.testing.assert_array_equal(s_np, s_pl, err_msg=backend)
+        np.testing.assert_array_equal(e_np, e_pl, err_msg=backend)
 
 
 def test_runtime_backend_pallas_matches_numpy_trace():

@@ -61,6 +61,17 @@ def test_fuzz_serving_traces_cross_runtime():
     assert agg["span_all_calls"] > N_SERVING_TRACES // 2, agg
 
 
+def test_fuzz_serving_jit_lockstep():
+    """Serving family on 'pallas-jit': the fused flush chain under
+    masked admission spans + slot-scale eviction pressure, reference vs
+    loop vs batched in LOCKSTEP.  Sampled seeds by default; FUZZ_JIT=1
+    runs the full serving corpus."""
+    pytest.importorskip("jax")
+    for seed in trace_fuzz.jit_seeds(N_SERVING_TRACES, (0, 3, 9)):
+        trace_fuzz.crosscheck(seed, family="serving",
+                              backends=("pallas-jit",))
+
+
 def test_kv_serving_app_drivers_bit_equal():
     """The serving app across drivers: traffic field-for-field, clocks
     bit-equal, and the whole ServeReport — request latencies included —

@@ -44,6 +44,16 @@ def test_fuzz_race_traces_backends_agree():
         trace_fuzz.race_crosscheck(seed, backends=("numpy", "pallas"))
 
 
+def test_fuzz_race_jit_lockstep():
+    """Race detection over the fused flush chain ('pallas-jit'): the
+    detector reads the same planes the jit-backed protocol writes, so
+    race sets, traffic and clocks must stay in the same lockstep.
+    Sampled seeds by default; FUZZ_JIT=1 runs the full race corpus."""
+    pytest.importorskip("jax")
+    for seed in trace_fuzz.jit_seeds(N_RACE_TRACES, (1, 4, 8, 13)):
+        trace_fuzz.race_crosscheck(seed, backends=("pallas-jit",))
+
+
 N_RACE_CHAOS_TRACES = 24
 
 

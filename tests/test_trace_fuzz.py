@@ -232,6 +232,28 @@ def test_fuzz_traces_backends_agree():
                                       runs["pallas"].clock)
 
 
+def test_fuzz_traces_jit_lockstep():
+    """'pallas-jit' (the fused flush chain + jitted rank-select) in full
+    LOCKSTEP on the core trace families: loop vs batched clocks
+    bit-equal after every event, traffic field-for-field vs the
+    per-page reference oracle.  Sampled seeds per family by default;
+    ``FUZZ_JIT=1`` runs each family's full corpus.  The aggregate
+    dispatch counter proves the fused device program actually ran —
+    zero dispatches would mean a silent numpy fallback."""
+    pytest.importorskip("jax")
+    agg = {}
+    fams = (("mixed", N_TRACES, (1, 3, 6, 11)),
+            ("danger", N_DANGER_TRACES, (0, 2, 7, 13)),
+            ("span", N_SPAN_TRACES, (1, 4, 9, 17)))
+    for fam, n, sample in fams:
+        for seed in trace_fuzz.jit_seeds(n, sample):
+            stats = trace_fuzz.crosscheck(seed, family=fam,
+                                          backends=("pallas-jit",))
+            for k, v in stats.items():
+                agg[k] = agg.get(k, 0) + v
+    assert agg["jit_dispatches"] > 0, agg
+
+
 def test_fuzz_spill_app_drivers_bit_equal():
     """The spill-heavy app variant (rotating blocks — residual replay
     territory) stays bit-exact across drivers at several scales."""

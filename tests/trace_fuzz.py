@@ -24,6 +24,7 @@ counters so the test suite can assert none of them silently idles.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -35,6 +36,17 @@ from repro.dsm.session import session
 
 PROTOS = [FINE_PROTO, PAGE_PROTO, IDEAL_PROTO]
 STYLES = ["blocks", "halo", "shared", "skewed", "shrink", "rotate"]
+
+
+def jit_seeds(n: int, sample) -> Tuple[int, ...]:
+    """Seeds to run in 'pallas-jit' lockstep for an n-trace family: the
+    committed per-family sample by default (the jit tier re-traces + jit
+    compiles, so full corpora are minutes, not seconds), the family's
+    FULL corpus under ``FUZZ_JIT=1`` — the long-form exactness gate the
+    fused flush chain must pass before a backend change ships."""
+    if os.environ.get("FUZZ_JIT") == "1":
+        return tuple(range(n))
+    return tuple(s for s in sample if s < n)
 
 
 def _intervals(rng, style: str, W: int, n_words: int, page_words: int,
